@@ -1,0 +1,82 @@
+"""Paper Table 7 / §5.2(3): per-step retrieval+attention cost vs context.
+
+Wall-times (CPU, XLA-jitted) of the per-head decode-step selection path:
+  full attention  — score all n keys in full precision
+  pariskv         — collision (metadata scan) + rerank (βn) + top-k fetch
+  pqcache         — ADC over PQ codes (same candidate budget)
+  magicpig        — LSH signature match + sampled attention
+
+The absolute numbers are CPU-only; the *scaling* with n and the relative
+ordering reproduce the paper's Table 7 structure. Derived column reports
+bytes touched per step (the memory-roofline driver on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import attention_keys, csv_row, query_like, time_fn
+from repro.baselines import magicpig, pqcache
+from repro.core import (ParisKVConfig, encode_keys, encode_query, retrieve,
+                        srht)
+
+D = 128
+CFG = ParisKVConfig()
+
+
+def run() -> list:
+    rows = []
+    signs = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D),
+                                              CFG.srht_seed))
+    for n in (16_384, 65_536, 262_144):
+        keys = attention_keys(n, D, seed=n % 97)
+        vals = attention_keys(n, D, seed=(n % 97) + 1)
+        q = query_like(keys, seed=2)
+        valid = jnp.ones((n,), bool)
+        meta = encode_keys(keys, CFG, signs)
+        C = CFG.candidate_count(n)
+
+        @jax.jit
+        def full_step(keys, vals, q):
+            s = keys @ q / jnp.sqrt(D)
+            p = jax.nn.softmax(s)
+            return p @ vals
+
+        @jax.jit
+        def pariskv_step(meta, keys, vals, q):
+            qt = encode_query(q, CFG, signs)
+            res = retrieve(meta, qt, valid, CFG, C, CFG.top_k)
+            k_sel = keys[res.indices]
+            v_sel = vals[res.indices]
+            p = jax.nn.softmax(k_sel @ q / jnp.sqrt(D))
+            return p @ v_sel
+
+        us_full = time_fn(full_step, keys, vals, q)
+        us_ours = time_fn(pariskv_step, meta, keys, vals, q)
+
+        book = pqcache.build_pq(keys, n_coarse=64, n_sub=16, seed=0)
+
+        @jax.jit
+        def pq_step(q):
+            idx = pqcache.pq_retrieve(book, q, CFG.top_k)
+            p = jax.nn.softmax(keys[idx] @ q / jnp.sqrt(D))
+            return p @ vals[idx]
+
+        us_pq = time_fn(pq_step, q)
+
+        tables = magicpig.build(keys, magicpig.make_params(D, seed=0))
+        mp_step = jax.jit(functools.partial(
+            magicpig.sampled_attention, keys=keys, values=vals,
+            tables=tables, top_k=CFG.top_k, sm_scale=1.0 / jnp.sqrt(D)))
+        us_mp = time_fn(mp_step, q)
+
+        bytes_full = n * D * 2 * 2                      # K+V bf16
+        bytes_ours = n * 9 * CFG.num_subspaces(D) + C * 4 + CFG.top_k * D * 4
+        rows.append(csv_row(
+            f"decode_latency/n={n}", us_ours,
+            f"full_us={us_full:.0f};pq_us={us_pq:.0f};magicpig_us={us_mp:.0f};"
+            f"bytes_full={bytes_full};bytes_pariskv={bytes_ours};"
+            f"speedup_vs_full={us_full/us_ours:.2f}x"))
+    return rows

@@ -1,0 +1,38 @@
+"""Paper §5.2: memory scalability / runnable range (the OOM table).
+
+Analytic model (no allocation): per-device bytes for full attention vs
+ParisKV at growing context, llama3.1-8b geometry, 16 GB HBM v5e chips.
+Full attention keeps all K/V on-device; ParisKV keeps metadata + sink/local
+on-device with the full-precision store pooled across the mesh (DESIGN.md
+§2). Derived: max runnable batch per device — the paper's Fig. 7 OOM walls.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro import configs
+
+HBM = 16e9
+
+
+def run() -> list:
+    rows = []
+    cfg = configs.get("llama3.1-8b")
+    pcfg = cfg.pariskv
+    L, G, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    B = pcfg.num_subspaces(hd)
+    params_dev = cfg.num_params() * 2 / 256           # fsdp×tp over 256
+
+    for n in (131_072, 262_144, 393_216, 524_288, 1_048_576):
+        kv_full = L * n * G * hd * 2 * 2              # bf16 K+V, per seq
+        meta = L * G * n * B * 9                      # ids+codes+weights
+        onchip_pk = meta + L * (pcfg.sink_size + pcfg.local_size
+                                + pcfg.update_interval) * G * hd * 2 * 2
+        pooled_pk = kv_full / 256                      # seq-sharded store
+        free = HBM - params_dev
+        bs_full = int(free // kv_full)
+        bs_pk = int(free // (onchip_pk / 16 + pooled_pk))  # metadata seq/16
+        rows.append(csv_row(
+            f"memory/n={n}", 0.0,
+            f"kv_full_gb={kv_full/1e9:.1f};pariskv_meta_gb={meta/1e9:.2f};"
+            f"max_bs_full={bs_full};max_bs_pariskv={bs_pk}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Fig. 8: prefill overhead — key summarization cost vs attention.
+
+ParisKV's one-time prefill extras (normalize/rotate/quantize/weights) are
+measured against the attention prefill itself at growing context lengths;
+the paper's claim is that summarization is a small additive overhead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import attention_keys, csv_row, time_fn
+from repro.core import ParisKVConfig, blockwise_causal_attention, encode_keys, srht
+
+D = 128
+H = 8
+CFG = ParisKVConfig()
+
+
+def run() -> list:
+    rows = []
+    signs = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D),
+                                              CFG.srht_seed))
+    for s in (4096, 16_384):
+        x = attention_keys(s, D, seed=s % 11).reshape(1, s, 1, D)
+        q = jnp.broadcast_to(x, (1, s, H, D))
+
+        @jax.jit
+        def attn_prefill(q, x):
+            return blockwise_causal_attention(
+                q, x, x, sm_scale=D ** -0.5, q_chunk=1024,
+                kv_chunk=2048)
+
+        @jax.jit
+        def summarize(x):
+            return encode_keys(x[:, :, 0], CFG, signs)
+
+        us_attn = time_fn(attn_prefill, q, x)
+        us_enc = time_fn(summarize, x)
+        rows.append(csv_row(
+            f"prefill/s={s}", us_enc,
+            f"attn_us={us_attn:.0f};overhead_pct={100*us_enc/us_attn:.1f}"))
+    return rows

@@ -1,0 +1,110 @@
+"""Deliverable (g): roofline terms per (arch × shape × mesh) from the
+dry-run artifacts (dryrun_results.json — see launch/dryrun.py).
+
+    compute term    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective term = collective_bytes / (chips × 50e9 B/s ICI)
+
+cost_analysis() on the host backend reports *per-device* numbers for the
+SPMD module, so chips=1 in the denominators below (constants per chip).
+MODEL_FLOPS = 6·N(_active)·D_tokens for train, 2·N·tokens for single-token
+decode; the ratio MODEL/HLO flags remat or redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+from repro import configs
+from repro.core.config import INPUT_SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "dryrun_results.json"))
+BODY_COSTS = os.environ.get("BODY_COSTS",
+                            os.path.join(os.path.dirname(__file__), "..",
+                                         "body_costs.json"))
+
+
+def _body_lookup():
+    """(arch, shape) → per-stage body costs for trip-count correction.
+
+    XLA cost_analysis counts while bodies once; corrected totals are
+    whole + Σ_stages (repeat−1)·body (launch/dryrun.py --bodies)."""
+    if not os.path.exists(BODY_COSTS):
+        return {}
+    out = {}
+    for r in json.load(open(BODY_COSTS)):
+        if "stages" in r:
+            out[(r["arch"], r["shape"])] = r["stages"]
+    return out
+
+
+def corrected(rec: dict, bodies: dict):
+    """Apply trip-count correction to (flops, bytes, collective bytes)."""
+    stages = bodies.get((rec["arch"], rec["shape"]))
+    flops = rec.get("flops", 0.0)
+    byts = rec.get("bytes_accessed", 0.0)
+    coll = rec.get("collectives_compiled", rec.get("collectives", {})
+                   ).get("total", 0)
+    if stages:
+        for s in stages:
+            extra = s["repeat"] - 1
+            flops += extra * s["flops"]
+            byts += extra * s["bytes"]
+            coll += extra * s["coll"]
+    return flops, byts, coll, bool(stages)
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_params_per_token()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch            # one token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def terms(rec: dict, bodies: dict = None) -> dict:
+    chips = rec["chips"]
+    flops, bytes_acc, cbytes, was_corrected = corrected(rec, bodies or {})
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_n = cbytes / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_n, dominant=dom,
+                model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
+                corrected=was_corrected)
+
+
+def run() -> list:
+    rows = []
+    if not os.path.exists(RESULTS):
+        return [csv_row("roofline/missing", 0.0,
+                        f"no {RESULTS}; run launch.dryrun first")]
+    bodies = _body_lookup()
+    for rec in json.load(open(RESULTS)):
+        if not rec.get("ok") or "flops" not in rec:
+            continue
+        t = terms(rec, bodies)
+        rows.append(csv_row(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+            + ("" if rec.get("pariskv", True) else "/dense"),
+            t["t_compute"] * 1e6,
+            f"t_mem_us={t['t_memory']*1e6:.1f};"
+            f"t_coll_us={t['t_collective']*1e6:.1f};"
+            f"dominant={t['dominant']};"
+            f"useful_flops_ratio={t['useful_ratio']:.3f};"
+            f"trip_corrected={int(t['corrected'])}"))
+    return rows

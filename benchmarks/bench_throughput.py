@@ -1,0 +1,53 @@
+"""Paper Fig. 7/11: decode throughput & TPOT vs batch size, ParisKV vs full.
+
+End-to-end smoke-scale models on CPU (absolute numbers are CPU-bound; the
+batch-scaling *shape* and the ParisKV-vs-full crossover are the claims
+being exercised). Derived: tokens/s and normalized ms/token.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro import configs
+from repro.data import SyntheticLMStream
+from repro.models import model as M
+from repro.models import serve as SV
+
+
+def run() -> list:
+    rows = []
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = SyntheticLMStream(cfg.vocab_size, seed=0)
+    n_max, prompt_len, gen = 512, 256, 16
+
+    for use_pk in (True, False):
+        tag = "pariskv" if use_pk else "full"
+        for bs in (1, 2, 4):
+            toks = jnp.asarray(
+                np.stack([stream.sequence(prompt_len) for _ in range(bs)]))
+            prefill = jax.jit(lambda p, t: SV.prefill(p, cfg, t, n_max))
+            decode = jax.jit(lambda p, tk, st: SV.decode_step(
+                p, cfg, tk, st, use_pariskv=use_pk))
+            logits, state = prefill(params, toks)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            # warm
+            l2, s2 = decode(params, tok, state)
+            jax.block_until_ready(l2)
+            t0 = time.perf_counter()
+            for _ in range(gen):
+                logits, state = decode(params, tok, state)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            tpot_ms = dt / gen * 1000
+            rows.append(csv_row(
+                f"throughput/{tag}/bs={bs}", tpot_ms * 1000,
+                f"tok_per_s={bs*gen/dt:.1f};tpot_ms={tpot_ms:.1f};"
+                f"ms_per_tok_norm={tpot_ms/bs:.2f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing + synthetic attention-key workloads."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time in microseconds of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def attention_keys(n: int, d: int = 128, seed: int = 0,
+                   drift_at: int | None = None) -> jnp.ndarray:
+    """Anisotropic keys with optional distribution drift after `drift_at`
+    (models prefill → decode shift, paper Fig. 1b)."""
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale = jnp.linspace(2.0, 0.1, d)
+    keys = jax.random.normal(k1, (n, d)) * scale + 0.3
+    if drift_at is not None and drift_at < n:
+        drift_dir = jax.random.normal(k2, (d,))
+        tail = (jax.random.normal(k3, (n - drift_at, d)) * scale[::-1]
+                + 1.5 * drift_dir)
+        keys = keys.at[drift_at:].set(tail)
+    return keys
+
+
+def query_like(keys: jnp.ndarray, idx: int = -1, seed: int = 1) -> jnp.ndarray:
+    """A query correlated with the key at `idx` (realistic heavy-hitter)."""
+    d = keys.shape[-1]
+    noise = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    return keys[idx] + 0.25 * noise
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

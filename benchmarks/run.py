@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
+``python -m benchmarks.run [--only substr]``.
+
+  bench_recall_drift    Fig. 1(a) + Fig. 10  recall under decoding drift
+  bench_estimator       Fig. 4 / App. B      RSQ-IP calibration + β sweep
+  bench_decode_latency  Table 7              per-step cost vs context length
+  bench_kernels         Fig. 6               kernel fusion/selection wins
+  bench_throughput      Fig. 7/11            TPOT & throughput vs batch
+  bench_prefill         Fig. 8               summarization overhead
+  bench_memory_scale    §5.2(3)              runnable-range / OOM model
+  bench_roofline        deliverable (g)      three-term roofline per combo
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "bench_recall_drift",
+    "bench_ablations",
+    "bench_estimator",
+    "bench_decode_latency",
+    "bench_kernels",
+    "bench_throughput",
+    "bench_prefill",
+    "bench_memory_scale",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Train a small model on the synthetic stream for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+
+Demonstrates the training substrate end to end (data → remat'd scan
+forward → AdamW → checkpoint) on the qwen2-family reduced config. The
+motif-structured synthetic data is learnable: loss should fall well below
+the unigram entropy.
+"""
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import save_checkpoint
+from repro.data import SyntheticLMStream, make_batch
+from repro.models import model as M
+from repro.models.train import TrainState, train_step
+from repro.optim import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/pariskv_train_small.npz")
+    args = ap.parse_args()
+
+    cfg = configs.smoke(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params")
+    state = TrainState(params, adamw_init(params))
+    step_fn = jax.jit(functools.partial(
+        train_step, cfg=cfg, peak_lr=1e-3, warmup=20,
+        total_steps=args.steps))
+    stream = SyntheticLMStream(cfg.vocab_size, seed=0)
+
+    first = last = None
+    for step in range(args.steps):
+        tokens, labels = make_batch(stream, args.batch, args.seq)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        if first is None:
+            first = loss
+        last = loss
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"({time.perf_counter()-t0:.2f}s/step)", flush=True)
+    print(f"loss {first:.3f} → {last:.3f}")
+    save_checkpoint(args.ckpt, state.params, step=args.steps)
+    print("checkpoint →", args.ckpt)
+    assert last < first - 0.5, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Baselines the paper compares against (§5): PQCache, MagicPIG, full attention."""

@@ -1,0 +1,6 @@
+"""Full-attention baseline — delegates to the oracle in core.attention.
+
+Kept as its own module so benchmarks can select `--method full` uniformly.
+"""
+from repro.core.attention import (  # noqa: F401
+    blockwise_causal_attention, dense_decode_attention, full_attention)

@@ -1,0 +1,112 @@
+"""PQCache-style baseline (Zhang et al., 2025b).
+
+Product-quantization KV retrieval: coarse centroids are **learned with
+k-means on the prefill keys** and per-subspace PQ codebooks quantize
+residual structure. This is exactly the design whose centroids go *stale*
+under decoding drift (paper Fig. 1) — newly generated keys may fall far from
+every prefill-fitted centroid, so their cluster proxy scores are wrong and
+recall collapses. We implement it as the paper's comparison point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans(x: jax.Array, k: int, iters: int = 20, seed: int = 0) -> jax.Array:
+    """Plain Lloyd's k-means. x: (n, d) → centroids (k, d)."""
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    idx0 = jax.random.permutation(jax.random.PRNGKey(seed), n)[:k]
+    cents = x[idx0]
+
+    def step(cents, _):
+        d2 = (jnp.sum(x ** 2, -1)[:, None] - 2 * x @ cents.T
+              + jnp.sum(cents ** 2, -1)[None])
+        assign = jnp.argmin(d2, -1)
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = one.sum(0)
+        sums = one.T @ x
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1),
+                        cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+def assign_clusters(keys: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment (n,) for keys (n, d)."""
+    k = keys.astype(jnp.float32)
+    d2 = (jnp.sum(k ** 2, -1)[:, None] - 2 * k @ centroids.T
+          + jnp.sum(centroids ** 2, -1)[None])
+    return jnp.argmin(d2, -1)
+
+
+def coarse_retrieve(keys: jax.Array, centroids: jax.Array, q: jax.Array,
+                    top_k: int) -> jax.Array:
+    """Retrieve keys by their cluster's proxy score ⟨q, c⟩ (IVF-style).
+
+    Keys inherit the centroid score; ties broken by exact-IP within equal
+    proxy groups would require full keys, so (like PQCache's coarse stage)
+    we rank purely by proxy — the drift failure mode lives here.
+    """
+    assign = assign_clusters(keys, centroids)
+    c_score = centroids.astype(jnp.float32) @ q.astype(jnp.float32)
+    key_score = c_score[assign]
+    _, idx = jax.lax.top_k(key_score, top_k)
+    return idx.astype(jnp.int32)
+
+
+class PQCodebook(NamedTuple):
+    coarse: jax.Array      # (k_coarse, d)
+    sub_codebooks: jax.Array  # (B, 256, m) PQ codebooks per subspace
+    assignments: jax.Array  # (n,) coarse cluster per key
+    pq_codes: jax.Array    # (n, B) uint8
+
+
+def build_pq(keys: jax.Array, n_coarse: int = 64, n_sub: int = 16,
+             seed: int = 0, fit_sample: int = 32_768) -> PQCodebook:
+    """Fit coarse + product quantizers on (prefill) keys (n, d).
+
+    Codebooks are fitted on a subsample (standard PQ practice); codes are
+    then assigned for every key."""
+    n, d = keys.shape
+    m = d // n_sub
+    fit = keys[:min(n, fit_sample)]
+    coarse = kmeans(fit, n_coarse, seed=seed)
+    assignments = assign_clusters(keys, coarse)
+    resid = keys.astype(jnp.float32) - coarse[assignments]
+    subs = resid.reshape(n, n_sub, m)
+    fit_n = min(n, fit_sample)
+    cbs, codes = [], []
+    for b in range(n_sub):
+        cb = kmeans(subs[:fit_n, b], 256, iters=8, seed=seed + 1 + b)
+        cbs.append(cb)
+        codes.append(assign_clusters(subs[:, b], cb))
+    return PQCodebook(coarse, jnp.stack(cbs), assignments,
+                      jnp.stack(codes, -1).astype(jnp.uint8))
+
+
+def pq_retrieve(book: PQCodebook, q: jax.Array, top_k: int,
+                n_probe: int = 8) -> jax.Array:
+    """Full PQCache decode-path: probe best coarse clusters, rank members by
+    asymmetric PQ distance (ADC)."""
+    qf = q.astype(jnp.float32)
+    c_score = book.coarse @ qf
+    n, B = book.pq_codes.shape
+    m = book.sub_codebooks.shape[-1]
+    q_sub = qf.reshape(B, m)
+    # ADC lookup tables: ⟨q_b, codeword⟩
+    lut = jnp.einsum("bkm,bm->bk", book.sub_codebooks, q_sub)  # (B, 256)
+    resid_score = jnp.sum(
+        jnp.take_along_axis(lut, book.pq_codes.astype(jnp.int32).T, axis=-1), 0)
+    probe_score = c_score[book.assignments]
+    # keys outside the probed clusters are excluded
+    thresh = jax.lax.top_k(c_score, n_probe)[0][-1]
+    in_probe = probe_score >= thresh
+    score = jnp.where(in_probe, probe_score + resid_score, -1e30)
+    _, idx = jax.lax.top_k(score, top_k)
+    return idx.astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.ckpt.npz import load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,66 @@
+"""Sharding-aware npz checkpointing.
+
+Leaves are gathered to host (device_get handles sharded arrays), flattened
+by tree path into a single .npz; restore rebuilds the pytree and re-places
+each leaf with its target sharding (device_put). Atomic via tmp+rename.
+bfloat16 round-trips through a uint16 view (npz has no bf16 dtype).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+_BF16_TAG = "__bf16__"
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+        keys.append(_SEP.join(parts))
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> None:
+    keys, leaves, _ = _paths(tree)
+    host = jax.device_get(leaves)
+    arrays = {}
+    for k, a in zip(keys, host):
+        a = np.asarray(a)
+        if a.dtype == jnp.bfloat16:
+            arrays[k + _BF16_TAG] = a.view(np.uint16)
+        else:
+            arrays[k] = a
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
+    keys, leaves, treedef = _paths(like)
+    data = np.load(path)
+    out = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    for k, ref, sh in zip(keys, leaves, shard_leaves):
+        if k + _BF16_TAG in data:
+            a = data[k + _BF16_TAG].view(jnp.bfloat16)
+        else:
+            a = data[k]
+        assert a.shape == tuple(ref.shape), (k, a.shape, ref.shape)
+        out.append(jax.device_put(a, sh) if sh is not None else jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,37 @@
+"""Assigned architecture configs (public-literature pool) + paper eval archs.
+
+Usage: ``repro.configs.get("gemma2-27b")`` or ``--arch gemma2-27b`` in the
+launchers. Every config cites its source in ``source=``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "stablelm-1.6b",
+    "gemma2-27b",
+    "llama-3.2-vision-11b",
+    "grok-1-314b",
+    "mamba2-780m",
+    "hymba-1.5b",
+    "whisper-large-v3",
+    "qwen2-1.5b",
+    "deepseek-v2-lite-16b",
+    "gemma3-12b",
+    # the paper's own eval models (accuracy/latency tables)
+    "llama3.1-8b",
+    "qwen3-8b",
+)
+
+
+def get(name: str):
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def smoke(name: str):
+    """Reduced variant of the same family for CPU smoke tests."""
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.SMOKE

@@ -1,0 +1,23 @@
+"""ParisKV core: drift-robust KV-cache retrieval (the paper's contribution).
+
+Public API:
+    ParisKVConfig, ModelConfig, InputShape — configuration
+    encode_keys / encode_query            — key summarization (§4.1)
+    retrieve                              — two-stage pipeline (§4.2.2)
+    sparse_decode_attention               — Eq. (2)-(3) restricted softmax
+    LayerKVCache / CacheRegions           — Sink/Retrieval/Local/Update state
+"""
+from repro.core.config import (  # noqa: F401
+    INPUT_SHAPES, InputShape, ModelConfig, ParisKVConfig)
+from repro.core.encode import (  # noqa: F401
+    KeyMetadata, QueryTransform, encode_keys, encode_query)
+from repro.core.retrieval import (  # noqa: F401
+    RetrievalResult, collision_scores, exact_topk, recall_at_k, rerank,
+    retrieve, select_candidates)
+from repro.core.attention import (  # noqa: F401
+    blockwise_causal_attention, dense_decode_attention, full_attention,
+    sparse_decode_attention)
+from repro.core.cache import (  # noqa: F401
+    CacheRegions, LayerKVCache, cache_spec, decode_append, init_layer_cache,
+    maybe_promote, prefill_write, retrieval_valid_mask, window_size)
+from repro.core import srht  # noqa: F401

@@ -1,0 +1,212 @@
+"""Attention computation: full (oracle), blockwise prefill, retrieval-sparse decode.
+
+``sparse_decode_attention`` realizes paper Eq. (2)-(3): the softmax is
+restricted to the union Sink ∪ Retrieved-top-k ∪ Local∪Buffer window, which
+are disjoint index ranges by construction (see core.cache). Full-precision
+K/V for the retrieved set are *gathered* from the (sharded-HBM) retrieval
+region — the TPU analogue of the paper's UVA on-demand fetch (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   mask: Optional[jax.Array] = None, *, sm_scale: float,
+                   softcap: float = 0.0) -> jax.Array:
+    """Oracle dense attention.
+
+    q: (b, S, H, hd); k/v: (b, T, G, hd); mask: broadcastable (b, H, S, T).
+    GQA: H queries share H//G-grouped kv heads. Returns (b, S, H, hd).
+    """
+    b, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    qg = q.reshape(b, S, G, H // G, hd)
+    scores = jnp.einsum("bsgqd,btgd->bgqst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    scores = _softcap(scores, softcap)
+    if mask is not None:
+        m = mask.reshape(b, G, H // G, S, T) if mask.ndim == 4 else mask
+        scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgqst,btgd->bsgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, S, H, hd)
+
+
+def blockwise_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               sm_scale: float, softcap: float = 0.0,
+                               q_chunk: int = 1024, kv_chunk: int = 2048,
+                               sliding_window: int = 0) -> jax.Array:
+    """Flash-style two-level online-softmax causal attention (prefill path).
+
+    Memory-bounded: never materializes the (S, T) score matrix — the working
+    set is (q_chunk, kv_chunk) per head. Pure JAX; XLA fuses the inner scan.
+    q: (b, S, H, hd), k/v: (b, S, G, hd) → (b, S, H, hd).
+    """
+    b, S, H, hd = q.shape
+    G = k.shape[2]
+    vd = v.shape[3]  # value head dim may differ from q/k (MLA)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq, nk = S // q_chunk, S // kv_chunk
+    qg = q.reshape(b, nq, q_chunk, G, H // G, hd).astype(jnp.float32)
+    kc = k.reshape(b, nk, kv_chunk, G, hd).astype(jnp.float32)
+    vc = v.reshape(b, nk, kv_chunk, G, vd).astype(jnp.float32)
+
+    q_pos = jnp.arange(S).reshape(nq, q_chunk)
+    k_pos = jnp.arange(S).reshape(nk, kv_chunk)
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk: (b, q_chunk, G, Hg, hd)
+        def kv_step(carry, inputs):
+            acc, m_run, l_run = carry
+            k_blk, v_blk, kp = inputs
+            s = jnp.einsum("bqghd,bkgd->bgqhk" if False else "bqghd,bkgd->bgqhk",
+                           q_blk, k_blk) * sm_scale  # (b, G, qc, Hg, kc)
+            s = _softcap(s, softcap)
+            causal = q_pos[qi][None, None, :, None, None] >= kp[None, None, None, None, :]
+            if sliding_window:
+                inside = (q_pos[qi][None, None, :, None, None]
+                          - kp[None, None, None, None, :]) < sliding_window
+                causal = jnp.logical_and(causal, inside)
+            s = jnp.where(causal, s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m_run - m_new)
+            l_new = l_run * scale + p.sum(axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum("bgqhk,bkgd->bgqhd", p, v_blk)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, G, q_chunk, H // G, vd), jnp.float32)
+        m0 = jnp.full((b, G, q_chunk, H // G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, G, q_chunk, H // G), jnp.float32)
+        # REPRO_UNROLL_ATTN=1: unroll inner scans so HLO cost analysis sees
+        # every block (while bodies are otherwise counted once — dryrun
+        # trip-count correction, EXPERIMENTS.md §Roofline methodology).
+        unroll = os.environ.get("REPRO_UNROLL_ATTN") == "1"
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), k_pos),
+            unroll=True if unroll else 1)
+        out = acc / jnp.maximum(l_run, 1e-20)[..., None]
+        return jnp.moveaxis(out, 1, 2).reshape(b, q_chunk, H, vd)
+
+    if os.environ.get("REPRO_UNROLL_ATTN") == "1":
+        outs = jnp.stack([one_q_chunk(i, qg[:, i]) for i in range(nq)])
+    else:
+        outs = jax.lax.map(lambda i: one_q_chunk(i, qg[:, i]), jnp.arange(nq))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, S, H, vd)
+
+
+def gather_kv_heads(cache: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather per-(kv-head, query-head) selected tokens from the KV store.
+
+    cache: (b, n, G, hd);  idx: (b, G, Q, k) positions → (b, G, Q, k, hd).
+    This is the UVA-fetch analogue (see kernels/gather_kv for the Pallas
+    version operating on the sequence-sharded store).
+    """
+    c = jnp.moveaxis(cache, 2, 1)                     # (b, G, n, hd)
+    b, G, n, hd = c.shape
+    _, _, Q, k = idx.shape
+    flat = idx.reshape(b, G, Q * k)
+    out = jnp.take_along_axis(c, flat[..., None], axis=2)
+    return out.reshape(b, G, Q, k, hd)
+
+
+def sparse_decode_attention(q: jax.Array,
+                            k_cache: jax.Array, v_cache: jax.Array,
+                            top_idx: jax.Array,
+                            window_start: jax.Array, pos: jax.Array,
+                            enc_end: jax.Array, *,
+                            sink_size: int, window_size: int,
+                            sm_scale: float, softcap: float = 0.0,
+                            k_ret: Optional[jax.Array] = None,
+                            v_ret: Optional[jax.Array] = None) -> jax.Array:
+    """Decode-step attention over Sink ∪ Retrieved ∪ Local/Buffer (Eq. 2-3).
+
+    q:        (b, H, hd) — single new-token query per sequence
+    k_cache:  (b, n_max, G, hd) (same for v_cache)
+    top_idx:  (b, G, Hg, k) retrieved positions (∈ [sink, enc_end))
+    window_start: scalar int32 — static-size dense window [ws, ws+window_size)
+    pos:      scalar int32 — current token position (attends ≤ pos)
+    enc_end:  scalar int32 — retrieval-region end; window positions < enc_end
+              are masked out (they are covered by retrieval instead)
+    """
+    b, H, hd = q.shape
+    G = k_cache.shape[2]
+    Hg = H // G
+    if k_ret is None:  # rows may arrive pre-fetched (distributed retrieval)
+        k_ret = gather_kv_heads(k_cache, top_idx)      # (b, G, Hg, k, hd)
+        v_ret = gather_kv_heads(v_cache, top_idx)
+    qg = q.reshape(b, G, Hg, hd).astype(jnp.float32)
+
+    # --- retrieved segment ------------------------------------------------
+    s_ret = jnp.einsum("bghd,bghkd->bghk", qg, k_ret.astype(jnp.float32))
+    # guard: only positions actually inside the Retrieval region count —
+    # with an empty region (early decode) Stage-II returns arbitrary indices
+    ret_valid = (top_idx >= sink_size) & (top_idx < enc_end)
+    s_ret = jnp.where(ret_valid, s_ret, NEG_INF)
+
+    # --- sink segment (static slice) ---------------------------------------
+    k_sink = k_cache[:, :sink_size].astype(jnp.float32)  # (b, sink, G, hd)
+    v_sink = v_cache[:, :sink_size].astype(jnp.float32)
+    s_sink = jnp.einsum("bghd,bsgd->bghs", qg, k_sink)
+    sink_valid = (jnp.arange(sink_size) <= pos)[None, None, None, :]
+    s_sink = jnp.where(sink_valid, s_sink, NEG_INF)
+
+    # --- local + update-buffer window (dynamic slice, static size) ---------
+    def slice_window(c):
+        return jax.lax.dynamic_slice_in_dim(c, window_start, window_size, axis=1)
+    k_loc = slice_window(k_cache).astype(jnp.float32)    # (b, W, G, hd)
+    v_loc = slice_window(v_cache).astype(jnp.float32)
+    s_loc = jnp.einsum("bghd,bwgd->bghw", qg, k_loc)
+    w_pos = window_start + jnp.arange(window_size)
+    loc_valid = (w_pos >= enc_end) & (w_pos >= sink_size) & (w_pos <= pos)
+    s_loc = jnp.where(loc_valid[None, None, None, :], s_loc, NEG_INF)
+
+    # --- joint softmax -------------------------------------------------------
+    scores = jnp.concatenate([s_sink, s_ret, s_loc], axis=-1) * sm_scale
+    scores = _softcap(scores, softcap)
+    p = jax.nn.softmax(scores, axis=-1)
+    k_sz = top_idx.shape[-1]
+    p_sink, p_ret, p_loc = jnp.split(p, [sink_size, sink_size + k_sz], axis=-1)
+    out = jnp.einsum("bghs,bsgd->bghd", p_sink, v_sink)
+    out += jnp.einsum("bghk,bghkd->bghd", p_ret, v_ret.astype(jnp.float32))
+    out += jnp.einsum("bghw,bwgd->bghd", p_loc, v_loc)
+    return out.reshape(b, H, hd)
+
+
+def dense_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                           pos: jax.Array, *, sm_scale: float,
+                           softcap: float = 0.0,
+                           sliding_window: int = 0) -> jax.Array:
+    """Full-cache decode attention (baseline / local-layer path).
+
+    q: (b, H, hd); caches (b, n_max, G, hd); attends to positions ≤ pos
+    (optionally within a sliding window)."""
+    b, H, hd = q.shape
+    n, G = k_cache.shape[1], k_cache.shape[2]
+    qg = q.reshape(b, G, H // G, hd).astype(jnp.float32)
+    s = jnp.einsum("bghd,bngd->bghn", qg,
+                   k_cache.astype(jnp.float32)) * sm_scale
+    s = _softcap(s, softcap)
+    positions = jnp.arange(n)
+    valid = positions <= pos
+    if sliding_window:
+        valid &= positions > (pos - sliding_window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bghn,bngd->bghd", p,
+                    v_cache.astype(jnp.float32))
+    return out.reshape(b, H, hd)

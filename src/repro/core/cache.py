@@ -1,0 +1,169 @@
+"""ParisKV cache state: Sink / Retrieval / Local / Update-Buffer regions.
+
+Layout of one layer's cache (paper Fig. 5), realized with *static shapes*
+(XLA requirement — DESIGN.md §2 assumption (3)):
+
+      0 ........ sink | sink ........ enc_end | enc_end ....... pos | ...
+      [   Sink     ]   [   Retrieval region ]  [ Local + Update buf ]
+
+* ``[0, sink)``        — attention sinks, always attended densely (on-chip).
+* ``[sink, enc_end)``  — retrieval region: full-precision K/V live in the
+  pooled (sequence-shardable) store; per-key metadata (centroid ids, 4-bit
+  codes, weights) is encoded and fresh.
+* ``[enc_end, pos]``   — the most recent ``local_size`` tokens plus up to
+  ``update_interval`` buffered new tokens, attended densely via one
+  static-size window slice of length W = local_size + update_interval.
+
+The **sliding-window update** (§4.2.1): once ``pos + 1 - enc_end`` reaches
+W, the oldest ``update_interval`` tokens of the window are *promoted into
+the retrieval region* by encoding their metadata in one vectorized block
+(amortized, exactly as the paper's periodic codebook update), and
+``enc_end`` advances by ``update_interval``. Under jit this is a
+``lax.cond`` + ``dynamic_update_slice`` of a static-size block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encode
+from repro.core.config import ParisKVConfig
+
+
+class LayerKVCache(NamedTuple):
+    """Per-layer, per-batch KV store + ParisKV metadata.
+
+    k, v:        (b, n_max, G, hd)
+    meta_ids:    (b, G, n_max, B) uint8   — Stage-I centroid assignments
+    meta_codes:  (b, G, n_max, B) uint32  — Stage-II packed 4-bit codes
+    meta_w:      (b, G, n_max, B) float32 — RSQ-IP weights w_{i,b}
+    """
+    k: jax.Array
+    v: jax.Array
+    meta_ids: jax.Array
+    meta_codes: jax.Array
+    meta_w: jax.Array
+
+
+class CacheRegions(NamedTuple):
+    pos: jax.Array       # scalar int32: index of the most recent token
+    enc_end: jax.Array   # scalar int32: retrieval-region end (exclusive)
+
+
+def window_size(cfg: ParisKVConfig) -> int:
+    return cfg.local_size + cfg.update_interval
+
+
+def init_layer_cache(batch: int, n_max: int, num_kv_heads: int, head_dim: int,
+                     cfg: ParisKVConfig, dtype=jnp.bfloat16) -> LayerKVCache:
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    return LayerKVCache(
+        k=jnp.zeros((batch, n_max, g, head_dim), dtype),
+        v=jnp.zeros((batch, n_max, g, head_dim), dtype),
+        meta_ids=jnp.zeros((batch, g, n_max, B), jnp.uint8),
+        meta_codes=jnp.zeros((batch, g, n_max, B), jnp.uint32),
+        meta_w=jnp.zeros((batch, g, n_max, B), jnp.float32),
+    )
+
+
+def cache_spec(batch: int, n_max: int, num_kv_heads: int, head_dim: int,
+               cfg: ParisKVConfig, dtype=jnp.bfloat16) -> LayerKVCache:
+    """ShapeDtypeStruct twin of init_layer_cache — used by the dry-run."""
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    sds = jax.ShapeDtypeStruct
+    return LayerKVCache(
+        k=sds((batch, n_max, g, head_dim), dtype),
+        v=sds((batch, n_max, g, head_dim), dtype),
+        meta_ids=sds((batch, g, n_max, B), jnp.uint8),
+        meta_codes=sds((batch, g, n_max, B), jnp.uint32),
+        meta_w=sds((batch, g, n_max, B), jnp.float32),
+    )
+
+
+def _encode_block(keys_block: jax.Array, cfg: ParisKVConfig,
+                  signs: jax.Array) -> encode.KeyMetadata:
+    """keys_block (b, L, G, hd) → metadata with layout (b, G, L, B)."""
+    kt = jnp.moveaxis(keys_block, 2, 1)  # (b, G, L, hd)
+    return encode.encode_keys(kt, cfg, signs)
+
+
+def prefill_write(cache: LayerKVCache, k_new: jax.Array, v_new: jax.Array,
+                  cfg: ParisKVConfig, signs: jax.Array) -> Tuple[LayerKVCache, CacheRegions]:
+    """Write a full prompt's K/V and encode the retrieval-region metadata.
+
+    k_new/v_new: (b, S, G, hd). Metadata is encoded for every position (the
+    valid mask at retrieval time restricts to [sink, enc_end)); enc_end is
+    set so the trailing local window stays dense.
+    """
+    S = k_new.shape[1]
+    cache = cache._replace(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), 0, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), 0, axis=1),
+    )
+    meta = _encode_block(k_new, cfg, signs)
+    cache = cache._replace(
+        meta_ids=jax.lax.dynamic_update_slice_in_dim(cache.meta_ids, meta.centroid_ids, 0, axis=2),
+        meta_codes=jax.lax.dynamic_update_slice_in_dim(cache.meta_codes, meta.codes, 0, axis=2),
+        meta_w=jax.lax.dynamic_update_slice_in_dim(cache.meta_w, meta.weights, 0, axis=2),
+    )
+    enc_end = jnp.int32(max(min(cfg.sink_size, S), S - cfg.local_size))
+    regions = CacheRegions(pos=jnp.int32(S - 1), enc_end=enc_end)
+    return cache, regions
+
+
+def decode_append(cache: LayerKVCache, k_t: jax.Array, v_t: jax.Array,
+                  pos: jax.Array) -> LayerKVCache:
+    """Append one token's K/V at position ``pos``. k_t/v_t: (b, G, hd)."""
+    k_t = k_t[:, None].astype(cache.k.dtype)
+    v_t = v_t[:, None].astype(cache.v.dtype)
+    return cache._replace(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_t, pos, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_t, pos, axis=1),
+    )
+
+
+def promote_block(cache: LayerKVCache, start: jax.Array,
+                  cfg: ParisKVConfig, signs: jax.Array) -> LayerKVCache:
+    """Encode metadata for keys [start, start+update_interval) in place."""
+    blk_k = jax.lax.dynamic_slice_in_dim(
+        cache.k, start, cfg.update_interval, axis=1)
+    meta = _encode_block(blk_k, cfg, signs)
+    return cache._replace(
+        meta_ids=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_ids, meta.centroid_ids, start, axis=2),
+        meta_codes=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_codes, meta.codes, start, axis=2),
+        meta_w=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_w, meta.weights, start, axis=2),
+    )
+
+
+def promote_trigger(regions: CacheRegions, cfg: ParisKVConfig) -> jax.Array:
+    """True when the Local+Buffer window is full and a block must promote."""
+    return (regions.pos + 1 - regions.enc_end) >= window_size(cfg)
+
+
+def maybe_promote(cache: LayerKVCache, regions: CacheRegions,
+                  cfg: ParisKVConfig, signs: jax.Array
+                  ) -> Tuple[LayerKVCache, CacheRegions]:
+    """Sliding-window update (§4.2.1): when the Local+Buffer window is full,
+    encode the oldest ``update_interval`` tokens and advance enc_end."""
+    trigger = promote_trigger(regions, cfg)
+
+    def promote(args):
+        cache, regions = args
+        cache = promote_block(cache, regions.enc_end, cfg, signs)
+        return cache, regions._replace(enc_end=regions.enc_end + cfg.update_interval)
+
+    return jax.lax.cond(trigger, promote, lambda a: a, (cache, regions))
+
+
+def retrieval_valid_mask(n_max: int, regions: CacheRegions,
+                         cfg: ParisKVConfig) -> jax.Array:
+    """(n_max,) bool — True on the Retrieval region [sink, enc_end)."""
+    idx = jnp.arange(n_max)
+    return (idx >= cfg.sink_size) & (idx < regions.enc_end)

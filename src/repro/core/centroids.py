@@ -1,0 +1,68 @@
+"""Analytic, data-independent direction centroids (paper §4.1.2).
+
+In every rotated m-dimensional subspace the centroid codebook is the
+sign-pattern set
+
+    Ω = {±1/√m}^m ,   |Ω| = 2^m
+
+which uniformly covers the unit sphere's orthants: any unit direction —
+including keys generated arbitrarily late in decoding — is within a bounded
+angle of some centroid. This is the drift-robustness mechanism: unlike
+k-means centroids fitted to prefill keys (PQCache/MagicPIG), Ω never goes
+stale.
+
+Key identity exploited throughout: for ω ∈ Ω,
+
+    ⟨u, ω⟩ = (1/√m) Σ_j sign(ω_j) u_j
+
+is maximized by ω_j = sign(u_j), so *assignment is sign-bit packing* —
+O(m) per subspace, no codebook search. Conversely the query's score against
+all 2^m centroids is a tiny (m × 2^m) matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=8)
+def codebook(m: int) -> np.ndarray:
+    """The full (2^m, m) centroid matrix Ω. Row id = packed sign bits,
+    bit j set ⇔ coordinate j positive. Kept ≤ 256 rows (m ≤ 8)."""
+    n = 1 << m
+    ids = np.arange(n, dtype=np.uint32)[:, None]
+    bits = (ids >> np.arange(m, dtype=np.uint32)[None, :]) & 1
+    return ((bits.astype(np.float32) * 2.0) - 1.0) / np.sqrt(m)
+
+
+def assign(u: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment for unit directions.
+
+    u: (..., m) → uint8/uint32 packed sign bits (..., ).
+    Ties at exactly 0.0 assign to the positive orthant (sign bit 1),
+    consistent with ``codebook`` bit convention.
+    """
+    m = u.shape[-1]
+    bits = (u >= 0).astype(jnp.uint32)
+    weights = (1 << jnp.arange(m, dtype=jnp.uint32))
+    packed = jnp.sum(bits * weights, axis=-1)
+    dtype = jnp.uint8 if m <= 8 else jnp.uint32
+    return packed.astype(dtype)
+
+
+def centroid_scores(q_sub: jax.Array, m: int) -> jax.Array:
+    """Scores of a rotated query against every centroid, per subspace.
+
+    q_sub: (..., B, m) → (..., B, 2^m) with entry [b, c] = ⟨q_b, ω_c⟩.
+    """
+    omega = jnp.asarray(codebook(m))  # (2^m, m)
+    return jnp.einsum("...bm,cm->...bc", q_sub.astype(jnp.float32), omega)
+
+
+def decode_centroid(ids: jax.Array, m: int) -> jax.Array:
+    """ids (...,) → centroid vectors (..., m). Oracle/test helper."""
+    omega = jnp.asarray(codebook(m))
+    return omega[ids.astype(jnp.int32)]

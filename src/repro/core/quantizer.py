@@ -1,0 +1,143 @@
+"""Data-independent 4-bit direction quantizer (paper §B.1.2, Prop. 4.1).
+
+After the Haar/SRHT rotation, each coordinate of a subspace unit direction
+satisfies (u_b)_j² ~ Beta(1/2, (m-1)/2) — an *analytic* prior that depends
+only on the subspace dimension m, never on the data. We therefore derive the
+3-bit magnitude quantizer **offline, once** via Lloyd–Max on the density of
+X = |(u_b)_j| and share it across all layers/heads/subspaces. Like the
+centroids, this makes the code levels immune to decoding drift.
+
+Code layout (per coordinate): 1 sign bit (bit 3) + 3 magnitude bits
+(bits 0-2). A full m=8 subspace packs into a single uint32 (8 nibbles);
+nibble j = code of coordinate j (little-endian nibble order).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_GRID = 1 << 14
+
+
+def _beta_half_density(m: int, x: np.ndarray) -> np.ndarray:
+    """Density of X = |u_j| where X² ~ Beta(1/2, (m-1)/2) on (0, 1).
+
+    f_X(x) = 2x · f_Beta(x²; 1/2, (m-1)/2) = C · (1 - x²)^{(m-3)/2}.
+    """
+    a, b = 0.5, (m - 1) / 2.0
+    log_beta = math.lgamma(a) + math.lgamma(b) - math.lgamma(a + b)
+    y = np.clip(x * x, 1e-12, 1 - 1e-12)
+    fy = np.exp(-log_beta + (a - 1) * np.log(y) + (b - 1) * np.log(1 - y))
+    return 2.0 * x * fy
+
+
+@functools.lru_cache(maxsize=8)
+def lloyd_max_levels(m: int, bits: int = 3, iters: int = 200):
+    """Offline Lloyd–Max scalar quantizer for the analytic |u_j| prior.
+
+    Returns (thresholds τ[2^bits - 1], levels a[2^bits]) as float32 numpy.
+    """
+    n_levels = 1 << bits
+    x = (np.arange(_GRID) + 0.5) / _GRID  # grid over (0, 1)
+    f = _beta_half_density(m, x)
+    f /= f.sum()
+    # init levels at quantiles of the prior
+    cdf = np.cumsum(f)
+    qs = (np.arange(n_levels) + 0.5) / n_levels
+    levels = x[np.searchsorted(cdf, qs).clip(0, _GRID - 1)]
+    for _ in range(iters):
+        thresholds = 0.5 * (levels[:-1] + levels[1:])
+        idx = np.searchsorted(thresholds, x)
+        new_levels = levels.copy()
+        for t in range(n_levels):
+            mask = idx == t
+            w = f[mask]
+            if w.sum() > 0:
+                new_levels[t] = float((x[mask] * w).sum() / w.sum())
+        if np.allclose(new_levels, levels, atol=1e-9):
+            levels = new_levels
+            break
+        levels = new_levels
+    thresholds = 0.5 * (levels[:-1] + levels[1:])
+    return thresholds.astype(np.float32), levels.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=16)
+def radius_levels(m: int, D: int, bits: int = 2, iters: int = 200):
+    """Optional radius/energy quantizer (paper App. B.1.3).
+
+    z = r² ~ Beta(m/2, (D−m)/2) under the rotation prior; Lloyd–Max on the
+    density of r = √z gives data-independent radius centers. The paper sets
+    K_r = 1 in its final system (marginal recall gain — we reproduce that
+    ablation in benchmarks/bench_ablations.py); the derivation ships so the
+    K_r > 1 variant is one flag away.
+    Returns (thresholds, levels) float32 numpy over r ∈ (0, 1).
+    """
+    a, b = m / 2.0, (D - m) / 2.0
+    x = (np.arange(_GRID) + 0.5) / _GRID
+    log_beta = math.lgamma(a) + math.lgamma(b) - math.lgamma(a + b)
+    y = np.clip(x * x, 1e-12, 1 - 1e-12)
+    f = 2.0 * x * np.exp(-log_beta + (a - 1) * np.log(y)
+                         + (b - 1) * np.log(1 - y))
+    f /= f.sum()
+    n_levels = 1 << bits
+    cdf = np.cumsum(f)
+    qs = (np.arange(n_levels) + 0.5) / n_levels
+    levels = x[np.searchsorted(cdf, qs).clip(0, _GRID - 1)]
+    for _ in range(iters):
+        thresholds = 0.5 * (levels[:-1] + levels[1:])
+        idx = np.searchsorted(thresholds, x)
+        new = levels.copy()
+        for t in range(n_levels):
+            mask = idx == t
+            w = f[mask]
+            if w.sum() > 0:
+                new[t] = float((x[mask] * w).sum() / w.sum())
+        if np.allclose(new, levels, atol=1e-9):
+            levels = new
+            break
+        levels = new
+    thresholds = 0.5 * (levels[:-1] + levels[1:])
+    return thresholds.astype(np.float32), levels.astype(np.float32)
+
+
+def quantize_radii(r: jax.Array, m: int, D: int, bits: int = 2) -> jax.Array:
+    """r (...,) ∈ (0,1) → reconstructed quantized radius (K_r = 2^bits)."""
+    tau, levels = radius_levels(m, D, bits)
+    idx = jnp.searchsorted(jnp.asarray(tau), r)
+    return jnp.asarray(levels)[idx]
+
+
+def quantize_magnitudes(x_abs: jax.Array, m: int, bits: int = 3) -> jax.Array:
+    """|u_j| → 3-bit bucket index via the shared thresholds."""
+    tau, _ = lloyd_max_levels(m, bits)
+    return jnp.searchsorted(jnp.asarray(tau), x_abs).astype(jnp.uint32)
+
+
+def encode_directions(u: jax.Array, m: int, bits: int = 3) -> jax.Array:
+    """Pack unit directions into per-subspace uint32 codes.
+
+    u: (..., B, m) unit directions → codes (..., B) uint32, nibble j =
+    sign<<3 | magnitude-bucket of coordinate j. Requires m ≤ 8.
+    """
+    assert u.shape[-1] == m and m <= 8
+    sign = (u >= 0).astype(jnp.uint32)
+    mag = quantize_magnitudes(jnp.abs(u), m, bits)
+    nibble = (sign << bits) | mag  # 4-bit code
+    shifts = (4 * jnp.arange(m, dtype=jnp.uint32))
+    return jnp.sum(nibble << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def decode_directions(codes: jax.Array, m: int, bits: int = 3) -> jax.Array:
+    """codes (..., B) uint32 → reconstructed directions v (..., B, m)."""
+    _, levels = lloyd_max_levels(m, bits)
+    lv = jnp.asarray(levels)
+    shifts = (4 * jnp.arange(m, dtype=jnp.uint32))
+    nibbles = (codes[..., None] >> shifts) & 0xF
+    sign = jnp.where((nibbles >> bits) & 1, 1.0, -1.0).astype(jnp.float32)
+    mag = lv[(nibbles & ((1 << bits) - 1)).astype(jnp.int32)]
+    return sign * mag

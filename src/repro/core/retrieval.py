@@ -1,0 +1,234 @@
+"""Two-stage GPU-native retrieval pipeline (paper §4.2.2, App. B.2).
+
+Stage I  — coarse candidate generation by multi-tier subspace collisions.
+Stage II — RSQ-IP reranking of the candidates from 4-bit codes.
+
+This module is the *reference* (pure-jnp) implementation and the one used by
+the distributed serving path (XLA/GSPMD partitions it). ``repro.kernels``
+provides Pallas TPU kernels for the collision scan, bucket-top-k and fused
+rerank with identical semantics, validated against these functions.
+
+A crucial implementation point (matches the paper's "bucket-level" design):
+the tier weight is a property of the *centroid bucket*, not of the key — all
+keys assigned to the same centroid share its proxy score ⟨q_b, c⟩, so we (1)
+histogram keys over the 2^m buckets, (2) rank the ≤256 buckets by proxy
+score, (3) convert each bucket's cumulative key-count position into a tier
+weight, and (4) look the weight up per key. Cost: O(2^m log 2^m + n) instead
+of O(n log n).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import centroids
+from repro.core.config import ParisKVConfig
+from repro.core.encode import KeyMetadata, QueryTransform, estimate_inner_products
+
+NEG_INF = jnp.float32(-1e30)
+
+
+class RetrievalResult(NamedTuple):
+    indices: jax.Array   # (..., k) int32 — positions of the final Top-k keys
+    scores: jax.Array    # (..., k) float32 — RSQ-IP estimates for them
+    cand_indices: jax.Array  # (..., C) int32 — Stage-I candidate positions
+    coarse_scores: jax.Array  # (..., n) int32 — Stage-I collision scores
+
+
+def bucket_histogram(ids: jax.Array, valid: jax.Array, num_buckets: int) -> jax.Array:
+    """Count keys per centroid bucket. ids (..., n, B) → (..., B, 2^m) int32."""
+    lead = ids.shape[:-2]
+    n, B = ids.shape[-2], ids.shape[-1]
+    ids_t = jnp.swapaxes(ids, -1, -2).reshape((-1, n)).astype(jnp.int32)
+    upd = jnp.broadcast_to(valid[..., None, :], lead + (B, n)).reshape((-1, n))
+
+    def _hist(one_ids, one_upd):
+        return jnp.zeros((num_buckets,), jnp.int32).at[one_ids].add(
+            one_upd.astype(jnp.int32))
+
+    counts = jax.vmap(_hist)(ids_t, upd)
+    return counts.reshape(lead + (B, num_buckets))
+
+
+def tier_weight_table(cent_scores: jax.Array, counts: jax.Array,
+                      n_valid: jax.Array, cfg: ParisKVConfig) -> jax.Array:
+    """Per-(subspace, centroid) integer tier weight (App. B.2.1).
+
+    cent_scores: (..., B, 2^m) proxy scores ⟨q_b, ω_c⟩
+    counts:      (..., B, 2^m) bucket histogram (may broadcast against extra
+                 query-head dims in cent_scores)
+    n_valid:     (...,) number of indexable keys
+    → (..., B, 2^m) int32 weights in {0, 1, .., 6}.
+    """
+    counts = jnp.broadcast_to(counts, cent_scores.shape)
+    order = jnp.argsort(-cent_scores, axis=-1)                     # bucket rank
+    counts_sorted = jnp.take_along_axis(counts, order, axis=-1)
+    csum_inclusive = jnp.cumsum(counts_sorted, axis=-1)
+    csum_exclusive = csum_inclusive - counts_sorted                # keys ranked above bucket
+
+    # position of the bucket's *first* key as a fraction of the top-ρ budget
+    denom = jnp.maximum(cfg.rho * n_valid.astype(jnp.float32), 1.0)
+    pos_frac = csum_exclusive.astype(jnp.float32) / denom[..., None, None]
+
+    pcts = jnp.asarray(cfg.tier_pcts, jnp.float32)
+    wts = jnp.asarray(cfg.tier_weights + (0,), jnp.int32)          # tier L.. → 0
+    tier = jnp.searchsorted(pcts, pos_frac, side="right")
+    w_sorted = wts[jnp.minimum(tier, len(cfg.tier_weights))]
+
+    # scatter weights back to bucket-id order via the inverse permutation
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(w_sorted, inv, axis=-1)
+
+
+def collision_scores(meta_ids: jax.Array, q_sub: jax.Array, valid: jax.Array,
+                     cfg: ParisKVConfig, hist_sample: int = 0) -> jax.Array:
+    """Stage-I coarse scores S_i (Eq. 15). Pure-jnp reference.
+
+    meta_ids: (..., n, B) uint8 centroid assignments
+    q_sub:    (..., B, m) rotated query subspaces (may carry extra leading
+              query-head dims that broadcast against meta_ids)
+    valid:    (..., n) bool
+    hist_sample: if >0, estimate the bucket histogram from a strided key
+        subsample of ~this size (beyond-paper §Perf optimization: the tier
+        *percentile boundaries* only need approximate counts; sampling cuts
+        the scatter-add cost by n/hist_sample with bounded boundary noise).
+    → (..., n) int32 collision scores (invalid keys get -1).
+    """
+    nb = cfg.num_centroids()
+    n = meta_ids.shape[-2]
+    cs = centroids.centroid_scores(q_sub, cfg.m)                   # (..., B, 2^m)
+    stride = max(n // hist_sample, 1) if hist_sample else 1
+    if stride > 1:
+        counts = bucket_histogram(meta_ids[..., ::stride, :],
+                                  valid[..., ::stride], nb) * stride
+    else:
+        counts = bucket_histogram(meta_ids, valid, nb)             # (..., B, 2^m)
+    n_valid = jnp.sum(valid, axis=-1)
+    table = tier_weight_table(cs, counts, n_valid, cfg)            # (..., B, 2^m)
+
+    # per-key lookup S_i = Σ_b table[b, id_{i,b}] as ONE flat gather over
+    # (B·2^m,) — avoids a (B, n) transpose copy + B separate gathers.
+    table_flat = table.reshape(table.shape[:-2] + (-1,))           # (..., B·2^m)
+    offsets = (jnp.arange(meta_ids.shape[-1], dtype=jnp.int32) * nb)
+    idx_flat = (meta_ids.astype(jnp.int32) + offsets).reshape(
+        meta_ids.shape[:-2] + (-1,))                               # (..., n·B)
+    idx_flat = jnp.broadcast_to(idx_flat,
+                                table_flat.shape[:-1] + idx_flat.shape[-1:])
+    per_key = jnp.take_along_axis(table_flat, idx_flat, axis=-1)
+    scores = per_key.reshape(per_key.shape[:-1] + (n, meta_ids.shape[-1])
+                             ).sum(-1)
+    return jnp.where(valid, scores, -1)
+
+
+def select_candidates(scores: jax.Array, num_candidates: int) -> jax.Array:
+    """Top-C by integer collision score, deterministic index-order ties.
+
+    Reference semantics; the production path (`select_candidates_bucket`)
+    and the Pallas bucket_topk kernel implement the paper's histogram/
+    threshold selection with identical index sets.
+    """
+    _, idx = jax.lax.top_k(scores, num_candidates)
+    return idx.astype(jnp.int32)
+
+
+def select_candidates_bucket(scores: jax.Array, num_candidates: int,
+                             score_range: int) -> jax.Array:
+    """O(n) bucket_topk (paper §4.3 kernel i / App. B.2.1) in pure jnp.
+
+    Small-range integer scores → histogram → threshold walk → prefix-sum
+    compaction. Matches lax.top_k's index set exactly (ties: lowest index
+    first). ~10× cheaper than a sort-based top-k at 262k keys (paper
+    reports up to 9.4× for its CUDA kernel — same algorithmic win).
+    Supports arbitrary leading batch dims.
+    """
+    k = num_candidates
+    rng = score_range + 2                  # scores may carry -1 (invalid)
+    shifted = (scores + 1).astype(jnp.int32)
+    lead = scores.shape[:-1]
+    n = scores.shape[-1]
+
+    def one(s_row):
+        hist = jnp.zeros((rng,), jnp.int32).at[s_row].add(1)
+        desc = hist[::-1]
+        cum = jnp.cumsum(desc)
+        meets = cum >= k
+        thresh = rng - 1 - jnp.argmax(meets)
+        above = jnp.where(meets, 0, desc).sum()
+        quota = k - above
+        take_above = s_row > thresh
+        is_tie = s_row == thresh
+        tie_rank = jnp.cumsum(is_tie.astype(jnp.int32)) - 1
+        take = take_above | (is_tie & (tie_rank < quota))
+        dest = jnp.cumsum(take.astype(jnp.int32)) - 1
+        out = jnp.zeros((k,), jnp.int32)
+        return out.at[jnp.where(take, dest, k)].set(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+
+    flat = shifted.reshape((-1, n))
+    res = jax.vmap(one)(flat)
+    return res.reshape(lead + (k,))
+
+
+def rerank(meta: KeyMetadata, qt: QueryTransform, cand_idx: jax.Array,
+           valid: jax.Array, cfg: ParisKVConfig) -> jax.Array:
+    """Stage-II RSQ-IP estimates for the candidate set (Eq. 24).
+
+    → (..., C) float32, invalid candidates masked to -inf.
+    """
+    from repro.core import quantizer
+
+    B = meta.codes.shape[-1]
+    codes_b = jnp.broadcast_to(
+        meta.codes, cand_idx.shape[:-1] + meta.codes.shape[-2:])
+    w_b = jnp.broadcast_to(
+        meta.weights, cand_idx.shape[:-1] + meta.weights.shape[-2:])
+    codes = jnp.take_along_axis(codes_b, cand_idx[..., None], axis=-2)   # (..., C, B)
+    w = jnp.take_along_axis(w_b, cand_idx[..., None], axis=-2)           # (..., C, B)
+    v = quantizer.decode_directions(codes, cfg.m, cfg.magnitude_bits)    # (..., C, B, m)
+    dots = jnp.einsum("...cbm,...bm->...cb", v, qt.q_sub)
+    est = qt.q_norm[..., None] * jnp.sum(w * dots, axis=-1)
+
+    valid_b = jnp.broadcast_to(valid, cand_idx.shape[:-1] + valid.shape[-1:])
+    cand_valid = jnp.take_along_axis(valid_b, cand_idx, axis=-1)
+    return jnp.where(cand_valid, est, NEG_INF)
+
+
+def retrieve(meta: KeyMetadata, qt: QueryTransform, valid: jax.Array,
+             cfg: ParisKVConfig, num_candidates: int, top_k: int,
+             hist_sample: int = 0, bucket_select: bool = True
+             ) -> RetrievalResult:
+    """Full two-stage pipeline (Algorithm 1). Shapes broadcast as above.
+
+    bucket_select: use the O(n) histogram/threshold Top-β (paper's
+    bucket_topk) instead of a sort-based top-k — identical index sets.
+    """
+    coarse = collision_scores(meta.centroid_ids, qt.q_sub, valid, cfg,
+                              hist_sample=hist_sample)
+    B = meta.centroid_ids.shape[-1]
+    if bucket_select:
+        cand = select_candidates_bucket(coarse, num_candidates,
+                                        score_range=max(cfg.tier_weights) * B)
+    else:
+        cand = select_candidates(coarse, num_candidates)
+    est = rerank(meta, qt, cand, valid, cfg)
+    top_est, top_pos = jax.lax.top_k(est, top_k)
+    top_idx = jnp.take_along_axis(cand, top_pos, axis=-1)
+    return RetrievalResult(top_idx, top_est, cand, coarse)
+
+
+def exact_topk(keys: jax.Array, q: jax.Array, valid: jax.Array, top_k: int):
+    """Oracle: exact inner-product Top-k over full-precision keys."""
+    ip = jnp.einsum("...nd,...d->...n", keys.astype(jnp.float32),
+                    q.astype(jnp.float32))
+    ip = jnp.where(valid, ip, NEG_INF)
+    vals, idx = jax.lax.top_k(ip, top_k)
+    return idx.astype(jnp.int32), vals
+
+
+def recall_at_k(retrieved: jax.Array, oracle: jax.Array) -> jax.Array:
+    """|retrieved ∩ oracle| / |oracle| along the last axis."""
+    hits = (retrieved[..., :, None] == oracle[..., None, :]).any(axis=-1)
+    return hits.mean(axis=-1)

@@ -1,0 +1,74 @@
+"""Subsampled Randomized Hadamard Transform (SRHT) rotation.
+
+The paper rotates unit-normalized keys/queries by a shared random orthogonal
+matrix R implemented as SRHT (App. B.1.1 Remark). We use the full (square)
+randomized Hadamard rotation
+
+    R x = (1 / sqrt(Dp)) * H_Dp (s ⊙ pad(x))
+
+where ``s`` is a fixed Rademacher sign vector and ``H_Dp`` the Walsh–Hadamard
+matrix of the next power-of-two dimension ``Dp >= D``. R is orthogonal, so
+inner products are preserved exactly (zero-padding is also IP-preserving),
+and the rotation "spreads information evenly across dimensions" — the
+precondition for the analytic Beta priors of Prop. 4.1.
+
+The FWHT is implemented as log2(Dp) reshape/stack steps — O(Dp log Dp), fully
+fusible by XLA, no materialized Dp×Dp matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rademacher_signs(dim_padded: int, seed: int) -> np.ndarray:
+    """Deterministic Rademacher sign vector shared by keys and queries."""
+    rng = np.random.RandomState(seed & 0x7FFFFFFF)
+    return (rng.randint(0, 2, size=(dim_padded,)) * 2 - 1).astype(np.float32)
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh–Hadamard transform along the last axis (power-of-2 length).
+
+    Unnormalized: H @ x with H_{ij} = (-1)^{popcount(i & j)}.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT length must be a power of two, got {n}"
+    orig_shape = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(orig_shape[:-1] + (n // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        x = x.reshape(orig_shape)
+        h *= 2
+    return x
+
+
+def pad_pow2(x: jax.Array, dim_padded: int) -> jax.Array:
+    d = x.shape[-1]
+    if d == dim_padded:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, dim_padded - d)]
+    return jnp.pad(x, pad)
+
+
+def srht_rotate(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """Apply the shared orthogonal rotation to ``x`` (last axis = feature dim).
+
+    ``signs`` must have the padded power-of-two length; ``x`` is zero-padded up
+    to it. Returns an array with last dim ``len(signs)``.
+    """
+    dp = signs.shape[-1]
+    xp = pad_pow2(x, dp).astype(jnp.float32)
+    y = fwht(xp * signs)
+    return y * (1.0 / np.sqrt(dp))
+
+
+def srht_rotate_t(y: jax.Array, signs: jax.Array, out_dim: int) -> jax.Array:
+    """Inverse (= transpose) rotation; used only by tests/oracles."""
+    dp = signs.shape[-1]
+    x = fwht(y.astype(jnp.float32)) * (1.0 / np.sqrt(dp)) * signs
+    return x[..., :out_dim]

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMStream, make_batch, media_stub)

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the four hot paths of the ParisKV pipeline
+(paper §4.3's four CUDA kernels, re-targeted at TPU per DESIGN.md §2):
+
+  collision/    Stage-I tier-weight accumulation over centroid ids
+  bucket_topk/  histogram-based Top-β selection for small-range int scores
+  rerank/       fused 4-bit unpack + RSQ-IP scoring of candidates
+  gather_kv/    on-demand fetch of selected KV rows (UVA analogue)
+
+Each subpackage ships the kernel (`pl.pallas_call` + BlockSpec), a jitted
+wrapper (`ops.py`, interpret-mode on CPU), and a pure-jnp oracle (`ref.py`).
+"""
+IS_TPU = False
+try:  # pragma: no cover
+    import jax
+    IS_TPU = jax.default_backend() == "tpu"
+except Exception:
+    pass
+
+INTERPRET = not IS_TPU

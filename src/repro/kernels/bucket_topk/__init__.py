@@ -1,0 +1,2 @@
+from repro.kernels.bucket_topk.ops import bucket_topk  # noqa: F401
+from repro.kernels.bucket_topk import ref  # noqa: F401

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: histogram for small-range integer scores
+(paper §4.3 kernel i — bucket_topk, step (i): the histogram).
+
+Collision scores live in [0, 6B] (≤ 96 for B=16), so Top-β selection never
+needs a sort: build a histogram (this kernel, tiled over the key stream,
+one partial histogram per grid block, summed by XLA), walk it from the top
+to find the threshold score, and compact indices by a prefix-sum of the
+mask (steps (ii)/(iii), done with O(n) vector ops in ops.py).
+
+TPU adaptation of the histogram: instead of scatter-increments (slow on
+VPU), each block compares its scores against a broadcasted iota of the
+score range and row-sums the one-hot — a (block_n, range) compare + reduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, hist_ref, *, score_range: int):
+    s = scores_ref[...].astype(jnp.int32)          # (bn,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], score_range), 1)
+    onehot = (s[:, None] == iota).astype(jnp.int32)
+    hist_ref[...] = onehot.sum(axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("score_range", "block_n",
+                                             "interpret"))
+def histogram_pallas(scores: jax.Array, *, score_range: int,
+                     block_n: int = 2048, interpret: bool = True) -> jax.Array:
+    """scores (n,) int32 in [0, score_range) → histogram (score_range,)."""
+    n = scores.shape[0]
+    assert n % block_n == 0
+    grid = (n // block_n,)
+    partial = pl.pallas_call(
+        functools.partial(_kernel, score_range=score_range),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, score_range), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // block_n, score_range), jnp.int32),
+        interpret=interpret,
+    )(scores)
+    return partial.sum(0)

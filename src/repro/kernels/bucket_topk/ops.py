@@ -1,0 +1,63 @@
+"""bucket_topk = histogram kernel + threshold walk + prefix-sum compaction.
+
+Matches ``jax.lax.top_k`` on integer scores exactly (including the
+lowest-index-first tie rule): scores strictly above the threshold are all
+taken; ties at the threshold are taken in index order up to the quota.
+No sort over n anywhere — O(n) vector work + O(range) threshold walk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.bucket_topk.bucket_topk import histogram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "score_range", "block_n"))
+def bucket_topk(scores: jax.Array, k: int, score_range: int = 128,
+                block_n: int = 2048) -> jax.Array:
+    """scores (..., n) int32 ≥ -1 → indices (..., k) of the top-k scores.
+
+    Invalid entries should be marked with score -1 (clamped into bucket 0 is
+    avoided by shifting +1 internally).
+    """
+    lead = scores.shape[:-1]
+    n = scores.shape[-1]
+    pad = (-n) % block_n
+    shifted = scores + 1                       # -1 → 0 bucket
+    rng = score_range + 1
+    if pad:
+        shifted = jnp.concatenate(
+            [shifted, jnp.zeros(lead + (pad,), scores.dtype)], -1)
+
+    def one(s_row):
+        hist = histogram_pallas(s_row, score_range=rng, block_n=block_n,
+                                interpret=INTERPRET)
+        # threshold: smallest score t such that count(score > t) < k ≤
+        # count(score ≥ t)
+        desc = hist[::-1]
+        cum = jnp.cumsum(desc)                 # counts from top score down
+        meets = cum >= k
+        t_rev = jnp.argmax(meets)              # first index meeting quota
+        thresh = rng - 1 - t_rev
+        above = jnp.where(meets, 0, desc).sum()  # strictly above threshold
+        quota_at = k - above
+
+        s_valid = s_row[:n]
+        take_above = s_valid > thresh
+        is_tie = s_valid == thresh
+        tie_rank = jnp.cumsum(is_tie.astype(jnp.int32)) - 1
+        take = take_above | (is_tie & (tie_rank < quota_at))
+        # compact by prefix sum; deterministic index order
+        dest = jnp.cumsum(take.astype(jnp.int32)) - 1
+        out = jnp.zeros((k,), jnp.int32)
+        out = out.at[jnp.where(take, dest, k)].set(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+        return out
+
+    flat = shifted.reshape((-1, n + pad))
+    res = jax.vmap(one)(flat)
+    return res.reshape(lead + (k,))

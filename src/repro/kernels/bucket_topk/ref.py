@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for bucket_topk."""
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(scores: jax.Array, score_range: int) -> jax.Array:
+    return jnp.zeros((score_range,), jnp.int32).at[
+        jnp.clip(scores, 0, score_range - 1)].add(1)
+
+
+def bucket_topk_ref(scores: jax.Array, k: int) -> jax.Array:
+    """Exact semantic target: top-k by score, ties → lowest index first."""
+    _, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32)

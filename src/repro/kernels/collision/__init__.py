@@ -1,0 +1,2 @@
+from repro.kernels.collision.ops import collision_scores_kernel  # noqa: F401
+from repro.kernels.collision import ref  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: Stage-I collision accumulation (paper §4.3 kernel ii).
+
+Given per-key centroid ids (n, B) and the per-(subspace, centroid) integer
+tier-weight table (B, 2^m) — computed once per query from the ≤2^m bucket
+ranking — accumulate S_i = Σ_b table[b, ids[i, b]].
+
+TPU adaptation: the per-key table lookup is a *gather*, which the VPU
+dislikes; we re-express it as a one-hot × table-row product per subspace
+(comparison against a broadcasted iota, then a (block_n, 2^m)·(2^m,)
+contraction), which maps onto vector compare + MXU/VPU reduce. The key
+stream is tiled (block_n, B) into VMEM; the weight table (B·2^m ≤ 4096
+int32) stays resident in VMEM across the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, table_ref, out_ref, *, num_subspaces: int,
+            num_centroids: int):
+    ids = ids_ref[...].astype(jnp.int32)          # (bn, B)
+    bn = ids.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, num_centroids), 1)
+
+    def body(b, acc):
+        onehot = (ids[:, b][:, None] == iota).astype(jnp.float32)
+        row = table_ref[b, :].astype(jnp.float32)  # (2^m,)
+        return acc + onehot @ row
+
+    acc = jax.lax.fori_loop(
+        0, num_subspaces, body, jnp.zeros((bn,), jnp.float32))
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def collision_pallas(ids: jax.Array, table: jax.Array, *, block_n: int = 1024,
+                     interpret: bool = True) -> jax.Array:
+    """ids: (n, B) uint8/int32; table: (B, C) int32 → scores (n,) int32."""
+    n, B = ids.shape
+    C = table.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, num_subspaces=B, num_centroids=C),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, B), lambda i: (i, 0)),
+            pl.BlockSpec((B, C), lambda i: (0, 0)),   # table resident
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(ids, table)

@@ -1,0 +1,29 @@
+"""Jitted wrapper: pads to block multiple, batches via vmap, CPU-interprets."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.collision.collision import collision_pallas
+
+
+def collision_scores_kernel(ids: jax.Array, table: jax.Array,
+                            block_n: int = 1024) -> jax.Array:
+    """Batched collision scores. ids (..., n, B), table (..., B, C) → (..., n).
+
+    Padding rows score against bucket 0 and are sliced off.
+    """
+    lead = ids.shape[:-2]
+    n, B = ids.shape[-2], ids.shape[-1]
+    pad = (-n) % block_n
+    if pad:
+        ids = jnp.concatenate(
+            [ids, jnp.zeros(lead + (pad, B), ids.dtype)], axis=-2)
+    flat_ids = ids.reshape((-1, n + pad, B))
+    flat_tbl = jnp.broadcast_to(table, lead + table.shape[-2:]).reshape(
+        (-1,) + table.shape[-2:])
+    fn = lambda i, t: collision_pallas(i, t, block_n=block_n,
+                                       interpret=INTERPRET)
+    out = jax.vmap(fn)(flat_ids, flat_tbl)
+    return out[:, :n].reshape(lead + (n,))

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the collision kernel."""
+import jax.numpy as jnp
+
+
+def collision_scores_ref(ids, table):
+    """ids (n, B), table (B, C) → (n,) int32: S_i = Σ_b table[b, ids[i,b]]."""
+    ids = ids.astype(jnp.int32)
+    per_sub = jnp.take_along_axis(table, ids.T, axis=-1)  # (B, n)
+    return per_sub.sum(0).astype(jnp.int32)

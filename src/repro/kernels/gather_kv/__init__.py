@@ -1,0 +1,2 @@
+from repro.kernels.gather_kv.ops import gather_kv_kernel  # noqa: F401
+from repro.kernels.gather_kv import ref  # noqa: F401

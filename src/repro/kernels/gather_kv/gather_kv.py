@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: on-demand Top-k KV fetch (paper §4.3 kernel iv).
+
+The UVA analogue (DESIGN.md §2): the retrieval-region KV store lives in
+pooled (sequence-shardable) HBM; after Stage-II selects k row indices, this
+kernel copies exactly those rows to the compute buffer. Realized with the
+canonical Pallas *scalar-prefetch gather*: the index vector is prefetched
+(SMEM) and drives the input BlockSpec's index_map, so each grid step DMAs
+one selected row (1, G·hd) HBM→VMEM — only k·G·hd bytes move, never the
+full store, which is the entire point of retrieval sparsity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, rows_ref, out_ref):
+    out_ref[...] = rows_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_pallas(store: jax.Array, idx: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """store (n, d), idx (k,) int32 → (k, d). One DMA per selected row."""
+    n, d = store.shape
+    k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, d), store.dtype),
+        interpret=interpret,
+    )(idx, store)

@@ -1,0 +1,21 @@
+"""Jitted wrapper for the UVA-style KV fetch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.gather_kv.gather_kv import gather_rows_pallas
+
+
+def gather_kv_kernel(store: jax.Array, idx: jax.Array) -> jax.Array:
+    """store (..., n, d), idx (..., k) → (..., k, d), batched via vmap."""
+    lead = store.shape[:-2]
+    n, d = store.shape[-2:]
+    k = idx.shape[-1]
+    flat_store = store.reshape((-1, n, d))
+    flat_idx = jnp.broadcast_to(idx, lead + (k,)).reshape((-1, k)).astype(
+        jnp.int32)
+    fn = lambda s, i: gather_rows_pallas(s, i, interpret=INTERPRET)
+    out = jax.vmap(fn)(flat_store, flat_idx)
+    return out.reshape(lead + (k, d))

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for gather_kv."""
+
+
+def gather_rows_ref(store, idx):
+    """store (n, d), idx (k,) → (k, d)."""
+    return store[idx]

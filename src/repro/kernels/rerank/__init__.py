@@ -1,0 +1,2 @@
+from repro.kernels.rerank.ops import rerank_kernel  # noqa: F401
+from repro.kernels.rerank import ref  # noqa: F401

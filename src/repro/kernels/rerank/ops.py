@@ -1,0 +1,30 @@
+"""Jitted wrapper: gather candidates (XLA), then the fused Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from repro.kernels import INTERPRET
+from repro.kernels.rerank.rerank import rerank_pallas
+
+
+def rerank_kernel(codes: jax.Array, weights: jax.Array, cand_idx: jax.Array,
+                  q_sub: jax.Array, q_norm: jax.Array, m: int = 8,
+                  bits: int = 3, block_c: int = 512) -> jax.Array:
+    """Full Stage-II: gather + fused unpack/score.
+
+    codes/weights: (n, B); cand_idx: (C,); q_sub: (B, m); q_norm: scalar
+    → (C,) float32 RSQ-IP estimates.
+    """
+    _, levels = quantizer.lloyd_max_levels(m, bits)
+    Cn = cand_idx.shape[0]
+    pad = (-Cn) % block_c
+    idx = jnp.concatenate([cand_idx, jnp.zeros((pad,), cand_idx.dtype)]) \
+        if pad else cand_idx
+    g_codes = codes[idx]          # XLA gather (TPU dynamic-slice lowering)
+    g_w = weights[idx]
+    out = rerank_pallas(g_codes, g_w, q_sub, q_norm, m=m, bits=bits,
+                        levels=tuple(float(x) for x in levels),
+                        block_c=block_c, interpret=INTERPRET)
+    return out[:Cn]

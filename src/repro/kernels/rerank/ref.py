@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused rerank kernel (= core path, Eq. 24)."""
+import jax.numpy as jnp
+
+from repro.core import quantizer
+
+
+def rerank_ref(codes, weights, q_sub, q_norm, m: int, bits: int = 3):
+    """codes/weights (..., C, B), q_sub (..., B, m) → (..., C) f32."""
+    v = quantizer.decode_directions(codes, m, bits)
+    dots = jnp.einsum("...cbm,...bm->...cb", v, q_sub.astype(jnp.float32))
+    return q_norm * jnp.sum(weights.astype(jnp.float32) * dots, axis=-1)

@@ -1,0 +1,434 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination, lower + compile
+the appropriate step function against ShapeDtypeStruct stand-ins (no
+allocation), print/record ``memory_analysis()`` + ``cost_analysis()`` and
+the per-device collective bytes parsed from the compiled HLO — the inputs
+to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k
+    python -m repro.launch.dryrun --all [--multipod] [--out results.json]
+
+NOTE the XLA_FLAGS line above MUST precede any jax import: it fakes 512
+host devices so jax.make_mesh can build the production meshes. Only this
+module sets it — smoke tests and benches see the real single device.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import mesh as MX
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.models.train import TrainState, train_step
+from repro.optim import adamw_init
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_spec(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32)
+    else:  # decode
+        out["token"] = _sds((b,), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["media"] = _sds((b, cfg.num_media_tokens, cfg.d_model),
+                            jnp.float32)
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["media"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                compile_it: bool = True, use_pariskv: bool = True
+                ) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MX.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                               mesh="x".join(str(v) for v in mesh.shape.values()),
+                               chips=n_chips, pariskv=use_pariskv)
+    t0 = time.time()
+
+    p_sds = params_spec(cfg)
+    p_shard = MX.params_sharding(p_sds, mesh, multi_pod)
+    ins = input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(adamw_init, p_sds)
+            o_shard = MX.opt_sharding(opt_sds, p_shard, mesh)
+            state_sds = TrainState(p_sds, opt_sds)
+            state_shard = TrainState(p_shard, o_shard)
+            batch_sds = {k: v for k, v in ins.items()}
+            batch_shard = {k: MX.data_sharding(mesh, shape.global_batch,
+                                               *v.shape[1:])
+                           for k, v in ins.items()}
+            remat = os.environ.get("REPRO_REMAT", "1") == "1"
+            fn = functools.partial(train_step, cfg=cfg, remat=remat)
+            lowered = jax.jit(fn, in_shardings=(state_shard, batch_shard)
+                              ).lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            n_max = shape.seq_len  # prefill allocates the serving cache
+            fn = functools.partial(SV.prefill, cfg=cfg, n_max=n_max)
+            tok_shard = MX.data_sharding(mesh, shape.global_batch, shape.seq_len)
+            args = [p_sds, ins["tokens"]]
+            shards = [p_shard, tok_shard]
+            if "media" in ins:
+                args.append(ins["media"])
+                shards.append(MX.data_sharding(mesh, shape.global_batch,
+                                               *ins["media"].shape[1:]))
+            lowered = jax.jit(
+                lambda params, tokens, *m: fn(params, tokens=tokens,
+                                              media=(m[0] if m else None)),
+                in_shardings=tuple(shards),
+            ).lower(*args)
+        else:  # decode
+            n_max = shape.seq_len
+            caches = SV.make_caches(cfg, shape.global_batch, n_max,
+                                    as_spec=True)
+            state_sds = SV.ServeState(caches, SV.regions_spec(as_spec=True))
+            c_shard = MX.cache_sharding(caches, mesh, shape.global_batch)
+            r_shard = jax.tree.map(
+                lambda s: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                SV.regions_spec(as_spec=True))
+            state_shard = SV.ServeState(c_shard, r_shard)
+            tok_shard = MX.data_sharding(mesh, shape.global_batch)
+            dist = None
+            if os.environ.get("REPRO_DIST_RETRIEVAL") == "1":
+                ba = MX.batch_axes(mesh, shape.global_batch)
+                seq_axes = (tuple(mesh.axis_names) if ba is None
+                            else "model")
+                dist = (mesh, seq_axes, tuple(ba) if ba else None)
+            fn = functools.partial(SV.decode_step, cfg=cfg,
+                                   use_pariskv=use_pariskv, dist=dist)
+            lowered = jax.jit(
+                lambda params, token, state: fn(params, token=token,
+                                                state=state),
+                in_shardings=(p_shard, tok_shard, state_shard),
+                donate_argnums=(2,),
+            ).lower(p_sds, ins["token"], state_sds)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        hlo = lowered.as_text()
+        rec["collectives"] = MX.collective_bytes(hlo)
+        if compile_it:
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+            try:
+                ma = compiled.memory_analysis()
+                rec["memory"] = {
+                    "argument_bytes": int(getattr(ma, "argument_size_in_bytes", -1)),
+                    "output_bytes": int(getattr(ma, "output_size_in_bytes", -1)),
+                    "temp_bytes": int(getattr(ma, "temp_size_in_bytes", -1)),
+                    "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", -1)),
+                }
+            except Exception as e:  # pragma: no cover
+                rec["memory"] = {"error": str(e)}
+            # collectives from the post-SPMD compiled module (the real ones)
+            rec["collectives_compiled"] = MX.collective_bytes(
+                compiled.as_text())
+    rec["ok"] = True
+    return rec
+
+
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(flops=float(ca.get("flops", 0)),
+                bytes=float(ca.get("bytes accessed", 0)),
+                coll=MX.collective_bytes(compiled.as_text())["total"])
+
+
+def body_costs(arch: str, shape_name: str, multi_pod: bool = False
+               ) -> Dict[str, Any]:
+    """Trip-count correction (EXPERIMENTS.md §Roofline methodology).
+
+    XLA's cost_analysis counts while-loop bodies ONCE, so whole-program
+    costs undercount scanned layer stacks by ~L. Here we compile each
+    stage's one-period body directly (inner attention/SSD scans unrolled
+    via REPRO_UNROLL_ATTN) and report its cost + repeat count; corrected
+    totals are  whole + Σ_stages (repeat−1)·body.
+    """
+    os.environ["REPRO_UNROLL_ATTN"] = "1"
+    try:
+        import dataclasses as _dc
+
+        import repro.models.model as M2
+        cfg = configs.get(arch)
+        shape = INPUT_SHAPES[shape_name]
+        mesh = MX.make_production_mesh(multi_pod=multi_pod)
+        plan = M2.layer_plan(cfg)
+        p_sds = params_spec(cfg)
+        p_shard = MX.params_sharding(p_sds, mesh, multi_pod)
+        b = shape.global_batch
+        s = shape.seq_len
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        out: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                                   mesh="x".join(str(v) for v in
+                                                 mesh.shape.values()),
+                                   stages=[])
+        media_sds = None
+        if cfg.family == "vlm":
+            media_sds = _sds((b, cfg.num_media_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            media_sds = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+
+        with mesh:
+            for si, stage in enumerate(plan):
+                stage_p_sds = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                    p_sds["stages"][si])
+                stage_p_shard = jax.tree_util.tree_map_with_path(
+                    lambda path, leaf: jax.NamedSharding(
+                        mesh, MX.param_spec("stages/" + MX._path_str(path),
+                                            leaf.shape, mesh, multi_pod,
+                                            stacked=False)),
+                    stage_p_sds)
+                ba = MX.batch_axes(mesh, b)
+                x_shard = jax.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(ba, None, None))
+
+                if shape.kind == "train":
+                    x_sds = _sds((b, s, cfg.d_model), dt)
+
+                    def body(p_slice, x, media=None):
+                        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+                        def loss(p_slice, x):
+                            xx = x
+                            for i, ld in enumerate(stage.layers):
+                                f = jax.checkpoint(functools.partial(
+                                    M2.layer_fwd_train, ld=ld, cfg=cfg))
+                                xx, _ = f(p_slice[f"l{i}"], xx,
+                                          positions=positions, media=media)
+                            return xx.astype(jnp.float32).sum()
+
+                        g = jax.grad(loss, argnums=(0, 1))(p_slice, x)
+                        return g
+
+                    args = [stage_p_sds, x_sds]
+                    shards = [stage_p_shard, x_shard]
+                    if media_sds is not None:
+                        args.append(media_sds)
+                        shards.append(jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec(ba, None, None)))
+                    lowered = jax.jit(body, in_shardings=tuple(shards)
+                                      ).lower(*args)
+                elif shape.kind == "prefill":
+                    import repro.models.serve as SV2
+                    x_sds = _sds((b, s, cfg.d_model), dt)
+                    c_stacked = SV2.make_caches(cfg, b, s, as_spec=True)[si]
+                    c_sds = jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                        c_stacked)
+                    c_shard_stacked = MX.cache_sharding(
+                        SV2.make_caches(cfg, b, s, as_spec=True), mesh, b)[si]
+                    c_shard = jax.tree.map(
+                        lambda ns: jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec(*ns.spec[1:])),
+                        c_shard_stacked)
+                    signs = SV2.rotation_signs(cfg)
+
+                    def body(p_slice, x, cache, media=None):
+                        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+                        new_c = {}
+                        for i, ld in enumerate(stage.layers):
+                            x, new_c[f"l{i}"] = SV2._layer_prefill(
+                                p_slice[f"l{i}"], x, ld, cfg, positions,
+                                media, cache[f"l{i}"], signs)
+                        return x, new_c
+
+                    args = [stage_p_sds, x_sds, c_sds]
+                    shards = [stage_p_shard, x_shard, c_shard]
+                    if media_sds is not None:
+                        args.append(media_sds)
+                        shards.append(jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec(ba, None, None)))
+                    lowered = jax.jit(body, in_shardings=tuple(shards)
+                                      ).lower(*args)
+                else:  # decode
+                    import repro.models.serve as SV2
+                    from repro.core import cache as CC
+                    n_max = s
+                    c_stacked = SV2.make_caches(cfg, b, n_max,
+                                                as_spec=True)[si]
+                    c_sds = jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                        c_stacked)
+                    c_shard_stacked = MX.cache_sharding(
+                        SV2.make_caches(cfg, b, n_max, as_spec=True),
+                        mesh, b)[si]
+                    c_shard = jax.tree.map(
+                        lambda ns: jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec(*ns.spec[1:])),
+                        c_shard_stacked)
+                    signs = SV2.rotation_signs(cfg)
+                    num_candidates = cfg.pariskv.candidate_count(n_max)
+                    xt_sds = _sds((b, cfg.d_model), dt)
+                    xt_shard = jax.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec(ba, None))
+                    regions = CC.CacheRegions(
+                        pos=_sds((), jnp.int32), enc_end=_sds((), jnp.int32))
+                    r_shard = jax.tree.map(
+                        lambda a: jax.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec()), regions)
+
+                    dist = None
+                    if os.environ.get("REPRO_DIST_RETRIEVAL") == "1":
+                        ba = MX.batch_axes(mesh, b)
+                        seq_ax = (tuple(mesh.axis_names) if ba is None
+                                  else "model")
+                        dist = (mesh, seq_ax, tuple(ba) if ba else None)
+
+                    def body(p_slice, x_t, cache, regions):
+                        will_promote = CC.promote_trigger(regions,
+                                                          cfg.pariskv)
+                        new_c = {}
+                        for i, ld in enumerate(stage.layers):
+                            x_t, new_c[f"l{i}"] = SV2._layer_decode(
+                                p_slice[f"l{i}"], x_t, ld, cfg,
+                                cache[f"l{i}"], regions, signs,
+                                num_candidates, will_promote, dist=dist)
+                        return x_t, new_c
+
+                    lowered = jax.jit(
+                        body,
+                        in_shardings=(stage_p_shard, xt_shard, c_shard,
+                                      r_shard),
+                        donate_argnums=(2,),
+                    ).lower(stage_p_sds, xt_sds, c_sds, regions)
+
+                cost = _cost_of(lowered)
+                cost["repeat"] = stage.repeat
+                out["stages"].append(cost)
+        return out
+    finally:
+        os.environ.pop("REPRO_UNROLL_ATTN", None)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--dense-baseline", action="store_true",
+                    help="decode with full attention instead of ParisKV")
+    ap.add_argument("--bodies", action="store_true",
+                    help="per-stage body costs for trip-count correction")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.bodies:
+        archs = configs.ARCHS[:10] if args.all else [args.arch]
+        shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+            else [args.shape]
+        if args.all:
+            # prefill bodies fully unroll 32×16 attention blocks per layer —
+            # prohibitively slow to compile on one CPU core; prefill keeps
+            # the documented whole-program numbers (EXPERIMENTS §Roofline).
+            shapes = [s for s in shapes if s != "prefill_32k"]
+        results = []
+        if args.out and os.path.exists(args.out):
+            results = json.load(open(args.out))
+        done = {(r["arch"], r["shape"]) for r in results if "stages" in r}
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape) in done:
+                    continue
+                print(f"=== bodies {arch} × {shape} ===", flush=True)
+                try:
+                    rec = body_costs(arch, shape, args.multipod)
+                    print(rec["stages"], flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = dict(arch=arch, shape=shape, error=str(e)[-1500:])
+                results.append(rec)
+                if args.out:
+                    json.dump(results, open(args.out, "w"), indent=1)
+        return
+
+    archs = configs.ARCHS[:10] if args.all else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multipod]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("pariskv", True))
+            for r in results if r.get("ok")}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_tag = "2x16x16" if mp else "16x16"
+                key = (arch, shape, mesh_tag, not args.dense_baseline)
+                if key in done:
+                    continue
+                print(f"=== {arch} × {shape} × {mesh_tag} ===", flush=True)
+                try:
+                    rec = lower_combo(arch, shape, mp,
+                                      compile_it=not args.no_compile,
+                                      use_pariskv=not args.dense_baseline)
+                    print(json.dumps({k: rec[k] for k in
+                                      ("lower_s", "compile_s", "flops",
+                                       "bytes_accessed", "memory")
+                                      if k in rec}, indent=None), flush=True)
+                    print("collectives:", rec.get(
+                        "collectives_compiled", rec.get("collectives")),
+                        flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = dict(arch=arch, shape=shape, mesh=mesh_tag,
+                               pariskv=not args.dense_baseline,
+                               ok=False, error=str(e)[-2000:])
+                results.append(rec)
+                if args.out:
+                    json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"dry-run complete: {n_ok}/{len(results)} OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Production mesh + sharding rules (DESIGN.md §5).
+
+Mesh: single pod = (data=16, model=16) — 256 chips of TPU v5e; multi-pod =
+(pod=2, data=16, model=16) — 512 chips, the ``pod`` axis folding into the
+FSDP/data dimension.
+
+Param sharding is 2-D FSDP×TP assigned by *name rules* over the pytree path
+(the substrate uses fixed weight-name conventions — models/layers.py):
+row-parallel matmuls shard (fsdp, model), col-parallel (model, fsdp),
+experts (None, fsdp, model), vectors replicate. Stage params carry a
+leading layer-stack axis → specs are prepended with None.
+
+Decode-side cache sharding implements the paper↔TPU capacity mapping
+(DESIGN.md §2): the retrieval region (full-precision KV + metadata) is
+**sequence-sharded** over the model axis (and over every axis when
+global_batch < |data|, e.g. long_500k), so the aggregate-HBM pool plays the
+role of the paper's CPU DRAM and the UVA fetch becomes gather+collectives.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb knobs (EXPERIMENTS.md §Perf). Env-driven so the dry-run can
+# A/B shardings without code forks:
+#   REPRO_CACHE_SEQ_AXIS = model | data | all | none   (decode cache seq dim)
+#   REPRO_FSDP           = 1 | 0   (0 → pure TP params, no data-axis shard)
+#   REPRO_META_BATCH_AXIS= dp | model  (metadata batch dim placement)
+# ---------------------------------------------------------------------------
+
+
+def _knob(name: str, default: str) -> str:
+    return os.environ.get(name, default)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0 and dim >= size
+
+
+def _maybe(spec_axes, shape, mesh):
+    """Drop sharding on axes that do not divide evenly (XLA would pad;
+    we prefer explicit replication for those dims)."""
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        out.append(ax if _divisible(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------- params ----
+_ROW = re.compile(r"(wq|wk|wv|wi_gate|wi_up|w_in|w_dkv|w_uk|w_uv|unembed)$")
+_COL = re.compile(r"(wo|wo_mlp|w_out)$")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               multi_pod: bool, stacked: bool) -> P:
+    """Name-rule FSDP×TP spec for one parameter."""
+    fs = fsdp_axes(multi_pod) if _knob("REPRO_FSDP", "1") == "1" else None
+    name = path.split("/")[-1]
+    core: Tuple = ()
+    nd = len(shape) - (1 if stacked else 0)
+    if name == "embed":
+        core = ("model", fs)
+    elif _ROW.search(name) and nd == 2:
+        core = (fs, "model")
+    elif _COL.search(name) and nd == 2:
+        core = ("model", fs)
+    elif name.startswith("experts_down"):
+        core = (None, "model", fs)
+    elif name.startswith("experts_"):
+        core = (None, fs, "model")
+    elif name == "router":
+        core = (fs, None)
+    elif name == "conv_w":
+        core = (None, "model")
+    elif name in ("bq", "bk", "bv", "conv_b") and nd == 1:
+        core = ("model",)
+    else:  # norms, gates, scalars, small vectors → replicate
+        core = (None,) * nd
+    if stacked:
+        core = (None,) + tuple(core)
+    core = tuple(core) + (None,) * (len(shape) - len(core))
+    return _maybe(core, shape, mesh)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            parts.append(str(pp.idx))
+        elif hasattr(pp, "name"):
+            parts.append(str(pp.name))
+    return "/".join(parts)
+
+
+def params_sharding(params_shapes: Any, mesh: Mesh, multi_pod: bool):
+    """PartitionSpec pytree mirroring the params pytree (works on
+    ShapeDtypeStructs from jax.eval_shape)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("stages") or ps.startswith("encoder")
+        return NamedSharding(mesh, param_spec(ps, leaf.shape, mesh, multi_pod,
+                                              stacked))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_sharding(opt_shapes: Any, params_sharding_tree: Any, mesh: Mesh):
+    """AdamW mu/nu inherit param specs; step replicates."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith(("mu", "nu")):
+            sub = ps.split("/", 1)[1]
+            stacked = sub.startswith(("stages", "encoder"))
+            return NamedSharding(
+                mesh, param_spec(sub, leaf.shape, mesh,
+                                 "pod" in mesh.axis_names, stacked))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+# ---------------------------------------------------------- activations ----
+def batch_axes(mesh: Mesh, global_batch: int):
+    """Axes to shard the batch dim over; None when the batch is too small
+    (long_500k) — sequence sharding takes over instead."""
+    fs = fsdp_axes("pod" in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in fs]))
+    return fs if global_batch % size == 0 and global_batch >= size else None
+
+
+def data_sharding(mesh: Mesh, global_batch: int, *extra_dims: int):
+    """Sharding for (batch, ...) host data."""
+    ba = batch_axes(mesh, global_batch)
+    return NamedSharding(mesh, P(ba, *(None,) * len(extra_dims)))
+
+
+def cache_sharding(cache_shapes: Any, mesh: Mesh, global_batch: int):
+    """Decode-cache sharding (stacked (L, b, ...) leaves).
+
+    Sequence dims shard over 'model' (batch over data) — or over *all* axes
+    when batch cannot shard (long_500k). Leaf kinds are identified by rank:
+
+      (L, b, n, G, hd)   k/v store          → seq on axis 2
+      (L, b, G, n, B)    metadata           → seq on axis 3
+      (L, b, n, r)       MLA latent         → seq on axis 2
+      (L, b, h, p, n)    SSM state          → heads on 'model'
+      (L, b, w, c)       conv ring          → replicate seq, shard c
+    """
+    ba = batch_axes(mesh, global_batch)
+    knob = _knob("REPRO_CACHE_SEQ_AXIS", "auto")
+    if knob == "auto":
+        seq_ax: Any = tuple(mesh.axis_names) if ba is None else "model"
+    elif knob == "all":
+        seq_ax = tuple(mesh.axis_names)
+        ba = None
+    elif knob == "none":
+        seq_ax = None
+    else:
+        seq_ax = knob                    # "model" or "data"
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        name = ps.split("/")[-1]
+        # regions scalars
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec: Tuple = (None,) * len(shape)
+        if "ssm" in ps and len(shape) == 5:        # (L, b, h, p, n)
+            spec = (None, ba, "model", None, None)
+        elif "ssm" in ps and len(shape) == 4:      # conv buf (L, b, w, c)
+            spec = (None, ba, None, "model")
+        elif len(shape) == 5:                       # (L, b, n|G, ...)
+            if name in ("meta_ids", "meta_codes", "meta_w"):
+                spec = (None, ba, None, seq_ax, None)
+            else:                                   # k/v (L, b, n, G, hd)
+                spec = (None, ba, seq_ax, None, None)
+        elif len(shape) == 4:                       # meta (L,b,n,B) | latent
+            if name in ("meta_ids", "meta_codes", "meta_w"):
+                spec = (None, ba, None, seq_ax)
+            else:                                   # latent (L, b, n, r)
+                spec = (None, ba, seq_ax, None)
+        elif len(shape) == 3:
+            spec = (None, ba, None)
+        # verify divisibility; drop axes that don't fit
+        fixed = []
+        for dim, ax in zip(shape, spec):
+            fixed.append(ax if _divisible(dim, mesh, ax) else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# -------------------------------------------------- HLO collective audit ----
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3|f8e5m2|s64|s32|s16|s8|u64|"
+                       r"u32|u16|u8|pred)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in an HLO module.
+
+    Returns {op_kind: bytes} + {"total": bytes}. Per-device numbers (the HLO
+    is the SPMD per-device program).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")\(",
+                          s)
+            if not m:
+                continue
+            kind = m.group(2)
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            out[kind] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

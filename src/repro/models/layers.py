@@ -1,0 +1,373 @@
+"""Shared transformer building blocks (pure functional, pytree params).
+
+Every ``init_*`` returns a dict pytree of arrays; every ``*_fwd`` consumes it.
+Sharding is attached later by name-based rules (launch/mesh.py), so there is
+no module framework — just conventions:
+
+  * weight names: wq/wk/wv/wo (attention), wi_gate/wi_up/wo_mlp (MLP),
+    experts_* (MoE), embed / unembed.
+  * matmul weights are stored (in_dim, out_dim).
+
+Attention supports the paper's serving integration: ``decode`` mode routes
+global layers through ParisKV two-stage retrieval (core.retrieval) and local
+(sliding-window) layers through a dense ring-buffer window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as A
+from repro.core import cache as C
+from repro.core import encode as E
+from repro.core import retrieval as R
+from repro.core.config import ModelConfig, ParisKVConfig
+
+
+# ----------------------------------------------------------------- helpers --
+def truncated_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, hd); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., seq, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], -1).astype(np.float32)
+
+
+# ------------------------------------------------------------------- MLP ----
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": truncated_normal(k1, (d_model, d_ff)).astype(dtype),
+        "wi_up": truncated_normal(k2, (d_model, d_ff)).astype(dtype),
+        "wo_mlp": truncated_normal(k3, (d_ff, d_model)).astype(dtype),
+    }
+
+
+def mlp_fwd(p: dict, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    return h @ p["wo_mlp"]
+
+
+# ------------------------------------------------------------- attention ----
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Static per-layer attention behaviour."""
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    softcap: float = 0.0
+    sliding_window: int = 0      # >0 → local layer (ring-buffer decode cache)
+    qk_norm: bool = False
+    sm_scale: float = 0.0        # 0 → 1/sqrt(head_dim)
+    causal: bool = True          # False for encoder / cross attention
+
+    def scale(self) -> float:
+        return self.sm_scale or (1.0 / float(np.sqrt(self.head_dim)))
+
+
+def init_attn(key, d_model: int, spec: AttnSpec, dtype) -> dict:
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": truncated_normal(ks[0], (d_model, H * hd)).astype(dtype),
+        "wk": truncated_normal(ks[1], (d_model, G * hd)).astype(dtype),
+        "wv": truncated_normal(ks[2], (d_model, G * hd)).astype(dtype),
+        "wo": truncated_normal(ks[3], (H * hd, d_model)).astype(dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((G * hd,), dtype)
+        p["bv"] = jnp.zeros((G * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, spec: AttnSpec,
+                 positions: Optional[jax.Array]):
+    """x: (b, s, d) → q (b,s,H,hd), k/v (b,s,G,hd), rope applied."""
+    b, s, _ = x.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, H, hd)
+    k = k.reshape(b, s, G, hd)
+    v = v.reshape(b, s, G, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"], plus_one=True)
+        k = rms_norm(k, p["k_norm"], plus_one=True)
+    if positions is not None:
+        q = rope(q, positions, spec.rope_theta)
+        k = rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def attn_train(p: dict, x: jax.Array, spec: AttnSpec,
+               positions: jax.Array) -> jax.Array:
+    """Causal training/prefill attention (blockwise, memory-bounded)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, spec, positions)
+    q_chunk = min(1024, s)
+    kv_chunk = min(2048, s)
+    out = A.blockwise_causal_attention(
+        q, k, v, sm_scale=spec.scale(), softcap=spec.softcap,
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+        sliding_window=spec.sliding_window)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attn_encoder(p: dict, x: jax.Array, spec: AttnSpec) -> jax.Array:
+    """Bidirectional (encoder) attention, no rope (whisper encoder)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, spec, None)
+    out = A.full_attention(q, k, v, None, sm_scale=spec.scale())
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attn_cross(p: dict, x: jax.Array, kv_src: jax.Array,
+               spec: AttnSpec) -> jax.Array:
+    """Cross attention: queries from x (b,s,d), keys/values from kv_src
+    (b,t,d). Used by whisper decoder and llama-vision cross layers."""
+    b, s, _ = x.shape
+    t = kv_src.shape[1]
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = (x @ p["wq"]).reshape(b, s, H, hd)
+    k = (kv_src @ p["wk"]).reshape(b, t, G, hd)
+    v = (kv_src @ p["wv"]).reshape(b, t, G, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"], plus_one=True)
+        k = rms_norm(k, p["k_norm"], plus_one=True)
+    out = A.full_attention(q, k, v, None, sm_scale=spec.scale())
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attn_prefill(p: dict, x: jax.Array, spec: AttnSpec, positions: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Like attn_train but also returns (k, v) for cache population."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, spec, positions)
+    out = A.blockwise_causal_attention(
+        q, k, v, sm_scale=spec.scale(), softcap=spec.softcap,
+        q_chunk=min(1024, s), kv_chunk=min(2048, s),
+        sliding_window=spec.sliding_window)
+    return out.reshape(b, s, -1) @ p["wo"], k, v
+
+
+def _decode_qkv(p: dict, x_t: jax.Array, spec: AttnSpec, pos: jax.Array):
+    """x_t: (b, d) single token → q (b,H,hd), k/v (b,G,hd) with rope at pos."""
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = x_t @ p["wq"]
+    k = x_t @ p["wk"]
+    v = x_t @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, H, hd)
+    k = k.reshape(b, 1, G, hd)
+    v = v.reshape(b, 1, G, hd)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"], plus_one=True)
+        k = rms_norm(k, p["k_norm"], plus_one=True)
+    pos_arr = jnp.broadcast_to(pos, (b, 1))
+    q = rope(q, pos_arr, spec.rope_theta)
+    k = rope(k, pos_arr, spec.rope_theta)
+    return q[:, 0], k[:, 0], v[:, 0]
+
+
+def attn_decode_dense(p: dict, x_t: jax.Array, kv: Tuple[jax.Array, jax.Array],
+                      pos: jax.Array, spec: AttnSpec
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Dense decode over a (possibly ring-buffered) cache.
+
+    kv: (k_cache, v_cache) each (b, n, G, hd). For sliding-window layers the
+    cache length n equals the window and indices wrap (pos % n)."""
+    k_cache, v_cache = kv
+    n = k_cache.shape[1]
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
+    slot = pos % n if spec.sliding_window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_t[:, None].astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_t[:, None].astype(v_cache.dtype), slot, axis=1)
+    if spec.sliding_window and spec.sliding_window <= n:
+        # ring buffer: all n slots valid once pos >= n-1; before that, ≤ pos
+        valid = (jnp.arange(n) <= pos) | (pos >= n)
+        b, H, hd = q.shape
+        G = k_cache.shape[2]
+        qg = q.reshape(b, G, H // G, hd).astype(jnp.float32)
+        s = jnp.einsum("bghd,bngd->bghn", qg, k_cache.astype(jnp.float32))
+        s = s * spec.scale()
+        if spec.softcap:
+            s = spec.softcap * jnp.tanh(s / spec.softcap)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        prob = jax.nn.softmax(s, -1)
+        out = jnp.einsum("bghn,bngd->bghd", prob, v_cache.astype(jnp.float32))
+        out = out.reshape(b, H * hd)
+    else:
+        out = A.dense_decode_attention(
+            q, k_cache, v_cache, pos, sm_scale=spec.scale(),
+            softcap=spec.softcap, sliding_window=spec.sliding_window)
+        out = out.reshape(out.shape[0], -1)
+    return out.astype(x_t.dtype) @ p["wo"], (k_cache, v_cache)
+
+
+def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
+                               regions: C.CacheRegions, pcfg: ParisKVConfig,
+                               signs: jax.Array, mesh, seq_axes, batch_axes
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Hierarchical (context-parallel) two-stage retrieval + row fetch.
+
+    Beyond-paper first-class feature (EXPERIMENTS §Perf E1/E2): the
+    retrieval region is sequence-sharded; each shard scores its local
+    metadata, takes a local top-k, the per-shard winners are all-gathered
+    (k·shards rows — tiny) and merged into an exact global top-k; each
+    shard contributes its owned K/V rows via masked gather + psum instead
+    of GSPMD's cache-scale all-gathers.
+
+    q_grp: (b, G, Hg, hd) → (top_idx (b,G,Hg,k) global positions,
+                             k_ret, v_ret (b,G,Hg,k,hd)).
+    """
+    from repro.core.attention import gather_kv_heads
+    seq_tuple = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
+    n = layer_cache.k.shape[1]
+    n_shards = int(np.prod([mesh.shape[a] for a in seq_tuple]))
+    n_loc = n // n_shards
+    k_top = pcfg.top_k
+    C_loc = min(pcfg.candidate_count(n_loc), n_loc)
+
+    def local(q, k_cache, v_cache, ids, codes, w, pos, enc_end):
+        base = jax.lax.axis_index(seq_tuple) * n_loc
+        meta = E.KeyMetadata(ids[:, :, None], codes[:, :, None],
+                             w[:, :, None])
+        qt = E.encode_query(q, pcfg, signs)
+        gpos = base + jnp.arange(n_loc)
+        valid = (gpos >= pcfg.sink_size) & (gpos < enc_end)
+        valid = jnp.broadcast_to(valid, (q.shape[0], q.shape[1], 1, n_loc))
+        res = R.retrieve(meta, qt, valid, pcfg, C_loc, k_top,
+                         hist_sample=pcfg.hist_sample)
+        glob_idx = res.indices + base
+        all_scores = jnp.moveaxis(
+            jax.lax.all_gather(res.scores, seq_tuple), 0, -2).reshape(
+                res.scores.shape[:-1] + (n_shards * k_top,))
+        all_idx = jnp.moveaxis(
+            jax.lax.all_gather(glob_idx, seq_tuple), 0, -2).reshape(
+                glob_idx.shape[:-1] + (n_shards * k_top,))
+        _, ppos = jax.lax.top_k(all_scores, k_top)
+        final_idx = jnp.take_along_axis(all_idx, ppos, -1)
+
+        loc_idx = final_idx - base
+        mine = (loc_idx >= 0) & (loc_idx < n_loc)
+        safe = jnp.clip(loc_idx, 0, n_loc - 1)
+        k_rows = gather_kv_heads(k_cache, safe) * mine[..., None]
+        v_rows = gather_kv_heads(v_cache, safe) * mine[..., None]
+        k_sel = jax.lax.psum(k_rows.astype(jnp.float32), seq_tuple)
+        v_sel = jax.lax.psum(v_rows.astype(jnp.float32), seq_tuple)
+        return final_idx, k_sel, v_sel
+
+    P = jax.sharding.PartitionSpec
+    ba = batch_axes
+    in_specs = (P(ba, None, None, None),            # q replicated over seq
+                P(ba, seq_axes, None, None),        # k cache
+                P(ba, seq_axes, None, None),        # v cache
+                P(ba, None, seq_axes, None),        # ids
+                P(ba, None, seq_axes, None),        # codes
+                P(ba, None, seq_axes, None),        # w
+                P(), P())
+    out_specs = (P(ba, None, None, None),
+                 P(ba, None, None, None, None),
+                 P(ba, None, None, None, None))
+    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(q_grp, layer_cache.k, layer_cache.v, layer_cache.meta_ids,
+              layer_cache.meta_codes, layer_cache.meta_w,
+              regions.pos, regions.enc_end)
+
+
+def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,
+                        regions: C.CacheRegions, spec: AttnSpec,
+                        pcfg: ParisKVConfig, signs: jax.Array,
+                        num_candidates: int, dist=None
+                        ) -> Tuple[jax.Array, C.LayerKVCache]:
+    """ParisKV decode path (paper Fig. 2 B.1→B.3) for one global layer.
+
+    Appends the token, runs two-stage retrieval over the Retrieval region,
+    attends over Sink ∪ Top-k ∪ Local/Buffer, and (caller-side) the promote
+    step refreshes metadata every update_interval steps.
+    """
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, regions.pos + 1)
+    pos = regions.pos + 1
+    layer_cache = C.decode_append(layer_cache, k_t, v_t, pos)
+
+    n_max = layer_cache.k.shape[1]
+    q_grp = q.reshape(b, G, H // G, hd)
+    k_ret = v_ret = None
+    if dist is not None:
+        # context-parallel hierarchical retrieval (DESIGN.md §8 #1)
+        mesh, seq_axes, batch_axes = dist
+        top_idx, k_ret, v_ret = distributed_retrieve_fetch(
+            q_grp, layer_cache, regions, pcfg, signs, mesh, seq_axes,
+            batch_axes)
+    else:
+        meta = E.KeyMetadata(layer_cache.meta_ids, layer_cache.meta_codes,
+                             layer_cache.meta_w)
+        valid = C.retrieval_valid_mask(n_max, regions, pcfg)  # (n_max,)
+        valid = jnp.broadcast_to(valid, (b, G, 1, n_max))
+        qt = E.encode_query(q_grp, pcfg, signs)
+        meta_b = jax.tree.map(lambda a: a[:, :, None], meta)  # (b,G,1,n,B)
+        res = R.retrieve(meta_b, qt, valid, pcfg, num_candidates, pcfg.top_k,
+                         hist_sample=pcfg.hist_sample)
+        top_idx = res.indices
+
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+    out = A.sparse_decode_attention(
+        q, layer_cache.k, layer_cache.v, top_idx, ws, pos,
+        regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        k_ret=k_ret, v_ret=v_ret)
+    return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], layer_cache

@@ -1,0 +1,210 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with ParisKV in latent space.
+
+Train/prefill use the *decompressed* form (materialize per-head K/V).
+Decode uses the *absorbed* form: the cache holds only the latent
+``c_kv ∈ R^{r}`` plus the shared decoupled-rope key ``k_r ∈ R^{dr}`` per
+token (r=512, dr=64 for v2-lite). Scores become
+
+    s(i) = (q_nope W_UK) · c_kv[i] + q_rope · k_r[i]
+
+so the *retrieval vector* is the concatenation [c_kv; k_r] ∈ R^{576} and the
+*query vector* is [q_eff; q_rope] — ParisKV indexes ONE latent cache shared
+by all heads (beyond-paper adaptation, DESIGN.md §4/§8: the paper's per-head
+scheme would decompress; indexing the latent keeps metadata 16× smaller and
+the estimator still targets the exact pre-softmax score).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as A
+from repro.core import cache as C
+from repro.core import encode as E
+from repro.core import retrieval as R
+from repro.core.config import ModelConfig, ParisKVConfig
+from repro.models.layers import rms_norm, rope, truncated_normal
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # queries: direct projection (v2-lite has no q-lora)
+        "wq": truncated_normal(ks[0], (d, H * (dn + dr))).astype(dtype),
+        # kv down-projection to latent + shared rope key
+        "w_dkv": truncated_normal(ks[1], (d, r + dr)).astype(dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+        # up-projections
+        "w_uk": truncated_normal(ks[2], (r, H * dn)).astype(dtype),
+        "w_uv": truncated_normal(ks[3], (r, H * dv)).astype(dtype),
+        "wo": truncated_normal(ks[4], (H * dv, d)).astype(dtype),
+    }
+
+
+def _split_q(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    H, dn, dr = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = (x @ p["wq"]).reshape(b, s, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def _latent_kv(p, x, cfg: ModelConfig, positions):
+    """→ (c_kv (b,s,r) normalized, k_rope (b,s,dr) rope'd)."""
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ckv = x @ p["w_dkv"]
+    c, k_r = ckv[..., :r], ckv[..., r:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_r = rope(k_r[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c, k_r
+
+
+def mla_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array) -> jax.Array:
+    """Decompressed causal attention for train/prefill."""
+    b, s, _ = x.shape
+    H, dn, dr, dv = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_n, q_r = _split_q(p, x, cfg)
+    q_r = rope(q_r, positions, cfg.rope_theta)
+    c, k_r = _latent_kv(p, x, cfg, positions)
+    k_n = (c @ p["w_uk"]).reshape(b, s, H, dn)
+    v = (c @ p["w_uv"]).reshape(b, s, H, dv)
+    q = jnp.concatenate([q_n, q_r], -1)
+    k = jnp.concatenate([k_n, jnp.broadcast_to(k_r[:, :, None], (b, s, H, dr))], -1)
+    sm = 1.0 / float(np.sqrt(dn + dr))
+    out = A.blockwise_causal_attention(
+        q, k, v, sm_scale=sm, q_chunk=min(1024, s), kv_chunk=min(2048, s))
+    return out.reshape(b, s, H * dv) @ p["wo"]
+
+
+# ------------------------------------------------------------- decode -------
+class MLACache(NamedTuple):
+    """Latent KV cache + ParisKV metadata over [c_kv; k_rope] (G=1)."""
+    latent: jax.Array      # (b, n_max, r + dr)
+    meta_ids: jax.Array    # (b, 1, n_max, B)
+    meta_codes: jax.Array  # (b, 1, n_max, B)
+    meta_w: jax.Array      # (b, 1, n_max, B)
+
+
+def init_mla_cache(batch: int, n_max: int, cfg: ModelConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    r = cfg.kv_lora_rank + cfg.rope_head_dim
+    B = cfg.pariskv.num_subspaces(r)
+    return MLACache(
+        latent=jnp.zeros((batch, n_max, r), dtype),
+        meta_ids=jnp.zeros((batch, 1, n_max, B), jnp.uint8),
+        meta_codes=jnp.zeros((batch, 1, n_max, B), jnp.uint32),
+        meta_w=jnp.zeros((batch, 1, n_max, B), jnp.float32),
+    )
+
+
+def mla_cache_spec(batch: int, n_max: int, cfg: ModelConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    r = cfg.kv_lora_rank + cfg.rope_head_dim
+    B = cfg.pariskv.num_subspaces(r)
+    sds = jax.ShapeDtypeStruct
+    return MLACache(
+        latent=sds((batch, n_max, r), dtype),
+        meta_ids=sds((batch, 1, n_max, B), jnp.uint8),
+        meta_codes=sds((batch, 1, n_max, B), jnp.uint32),
+        meta_w=sds((batch, 1, n_max, B), jnp.float32),
+    )
+
+
+def mla_prefill_cache(p: dict, x: jax.Array, cache: MLACache, cfg: ModelConfig,
+                      positions: jax.Array, signs: jax.Array) -> MLACache:
+    c, k_r = _latent_kv(p, x, cfg, positions)
+    lat = jnp.concatenate([c, k_r], -1)
+    meta = E.encode_keys(lat[:, None], cfg.pariskv, signs)  # head dim = 1
+    return MLACache(
+        latent=jax.lax.dynamic_update_slice_in_dim(
+            cache.latent, lat.astype(cache.latent.dtype), 0, 1),
+        meta_ids=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_ids, meta.centroid_ids, 0, 2),
+        meta_codes=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_codes, meta.codes, 0, 2),
+        meta_w=jax.lax.dynamic_update_slice_in_dim(
+            cache.meta_w, meta.weights, 0, 2),
+    )
+
+
+def mla_promote_block(mcache: MLACache, start: jax.Array, pcfg: ParisKVConfig,
+                      signs: jax.Array) -> MLACache:
+    """Encode metadata for latent rows [start, start+interval) (sliding-window
+    update for the latent cache)."""
+    blk = jax.lax.dynamic_slice_in_dim(
+        mcache.latent, start, pcfg.update_interval, axis=1)
+    meta = E.encode_keys(blk[:, None], pcfg, signs)
+    return mcache._replace(
+        meta_ids=jax.lax.dynamic_update_slice_in_dim(
+            mcache.meta_ids, meta.centroid_ids, start, axis=2),
+        meta_codes=jax.lax.dynamic_update_slice_in_dim(
+            mcache.meta_codes, meta.codes, start, axis=2),
+        meta_w=jax.lax.dynamic_update_slice_in_dim(
+            mcache.meta_w, meta.weights, start, axis=2),
+    )
+
+
+def mla_decode(p: dict, x_t: jax.Array, mcache: MLACache,
+               regions: C.CacheRegions, cfg: ModelConfig, signs: jax.Array,
+               num_candidates: int, use_pariskv: bool = True
+               ) -> Tuple[jax.Array, MLACache]:
+    """Absorbed-form decode with latent-space ParisKV retrieval."""
+    b, _ = x_t.shape
+    H, dn, dr, dv = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pcfg = cfg.pariskv
+    pos = regions.pos + 1
+
+    q = (x_t @ p["wq"]).reshape(b, H, dn + dr)
+    q_n, q_r = q[..., :dn], q[..., dn:]
+    pos_arr = jnp.broadcast_to(pos, (b, 1))
+    q_r = rope(q_r[:, None], pos_arr, cfg.rope_theta)[:, 0]
+
+    x3 = x_t[:, None]
+    c, k_r = _latent_kv(p, x3, cfg, pos_arr)
+    lat_t = jnp.concatenate([c, k_r], -1)[:, 0]              # (b, r+dr)
+    mcache = mcache._replace(latent=jax.lax.dynamic_update_slice_in_dim(
+        mcache.latent, lat_t[:, None].astype(mcache.latent.dtype), pos, 1))
+
+    # absorb W_UK into the query:  q_eff = q_nope @ W_UK^T(head)  ∈ R^r
+    w_uk = p["w_uk"].reshape(r, H, dn)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_n.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    q_lat = jnp.concatenate([q_eff, q_r.astype(jnp.float32)], -1)  # (b, H, r+dr)
+
+    n_max = mcache.latent.shape[1]
+    sm = 1.0 / float(np.sqrt(dn + dr))
+
+    if use_pariskv:
+        meta = E.KeyMetadata(mcache.meta_ids, mcache.meta_codes, mcache.meta_w)
+        valid = jnp.broadcast_to(C.retrieval_valid_mask(n_max, regions, pcfg),
+                                 (b, 1, 1, n_max))
+        qt = E.encode_query(q_lat[:, None], pcfg, signs)     # group dim = 1
+        meta_b = jax.tree.map(lambda a: a[:, :, None], meta)
+        res = R.retrieve(meta_b, qt, valid, pcfg, num_candidates,
+                         pcfg.top_k, hist_sample=pcfg.hist_sample)
+        idx = res.indices                                     # (b, 1, H, k)
+        lat4 = mcache.latent[..., None, :]                    # (b, n, 1, r+dr)
+        W = C.window_size(pcfg)
+        ws = jnp.maximum(pos + 1 - W, 0)
+        attn_lat = A.sparse_decode_attention(
+            q_lat.astype(mcache.latent.dtype), lat4, lat4, idx, ws, pos,
+            regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
+            sm_scale=sm)                                      # (b, H, r+dr)
+    else:
+        lat4 = mcache.latent[..., None, :]
+        attn_lat = A.dense_decode_attention(
+            q_lat.astype(mcache.latent.dtype), lat4, lat4, pos, sm_scale=sm)
+
+    # decompress the attended latent through W_UV, concat heads, out-proj.
+    attn_c = attn_lat[..., :r]                                # (b, H, r)
+    w_uv = p["w_uv"].reshape(r, H, dv)
+    out = jnp.einsum("bhr,rhv->bhv", attn_c.astype(jnp.float32),
+                     w_uv.astype(jnp.float32))
+    return out.reshape(b, H * dv).astype(x_t.dtype) @ p["wo"], mcache

@@ -1,0 +1,360 @@
+"""Serving-side forward passes: cache construction, prefill, decode step.
+
+The decode cache mirrors the stage structure of models.model: one pytree per
+stage, stacked over the stage's repeats, with a per-LayerDef cache kind:
+
+  attn + ParisKV      → core.cache.LayerKVCache (full store + metadata)
+  attn sliding-window → (k, v) ring buffers of the window size
+  cross (vlm/whisper) → (k_media, v_media), static after prefill
+  mla                 → models.mla.MLACache (latent + metadata)
+  ssm                 → models.ssm.SSMCache (O(1) recurrent state)
+  hybrid              → {"kv": LayerKVCache, "ssm": SSMCache}
+
+All layers share one CacheRegions (positions advance in lockstep); the
+sliding-window metadata promotion triggers globally and each ParisKV layer
+encodes its own block (amortized update, paper §4.2.1/D.2).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as CC
+from repro.core import srht
+from repro.core.config import ModelConfig, ParisKVConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.model import (LayerDef, StageDef, _attn_spec, _dtype,
+                                _embed, _unembed, encoder_fwd, layer_plan)
+
+
+class ServeState(NamedTuple):
+    caches: Any              # list of per-stage stacked cache pytrees
+    regions: CC.CacheRegions
+
+
+def rotation_signs(cfg: ModelConfig) -> jax.Array:
+    pcfg = cfg.pariskv
+    return jnp.asarray(srht.rademacher_signs(
+        pcfg.padded_dim(cfg.retrieval_dim()), pcfg.srht_seed))
+
+
+def _ring_len(ld: LayerDef, n_max: int) -> int:
+    return min(ld.attn.sliding_window, n_max)
+
+
+def _layer_cache_spec(cfg: ModelConfig, ld: LayerDef, batch: int, n_max: int,
+                      as_spec: bool) -> Any:
+    dt = _dtype(cfg)
+    pcfg = cfg.pariskv
+    mk = jax.ShapeDtypeStruct if as_spec else (
+        lambda shape, dtype: jnp.zeros(shape, dtype))
+
+    def kv_cache():
+        if as_spec:
+            return CC.cache_spec(batch, n_max, cfg.num_kv_heads, cfg.head_dim,
+                                 pcfg, dt)
+        return CC.init_layer_cache(batch, n_max, cfg.num_kv_heads,
+                                   cfg.head_dim, pcfg, dt)
+
+    out: Dict[str, Any] = {}
+    if ld.mixer == "attn":
+        if ld.use_pariskv:
+            out["kv"] = kv_cache()
+        else:
+            w = _ring_len(ld, n_max)
+            g, hd = cfg.num_kv_heads, cfg.head_dim
+            out["kv"] = (mk((batch, w, g, hd), dt), mk((batch, w, g, hd), dt))
+    elif ld.mixer == "cross":
+        t = cfg.num_media_tokens
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        out["media_kv"] = (mk((batch, t, g, hd), dt), mk((batch, t, g, hd), dt))
+    elif ld.mixer == "mla":
+        out["kv"] = (MLA.mla_cache_spec(batch, n_max, cfg, dt) if as_spec
+                     else MLA.init_mla_cache(batch, n_max, cfg, dt))
+    elif ld.mixer == "ssm":
+        out["ssm"] = (SSM.ssm_cache_spec(batch, cfg, dt) if as_spec
+                      else SSM.init_ssm_cache(batch, cfg, dt))
+    elif ld.mixer == "hybrid":
+        out["kv"] = kv_cache()
+        out["ssm"] = (SSM.ssm_cache_spec(batch, cfg, dt) if as_spec
+                      else SSM.init_ssm_cache(batch, cfg, dt))
+    if ld.cross:  # whisper decoder cross-attn over encoder output
+        t = cfg.encoder_seq
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        out["media_kv"] = (mk((batch, t, g, hd), dt), mk((batch, t, g, hd), dt))
+    return out
+
+
+def _stack_spec(tree, repeat: int, as_spec: bool):
+    if as_spec:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((repeat,) + s.shape, s.dtype), tree)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (repeat,) + a.shape), tree)
+
+
+def make_caches(cfg: ModelConfig, batch: int, n_max: int,
+                as_spec: bool = False):
+    """Build (or spec) the full decode cache for every stage."""
+    caches = []
+    for stage in layer_plan(cfg):
+        stage_cache = {
+            f"l{i}": _stack_spec(
+                _layer_cache_spec(cfg, ld, batch, n_max, as_spec),
+                stage.repeat, as_spec)
+            for i, ld in enumerate(stage.layers)}
+        caches.append(stage_cache)
+    return caches
+
+
+def regions_spec(as_spec: bool = False) -> CC.CacheRegions:
+    if as_spec:
+        s = jax.ShapeDtypeStruct((), jnp.int32)
+        return CC.CacheRegions(pos=s, enc_end=s)
+    return CC.CacheRegions(pos=jnp.int32(-1), enc_end=jnp.int32(0))
+
+
+# ------------------------------------------------------------- prefill -----
+def _layer_prefill(p, x, ld: LayerDef, cfg: ModelConfig, positions, media,
+                   cache, signs):
+    """Layer forward over the full prompt; fills this layer's cache."""
+    pcfg = cfg.pariskv
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    if ld.mixer == "attn":
+        y, k_new, v_new = L.attn_prefill(p["attn"], h, ld.attn, positions)
+        if ld.use_pariskv:
+            kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs)
+            cache = {**cache, "kv": kvc}
+        else:
+            w = cache["kv"][0].shape[1]
+            S = k_new.shape[1]
+            # ring layout: token t sits at slot t % w
+            tail_k, tail_v = k_new[:, -w:], v_new[:, -w:]
+            slots = (jnp.arange(S - w, S) % w) if S >= w else jnp.arange(S) % w
+            kc = cache["kv"][0].at[:, slots].set(
+                tail_k.astype(cache["kv"][0].dtype))
+            vc = cache["kv"][1].at[:, slots].set(
+                tail_v.astype(cache["kv"][1].dtype))
+            cache = {**cache, "kv": (kc, vc)}
+    elif ld.mixer == "mla":
+        y = MLA.mla_train(p["attn"], h, cfg, positions)
+        mc = MLA.mla_prefill_cache(p["attn"], h, cache["kv"], cfg, positions,
+                                   signs)
+        cache = {**cache, "kv": mc}
+    elif ld.mixer == "cross":
+        y = jnp.tanh(p["cross_gate"]) * L.attn_cross(p["attn"], h, media, ld.attn)
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        b, t = media.shape[0], media.shape[1]
+        km = (media @ p["attn"]["wk"]).reshape(b, t, g, hd)
+        vm = (media @ p["attn"]["wv"]).reshape(b, t, g, hd)
+        cache = {**cache, "media_kv": (km.astype(_dtype(cfg)),
+                                       vm.astype(_dtype(cfg)))}
+    elif ld.mixer == "ssm":
+        y, sc = SSM.ssm_prefill(p["ssm"], h, cfg)
+        cache = {**cache, "ssm": sc}
+    elif ld.mixer == "hybrid":
+        ya, k_new, v_new = L.attn_prefill(p["attn"], h, ld.attn, positions)
+        ys, sc = SSM.ssm_prefill(p["ssm"], h, cfg)
+        kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs)
+        y = 0.5 * (ya + ys)
+        cache = {**cache, "kv": kvc, "ssm": sc}
+    x = x + y.astype(x.dtype)
+    if ld.cross:
+        h = L.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        x = x + L.attn_cross(p["cross"], h, media, ld.attn).astype(x.dtype)
+        g, hd = cfg.num_kv_heads, cfg.head_dim
+        b, t = media.shape[0], media.shape[1]
+        km = (media @ p["cross"]["wk"]).reshape(b, t, g, hd)
+        vm = (media @ p["cross"]["wv"]).reshape(b, t, g, hd)
+        cache = {**cache, "media_kv": (km.astype(_dtype(cfg)),
+                                       vm.astype(_dtype(cfg)))}
+    if ld.ffn != "none":
+        h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        if ld.ffn == "moe":
+            y, _ = MOE.moe_fwd(p["moe"], h, cfg.experts_per_token)
+        else:
+            y = L.mlp_fwd(p["mlp"], h)
+        x = x + y.astype(x.dtype)
+    return x, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
+            media: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, ServeState]:
+    """Process the prompt; returns last-position logits + populated caches."""
+    b, S = tokens.shape
+    signs = rotation_signs(cfg)
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (b, S))
+    if cfg.family == "audio":
+        media = encoder_fwd(params, cfg, media)
+    caches = make_caches(cfg, b, n_max)
+    new_caches = []
+    for stage, sp, sc in zip(layer_plan(cfg), params["stages"], caches):
+
+        def body(x, slices):
+            p_slice, c_slice = slices
+            new_c = {}
+            for i, ld in enumerate(stage.layers):
+                x, new_c[f"l{i}"] = _layer_prefill(
+                    p_slice[f"l{i}"], x, ld, cfg, positions, media,
+                    c_slice[f"l{i}"], signs)
+            return x, new_c
+
+        x, filled = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(filled)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1])
+    pcfg = cfg.pariskv
+    regions = CC.CacheRegions(
+        pos=jnp.int32(S - 1),
+        enc_end=jnp.int32(max(min(pcfg.sink_size, S), S - pcfg.local_size)))
+    return logits, ServeState(new_caches, regions)
+
+
+# --------------------------------------------------------------- decode ----
+def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
+                  signs, num_candidates: int, will_promote, media=None,
+                  dist=None):
+    pcfg = cfg.pariskv
+    h = L.rms_norm(x_t[:, None], p["norm_attn"], cfg.norm_eps)[:, 0]
+    pos = regions.pos + 1
+    if ld.mixer == "attn":
+        if ld.use_pariskv:
+            y, kvc = L.attn_decode_pariskv(
+                p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
+                num_candidates, dist=dist)
+            if os.environ.get("REPRO_NO_PROMOTE") != "1":  # cost bisection
+                kvc = jax.lax.cond(
+                    will_promote,
+                    lambda c: CC.promote_block(c, regions.enc_end, pcfg,
+                                               signs),
+                    lambda c: c, kvc)
+            cache = {**cache, "kv": kvc}
+        elif isinstance(cache["kv"], CC.LayerKVCache):
+            # baseline full-attention decode over the ParisKV store
+            y, kv = L.attn_decode_dense(
+                p["attn"], h, (cache["kv"].k, cache["kv"].v), pos, ld.attn)
+            cache = {**cache,
+                     "kv": cache["kv"]._replace(k=kv[0], v=kv[1])}
+        else:
+            y, kv = L.attn_decode_dense(p["attn"], h, cache["kv"], pos, ld.attn)
+            cache = {**cache, "kv": kv}
+    elif ld.mixer == "mla":
+        y, mc = MLA.mla_decode(p["attn"], h, cache["kv"], regions, cfg, signs,
+                               num_candidates)
+        mc = jax.lax.cond(
+            will_promote,
+            lambda c: MLA.mla_promote_block(c, regions.enc_end, pcfg, signs),
+            lambda c: c, mc)
+        cache = {**cache, "kv": mc}
+    elif ld.mixer == "cross":
+        km, vm = cache["media_kv"]
+        q = (h @ p["attn"]["wq"]).reshape(h.shape[0], ld.attn.num_heads,
+                                          ld.attn.head_dim)
+        from repro.core.attention import full_attention
+        out = full_attention(q[:, None], km, vm, None,
+                             sm_scale=ld.attn.scale())[:, 0]
+        y = jnp.tanh(p["cross_gate"]) * (
+            out.reshape(h.shape[0], -1) @ p["attn"]["wo"])
+    elif ld.mixer == "ssm":
+        y, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        cache = {**cache, "ssm": sc}
+    elif ld.mixer == "hybrid":
+        ya, kvc = L.attn_decode_pariskv(
+            p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
+            num_candidates, dist=dist)
+        kvc = jax.lax.cond(
+            will_promote,
+            lambda c: CC.promote_block(c, regions.enc_end, pcfg, signs),
+            lambda c: c, kvc)
+        ys, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        y = 0.5 * (ya + ys)
+        cache = {**cache, "kv": kvc, "ssm": sc}
+    x_t = x_t + y.astype(x_t.dtype)
+    if ld.cross:
+        h = L.rms_norm(x_t[:, None], p["norm_cross"], cfg.norm_eps)[:, 0]
+        km, vm = cache["media_kv"]
+        from repro.core.attention import full_attention
+        q = (h @ p["cross"]["wq"]).reshape(h.shape[0], ld.attn.num_heads,
+                                           ld.attn.head_dim)
+        out = full_attention(q[:, None], km, vm, None,
+                             sm_scale=ld.attn.scale())[:, 0]
+        x_t = x_t + (out.reshape(h.shape[0], -1) @ p["cross"]["wo"]).astype(x_t.dtype)
+    if ld.ffn != "none":
+        h = L.rms_norm(x_t[:, None], p["norm_mlp"], cfg.norm_eps)[:, 0]
+        if ld.ffn == "moe":
+            y = MOE.moe_decode(p["moe"], h, cfg.experts_per_token)
+        else:
+            y = L.mlp_fwd(p["mlp"], h)
+        x_t = x_t + y.astype(x_t.dtype)
+    return x_t, cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
+                use_pariskv: bool = True, dist=None
+                ) -> Tuple[jax.Array, ServeState]:
+    """One decode step: token (b,) int32 → (logits (b, v), new state).
+
+    dist: optional (mesh, seq_axes, batch_axes) — enables the context-
+    parallel hierarchical retrieval (EXPERIMENTS §Perf E1/E2) on ParisKV
+    layers when the cache is sequence-sharded."""
+    pcfg = cfg.pariskv
+    signs = rotation_signs(cfg)
+    x_t = _embed(params, cfg, token[:, None])[:, 0]
+    regions = state.regions
+    will_promote = CC.promote_trigger(regions, pcfg)
+    n_max = _cache_n_max(cfg, state.caches)
+    num_candidates = pcfg.candidate_count(n_max)
+
+    new_caches = []
+    for stage, sp, sc in zip(layer_plan(cfg), params["stages"], state.caches):
+
+        def body(x_t, slices):
+            p_slice, c_slice = slices
+            new_c = {}
+            for i, ld in enumerate(stage.layers):
+                ld_eff = ld if use_pariskv else dataclasses_replace_nopk(ld)
+                x_t, new_c[f"l{i}"] = _layer_decode(
+                    p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
+                    regions, signs, num_candidates, will_promote, dist=dist)
+            return x_t, new_c
+
+        x_t, filled = jax.lax.scan(body, x_t, (sp, sc))
+        new_caches.append(filled)
+
+    x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+    logits = _unembed(params, cfg, x_t)
+    new_regions = CC.CacheRegions(
+        pos=regions.pos + 1,
+        enc_end=jnp.where(will_promote,
+                          regions.enc_end + pcfg.update_interval,
+                          regions.enc_end))
+    return logits, ServeState(new_caches, new_regions)
+
+
+def dataclasses_replace_nopk(ld: LayerDef) -> LayerDef:
+    import dataclasses as _dc
+    return _dc.replace(ld, use_pariskv=False)
+
+
+def _cache_n_max(cfg: ModelConfig, caches) -> int:
+    """Recover the static n_max from whichever cache carries a full KV store
+    (ring buffers are window-sized and are skipped)."""
+    for stage_cache in caches:
+        for lc in stage_cache.values():
+            if "kv" in lc:
+                kv = lc["kv"]
+                if isinstance(kv, CC.LayerKVCache):
+                    return kv.k.shape[2]  # (repeat, b, n, G, hd) stacked
+                if isinstance(kv, MLA.MLACache):
+                    return kv.latent.shape[2]
+    return 0

@@ -1,0 +1,233 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (quadratic intra-chunk
+"attention-like" term + linear inter-chunk state recurrence); decode is the
+O(1)-per-step recurrence
+
+    h_t = exp(dt·A) h_{t-1} + dt · B_t ⊗ x_t ,   y_t = C_t · h_t + D x_t.
+
+ParisKV is *inapplicable* here (no KV cache — DESIGN.md §4); mamba2 runs
+`long_500k` natively, which is why it is one of the assigned stress archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.layers import rms_norm, truncated_normal
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": truncated_normal(ks[0], (d, 2 * d_in + 2 * g * n + nh)).astype(dtype),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                   std=0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus^-1(~0.12)
+        "out_norm": jnp.ones((d_in,), dtype),
+        "w_out": truncated_normal(ks[2], (d_in, d)).astype(dtype),
+    }
+
+
+def _split_in(p, cfg, xz):
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    z = xz[..., :d_in]
+    xBC = xz[..., d_in:d_in + d_in + 2 * g * n]
+    dt = xz[..., -nh:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d along time. xBC: (b, l, c); w: (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def segsum_exp(a: jax.Array) -> jax.Array:
+    """L[i, j] = exp(Σ_{j<t≤i} a_t) for i ≥ j else 0. a: (..., L)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]          # Σ_{j<t≤i}
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: upper-triangle diffs are positive-large and would
+    # overflow, poisoning gradients through the where (0·inf = NaN).
+    diff = jnp.where(mask, diff, -1e30)
+    return jnp.exp(diff)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                Cm: jax.Array, chunk: int = 256
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (Mamba-2 paper Alg. 1 / "ssd_minimal").
+
+    x: (b, l, h, p)   dt: (b, l, h) (post-softplus)
+    A: (h,) negative  B, Cm: (b, l, g, n) (g groups broadcast over heads)
+    → y (b, l, h, p), final_state (b, h, p, n)
+    """
+    b, l, h, p_dim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    xc = x.reshape(b, nc, chunk, h, p_dim)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                    # (b, nc, c, h) ≤ 0
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic, "attention-like"): Y = (C B^T ∘ L) (dt x)
+    Lmat = segsum_exp(jnp.moveaxis(dA, 2, -1))           # (b, nc, h, c, c)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Cc, Bc) * Lmat
+    y_intra = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", scores, dtc, xc)
+
+    # chunk-final states: S_z = Σ_j exp(dA_cs[end]-dA_cs[j]) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b, nc, c, h)
+    S = jnp.einsum("bzjh,bzjh,bzjhn,bzjhp->bzhpn",
+                   decay_to_end, dtc, Bc, xc)            # (b, nc, h, p, n)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b, nc, h)
+
+    def scan_fn(carry, inp):
+        S_z, gmma = inp
+        new = carry * gmma[..., None, None] + S_z
+        return new, carry                                # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p_dim, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=True if os.environ.get("REPRO_UNROLL_ATTN") == "1" else 1)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b, nc, h, p, n)
+
+    # inter-chunk contribution: y_j += C_j · exp(dA_cs[j]) · prev_state
+    state_decay = jnp.exp(dA_cs)                         # (b, nc, c, h)
+    y_inter = jnp.einsum("bzihn,bzih,bzhpn->bzihp",
+                         Cc, state_decay, prev_states)
+    y = (y_intra + y_inter).reshape(b, l, h, p_dim)
+    return y, final
+
+
+def ssd_recurrent_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                       A: jax.Array, B_t: jax.Array, C_t: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h);
+    B_t/C_t: (b, g, n) → (y_t (b, h, p), new_state)."""
+    h, g = x_t.shape[1], B_t.shape[1]
+    rep = h // g
+    B_t = jnp.repeat(B_t, rep, axis=1)
+    C_t = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(dt_t * A[None, :])[..., None, None]
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt_t, B_t, x_t)
+    new_state = state * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C_t)
+    return y, new_state
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array     # (b, h, p, n)
+    conv_buf: jax.Array  # (b, k-1, conv_dim) — last k-1 pre-conv inputs
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SSMCache:
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    return SSMCache(
+        state=jnp.zeros((batch, nh, hp, n), jnp.float32),
+        conv_buf=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype))
+
+
+def ssm_cache_spec(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SSMCache:
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    sds = jax.ShapeDtypeStruct
+    return SSMCache(state=sds((batch, nh, hp, n), jnp.float32),
+                    conv_buf=sds((batch, cfg.ssm_conv_width - 1, conv_dim), dtype))
+
+
+def _ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, chunk: int):
+    b, l, d = x.shape
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    xz = x @ p["w_in"]
+    z, xBC, dt = _split_in(p, cfg, xz)
+    xBC_act = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC_act[..., :d_in].reshape(b, l, nh, hp)
+    Bm = xBC_act[..., d_in:d_in + g * n].reshape(b, l, g, n)
+    Cm = xBC_act[..., d_in + g * n:].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ck = min(chunk, l)
+    y, final_state = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                                 Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), ck)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], final_state, xBC
+
+
+def ssm_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              chunk: int = 256) -> jax.Array:
+    """Full-sequence SSD block. x: (b, l, d) → (b, l, d)."""
+    out, _, _ = _ssm_apply(p, x, cfg, chunk)
+    return out
+
+
+def ssm_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
+                chunk: int = 256) -> Tuple[jax.Array, SSMCache]:
+    """Full-sequence SSD that also returns the decode cache (final recurrent
+    state + conv ring tail = last k-1 *pre-activation* conv inputs)."""
+    out, final_state, xBC = _ssm_apply(p, x, cfg, chunk)
+    k = cfg.ssm_conv_width
+    tail = xBC[:, -(k - 1):]
+    return out, SSMCache(final_state, tail)
+
+
+def ssm_decode(p: dict, x_t: jax.Array, cache: SSMCache, cfg: ModelConfig
+               ) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent step. x_t: (b, d)."""
+    b, d = x_t.shape
+    d_in, nh, hp, n, g = ssm_dims(cfg)
+    xz = x_t @ p["w_in"]
+    z, xBC_t, dt = _split_in(p, cfg, xz[:, None])
+    xBC_t = xBC_t[:, 0]
+    # causal conv over ring buffer
+    window = jnp.concatenate([cache.conv_buf, xBC_t[:, None]], 1)  # (b, k, c)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xBC_a = jax.nn.silu(conv)
+    new_buf = window[:, 1:]
+
+    xs = xBC_a[..., :d_in].reshape(b, nh, hp)
+    B_t = xBC_a[..., d_in:d_in + g * n].reshape(b, g, n)
+    C_t = xBC_a[..., d_in + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_recurrent_step(cache.state, xs.astype(jnp.float32),
+                                      dt, A, B_t, C_t)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(b, d_in).astype(x_t.dtype) * jax.nn.silu(z[:, 0])
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], SSMCache(new_state, new_buf.astype(cache.conv_buf.dtype))

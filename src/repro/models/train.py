@@ -1,0 +1,44 @@
+"""Training step: loss, grads, AdamW update — pure function of (params, opt, batch)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.model import forward_train
+from repro.optim import AdamWState, adamw_update, clip_by_global_norm, cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def lm_loss(params, cfg: ModelConfig, tokens: jax.Array, labels: jax.Array,
+            media: Optional[jax.Array] = None, remat: bool = True
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_train(params, cfg, tokens, media, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    loss = nll.mean()
+    total = loss + cfg.router_aux_loss_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def train_step(state: TrainState, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, peak_lr: float = 3e-4, warmup: int = 100,
+               total_steps: int = 10_000, remat: bool = True
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    media = batch.get("media")
+    (_, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        state.params, cfg, batch["tokens"], batch["labels"], media,
+        remat=remat)
+    grads, gnorm = clip_by_global_norm(grads, 1.0)
+    lr = cosine_schedule(state.opt.step, peak_lr, warmup, total_steps)
+    params, opt = adamw_update(state.params, grads, state.opt, lr)
+    metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+    return TrainState(params, opt), metrics

@@ -1,0 +1,104 @@
+"""Batched serving engine over the ParisKV decode path.
+
+Lifecycle (paper Fig. 2): requests queue → padded-batch *prefill* (KV +
+metadata build, full-precision store conceptually offloaded) → lockstep
+*decode* with two-stage retrieval per step → detokenized completions.
+
+Scheduling model: static max_batch with wave-style continuous batching —
+new requests join at wave boundaries (positions advance in lockstep per
+wave, which is what keeps a single CacheRegions per wave; per-request
+position tracking is listed in DESIGN.md §8 as future work). Prompts are
+right-aligned by padding to the wave's max prompt length so Sink/Local
+regions line up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models import serve as SV
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (s,) int32
+    max_new_tokens: int = 32
+    media: Optional[np.ndarray] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    ttft_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ServingEngine:
+    """Drives prefill/decode for waves of requests."""
+
+    def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
+                 max_batch: int = 8, greedy: bool = True, use_pariskv=True):
+        self.cfg = cfg
+        self.params = params
+        self.n_max = n_max
+        self.max_batch = max_batch
+        self.greedy = greedy
+        self.use_pariskv = use_pariskv
+        self._prefill = jax.jit(
+            lambda p, t, m: SV.prefill(p, cfg, t, n_max, m),
+            static_argnums=())
+        self._decode = jax.jit(
+            lambda p, tok, st: SV.decode_step(p, cfg, tok, st,
+                                              use_pariskv=use_pariskv))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _pad_prompts(self, reqs: List[Request]):
+        s = max(len(r.prompt) for r in reqs)
+        s = max(s, 8)
+        toks = np.zeros((len(reqs), s), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, s - len(r.prompt):] = r.prompt   # right-align
+        return jnp.asarray(toks)
+
+    def run(self) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        done: List[Request] = []
+        while self.queue:
+            wave = self.queue[:self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            done.extend(self._run_wave(wave))
+        return done
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        b = len(wave)
+        toks = self._pad_prompts(wave)
+        media = None
+        if wave[0].media is not None:
+            media = jnp.asarray(np.stack([r.media for r in wave]))
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params, toks, media)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+        for r in wave:
+            r.ttft_s = t1 - t0
+
+        max_new = max(r.max_new_tokens for r in wave)
+        outs = np.zeros((b, max_new), np.int32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for step in range(max_new):
+            outs[:, step] = np.asarray(tok)
+            logits, state = self._decode(self.params, tok, state)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        t2 = time.perf_counter()
+        for i, r in enumerate(wave):
+            r.output = outs[i, :r.max_new_tokens]
+            r.decode_s = (t2 - t1)
+        return wave

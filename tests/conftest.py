@@ -1,0 +1,16 @@
+"""Suite-level hygiene: this test suite jit-compiles hundreds of programs
+(10 architectures × train/prefill/decode + kernels); executables accumulate
+in the process and eventually starve LLVM of memory on the 35 GB container.
+Dropping JAX's compilation caches after each module keeps RSS bounded.
+"""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

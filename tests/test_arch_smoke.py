@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned arch instantiates a REDUCED variant of the same family
+(≤3 layers, d_model ≤ 512, ≤4 experts) and runs: (1) one forward/train step
+asserting output shapes + finiteness, and (2) prefill + a few decode steps
+through the ParisKV serving path, asserting logits shape + no NaNs and
+decode/prefill consistency where cheap.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import media_stub
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.models.train import TrainState, train_step
+from repro.optim import adamw_init
+
+ARCHS = list(configs.ARCHS)
+SEQ = 64
+BATCH = 2
+N_MAX = 256
+
+
+def _batch(cfg, seq=SEQ, batch=BATCH, seed=0):
+    rng = np.random.RandomState(seed)
+    toks = rng.randint(0, cfg.vocab_size, size=(batch, seq + 1)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.family == "vlm":
+        out["media"] = jnp.asarray(
+            media_stub(batch, cfg.num_media_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        out["media"] = jnp.asarray(
+            media_stub(batch, cfg.encoder_seq, cfg.d_model))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = configs.smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = M.forward_train(params, cfg, batch["tokens"],
+                                  batch.get("media"), remat=False)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    state = TrainState(params, adamw_init(params))
+    state, metrics = train_step(state, batch, cfg, remat=False)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode(arch):
+    cfg = configs.smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, seed=1)
+    media = batch.get("media")
+    logits_p, state = SV.prefill(params, cfg, batch["tokens"], N_MAX, media)
+    assert logits_p.shape == (BATCH, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits_p.astype(jnp.float32)).all())
+
+    tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits_d, state = SV.decode_step(params, cfg, tok, state)
+        assert logits_d.shape == (BATCH, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits_d.astype(jnp.float32)).all())
+        tok = jnp.argmax(logits_d, -1).astype(jnp.int32)
+    assert int(state.regions.pos) == SEQ - 1 + 3
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-780m", "gemma3-12b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode logits ≈ full-forward logits at the same
+    positions (validates cache correctness end-to-end). ParisKV layers are
+    near-exact here because prompts are short enough that the dense window
+    covers (or retrieval recovers) everything."""
+    cfg = configs.smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg, seq=48, seed=2)
+    toks = batch["tokens"]
+    full_logits, _ = M.forward_train(params, cfg, toks, batch.get("media"),
+                                     remat=False)
+
+    split = 40
+    _, state = SV.prefill(params, cfg, toks[:, :split], N_MAX,
+                          batch.get("media"))
+    for t in range(split, 48):
+        logits_d, state = SV.decode_step(params, cfg, toks[:, t], state)
+        want = full_logits[:, t].astype(jnp.float32)
+        got = logits_d.astype(jnp.float32)
+        # compare top-1 predictions + correlation (bf16 params ⇒ loose atol)
+        corr = np.corrcoef(np.asarray(got).ravel(), np.asarray(want).ravel())[0, 1]
+        assert corr > 0.98, (t, corr)
+
+
+def test_full_configs_construct():
+    """Full (non-smoke) configs build their layer plans and param math."""
+    for arch in ARCHS:
+        cfg = configs.get(arch)
+        plan = M.layer_plan(cfg)
+        n_layers = sum(len(s.layers) * s.repeat for s in plan)
+        assert n_layers == cfg.num_layers, (arch, n_layers, cfg.num_layers)
+        assert cfg.num_params() > 0
+        assert cfg.active_params_per_token() <= cfg.num_params() * 1.001
+
+
+def test_param_counts_roughly_match_known_sizes():
+    known = {"stablelm-1.6b": 1.6e9, "qwen2-1.5b": 1.5e9,
+             "gemma2-27b": 27e9, "grok-1-314b": 314e9,
+             "mamba2-780m": 780e6, "deepseek-v2-lite-16b": 16e9,
+             "gemma3-12b": 12e9, "hymba-1.5b": 1.5e9}
+    for arch, want in known.items():
+        got = configs.get(arch).num_params()
+        assert 0.5 * want < got < 1.8 * want, (arch, got, want)

@@ -1,0 +1,116 @@
+"""Integration tests: cache regions, sliding-window update, sparse attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CacheRegions, ParisKVConfig, decode_append,
+                        dense_decode_attention, encode_query,
+                        init_layer_cache, maybe_promote, prefill_write,
+                        retrieval_valid_mask, retrieve, sparse_decode_attention,
+                        srht, window_size)
+from repro.core.encode import KeyMetadata
+
+CFG = ParisKVConfig(sink_size=16, local_size=64, update_interval=32,
+                    top_k=32, min_candidates=64)
+D, G, H = 64, 2, 4
+SIGNS = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D), CFG.srht_seed))
+
+
+def test_prefill_sets_regions():
+    cache = init_layer_cache(1, 1024, G, D, CFG)
+    S = 512
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, S, G, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, S, G, D))
+    cache, regions = prefill_write(cache, k, v, CFG, SIGNS)
+    assert int(regions.pos) == S - 1
+    assert int(regions.enc_end) == S - CFG.local_size
+    np.testing.assert_allclose(np.asarray(cache.k[0, :S], np.float32),
+                               np.asarray(k[0], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_update_promotes_blocks():
+    cache = init_layer_cache(1, 2048, G, D, CFG)
+    S = 256
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, S, G, D))
+    cache, regions = prefill_write(cache, k, k, CFG, SIGNS)
+    enc0 = int(regions.enc_end)
+    W = window_size(CFG)
+    rng = jax.random.PRNGKey(2)
+    promoted = 0
+    for step in range(W + 8):
+        rng, sub = jax.random.split(rng)
+        kt = jax.random.normal(sub, (1, G, D))
+        pos = regions.pos + 1
+        cache = decode_append(cache, kt, kt, pos)
+        regions = regions._replace(pos=pos)
+        cache, regions = maybe_promote(cache, regions, CFG, SIGNS)
+        if int(regions.enc_end) > enc0 + promoted * CFG.update_interval:
+            promoted += 1
+    assert promoted >= 1
+    # window invariant: dense span never exceeds W
+    assert int(regions.pos) + 1 - int(regions.enc_end) < W
+    # metadata for the promoted block is non-trivial (weights > 0)
+    w = np.asarray(cache.meta_w[0, :, enc0:enc0 + CFG.update_interval])
+    assert (w > 0).all()
+
+
+def test_sparse_attention_approaches_full_attention():
+    """Eq. (3) ≈ Eq. (1) when retrieval covers the heavy keys. Attention on
+    iid-random keys is nearly uniform (no sparse method can match it with a
+    small budget), so we plant heavy hitters aligned with each query inside
+    the Retrieval region — the regime the paper's sparsity assumption (§1)
+    describes."""
+    n_max, S = 1024, 768
+    cache = init_layer_cache(1, n_max, G, D, CFG)
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, H, D)) * 1.5
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, S, G, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, S, G, D))
+    # plant 12 heavy keys per kv head in [100, 400) ⊂ retrieval region
+    qg = np.asarray(q.reshape(1, G, H // G, D))
+    k = np.array(k)  # writable copy
+    rng = np.random.RandomState(3)
+    for g in range(G):
+        for h in range(H // G):
+            for spot in range(12):
+                pos = 100 + 40 * spot + 2 * g + h
+                k[0, pos, g] = (5.0 * qg[0, g, h]
+                                / np.linalg.norm(qg[0, g, h]))
+    k = jnp.asarray(k)
+    cache, regions = prefill_write(cache, k, v, CFG, SIGNS)
+
+    meta = KeyMetadata(cache.meta_ids, cache.meta_codes, cache.meta_w)
+    valid = retrieval_valid_mask(n_max, regions, CFG)[None, None]
+    qg = encode_query(q.reshape(1, G, H // G, D), CFG, SIGNS)
+    qt = jax.tree.map(lambda a: a, qg)
+    meta_b = jax.tree.map(lambda a: a[:, :, None], meta)  # broadcast head dim
+    res = retrieve(meta_b, qt, valid[:, :, None], CFG, 256, CFG.top_k)
+
+    W = window_size(CFG)
+    ws = jnp.maximum(regions.pos + 1 - W, 0)
+    sm = 1.0 / np.sqrt(D)
+    out = sparse_decode_attention(q, cache.k, cache.v, res.indices, ws,
+                                  regions.pos, regions.enc_end,
+                                  sink_size=CFG.sink_size, window_size=W,
+                                  sm_scale=sm)
+    ref = dense_decode_attention(q, cache.k, cache.v, regions.pos, sm_scale=sm)
+    # sparse output should be close to full output (top-k covers the mass)
+    cos = jnp.sum(out * ref, -1) / (jnp.linalg.norm(out, axis=-1)
+                                    * jnp.linalg.norm(ref, axis=-1))
+    assert float(cos.min()) > 0.9, np.asarray(cos)
+
+
+def test_regions_disjoint_coverage():
+    """Every attended position is in exactly one region."""
+    regions = CacheRegions(pos=jnp.int32(700), enc_end=jnp.int32(640))
+    n_max = 1024
+    valid_ret = retrieval_valid_mask(n_max, regions, CFG)
+    idx = np.arange(n_max)
+    sink = idx < CFG.sink_size
+    W = window_size(CFG)
+    ws = int(regions.pos) + 1 - W
+    local = (idx >= max(ws, int(regions.enc_end))) & (idx <= int(regions.pos))
+    ret = np.asarray(valid_ret)
+    # no overlap
+    assert not (sink & ret).any() and not (sink & local).any() and not (ret & local).any()
+    # full coverage of [0, pos]
+    assert (sink | ret | local)[:int(regions.pos) + 1].all()

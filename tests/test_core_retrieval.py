@@ -1,0 +1,199 @@
+"""Unit + property + integration tests for the two-stage retrieval (§4.2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ParisKVConfig, encode_keys, encode_query, exact_topk,
+                        recall_at_k, retrieve, srht)
+from repro.core import retrieval as R
+
+CFG = ParisKVConfig()
+D = 128
+SIGNS = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D), CFG.srht_seed))
+
+
+def make_keys(seed, n, d=D, shape=()):
+    k = jax.random.normal(jax.random.PRNGKey(seed), shape + (n, d))
+    mix = jnp.linspace(2.0, 0.1, d)  # anisotropic — realistic attention keys
+    return k * mix + 0.3
+
+
+# ------------------------------------------------------- Stage I pieces ----
+def test_bucket_histogram_counts():
+    ids = jnp.asarray([[0, 1, 1, 3], [2, 2, 2, 2]], jnp.uint8).T[None]  # (1, 4, 2)
+    valid = jnp.asarray([[True, True, True, False]])
+    h = R.bucket_histogram(ids, valid, 4)
+    np.testing.assert_array_equal(np.asarray(h[0, 0]), [1, 2, 0, 0])
+    np.testing.assert_array_equal(np.asarray(h[0, 1]), [0, 0, 3, 0])
+
+
+def test_tier_weights_follow_percentiles():
+    """Construct a case with known bucket ranking and check tier boundaries."""
+    cfg = ParisKVConfig(rho=1.0)  # top-rho = everything → tiers by raw pctile
+    nb = 4
+    scores = jnp.asarray([[[3.0, 2.0, 1.0, 0.0]]])       # bucket 0 best
+    counts = jnp.asarray([[[5, 10, 35, 50]]], jnp.int32)  # n=100
+    n_valid = jnp.asarray([100.0])
+    tbl = R.tier_weight_table(scores, counts, n_valid, cfg)
+    # bucket0 starts at 0% → tier weight 6; bucket1 at 5% → 5;
+    # bucket2 at 15% → 4; bucket3 at 50% → 2
+    np.testing.assert_array_equal(np.asarray(tbl[0, 0]), [6, 5, 4, 2])
+
+
+def test_tier_weights_zero_outside_top_rho():
+    cfg = ParisKVConfig(rho=0.1)
+    scores = jnp.asarray([[[3.0, 2.0, 1.0, 0.0]]])
+    counts = jnp.asarray([[[10, 10, 10, 70]]], jnp.int32)
+    n_valid = jnp.asarray([100.0])
+    tbl = R.tier_weight_table(scores, counts, n_valid, cfg)
+    # rho*n = 10 keys. bucket0 occupies [0,10) → weight 6.
+    # bucket1 starts at key 10 = 100% of budget → weight 0. etc.
+    np.testing.assert_array_equal(np.asarray(tbl[0, 0]), [6, 0, 0, 0])
+
+
+def test_collision_scores_range_and_mask():
+    n = 1024
+    keys = make_keys(0, n)
+    q = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((n,), bool).at[:100].set(False)
+    s = R.collision_scores(meta.centroid_ids, qt.q_sub, valid, CFG)
+    B = CFG.num_subspaces(D)
+    assert s.shape == (n,)
+    assert int(s.max()) <= 6 * B
+    assert np.all(np.asarray(s[:100]) == -1)          # masked
+    assert int(s.max()) > 0                            # someone collided
+
+
+def test_collision_score_is_sum_of_tier_bonuses():
+    """Cross-check the bucket-level implementation against a literal per-key
+    reimplementation of Eq. 15."""
+    n = 512
+    keys = make_keys(2, n)
+    q = jax.random.normal(jax.random.PRNGKey(3), (D,))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((n,), bool)
+    got = np.asarray(R.collision_scores(meta.centroid_ids, qt.q_sub, valid, CFG))
+
+    # literal: for each subspace, rank keys by their centroid's proxy score
+    from repro.core import centroids
+    cs = np.asarray(centroids.centroid_scores(qt.q_sub, CFG.m))  # (B, 256)
+    ids = np.asarray(meta.centroid_ids)                           # (n, B)
+    want = np.zeros(n, np.int64)
+    B = ids.shape[1]
+    for b in range(B):
+        key_scores = cs[b][ids[:, b]]
+        # stable rank with bucket granularity: position = #keys in strictly
+        # better buckets (matches bucket-level cumulative definition)
+        order_buckets = np.argsort(-cs[b], kind="stable")
+        counts = np.bincount(ids[:, b], minlength=256)
+        start = np.zeros(256, np.int64)
+        c = 0
+        for bk in order_buckets:
+            start[bk] = c
+            c += counts[bk]
+        pos_frac = start[ids[:, b]] / max(CFG.rho * n, 1)
+        pcts = np.asarray(CFG.tier_pcts)
+        wts = np.asarray(CFG.tier_weights + (0,))
+        tier = np.searchsorted(pcts, pos_frac, side="right")
+        want += wts[np.minimum(tier, 6)]
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------ end-to-end ----------
+@pytest.mark.parametrize("n", [1024, 4096])
+def test_retrieval_recall_beats_random(n):
+    keys = make_keys(4, n)
+    q = jax.random.normal(jax.random.PRNGKey(5), (D,)) * jnp.linspace(2.0, 0.1, D)
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((n,), bool)
+    res = retrieve(meta, qt, valid, CFG, CFG.candidate_count(n), 100)
+    oracle, _ = exact_topk(keys, q, valid, 100)
+    rec = float(recall_at_k(res.indices, oracle))
+    assert rec > 0.5, rec  # random subset of same budget would get ~100/n
+
+
+def test_retrieval_respects_valid_mask():
+    n = 2048
+    keys = make_keys(6, n)
+    q = jax.random.normal(jax.random.PRNGKey(7), (D,))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = (jnp.arange(n) >= 128) & (jnp.arange(n) < 1500)
+    res = retrieve(meta, qt, valid, CFG, 256, 64)
+    idx = np.asarray(res.indices)
+    assert idx.min() >= 128 and idx.max() < 1500
+
+
+def test_retrieval_batched_matches_loop():
+    """vmapped/batched retrieval must equal per-element retrieval."""
+    n, b = 1024, 3
+    keys = make_keys(8, n, shape=(b,))
+    q = jax.random.normal(jax.random.PRNGKey(9), (b, D))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((b, n), bool)
+    res = retrieve(meta, qt, valid, CFG, 256, 50)
+    for i in range(b):
+        mi = jax.tree.map(lambda a: a[i], meta)
+        qi = jax.tree.map(lambda a: a[i], qt)
+        ri = retrieve(mi, qi, valid[i], CFG, 256, 50)
+        np.testing.assert_array_equal(np.asarray(res.indices[i]),
+                                      np.asarray(ri.indices))
+
+
+def test_drift_robustness_analytic_vs_learned_centroids():
+    """Fig. 1/10 mechanism test: add a drifted decode-key cluster; analytic
+    centroids keep recall, k-means centroids fitted on prefill collapse."""
+    n_prefill, n_decode = 4096, 4096
+    prefill = make_keys(10, n_prefill)
+    # decode keys drift: different offset direction + scale
+    drift_dir = jax.random.normal(jax.random.PRNGKey(11), (D,))
+    decode = (jax.random.normal(jax.random.PRNGKey(12), (n_decode, D))
+              * jnp.linspace(0.1, 2.0, D) + 2.0 * drift_dir)
+    all_keys = jnp.concatenate([prefill, decode], 0)
+    q = decode[-1] + 0.1 * jax.random.normal(jax.random.PRNGKey(13), (D,))
+
+    meta = encode_keys(all_keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((n_prefill + n_decode,), bool)
+    res = retrieve(meta, qt, valid, CFG,
+                   CFG.candidate_count(n_prefill + n_decode), 100)
+    oracle, _ = exact_topk(all_keys, q, valid, 100)
+    rec_pariskv = float(recall_at_k(res.indices, oracle))
+
+    # PQCache-style: coarse k-means centroids learned on PREFILL only
+    from repro.baselines.pqcache import kmeans, coarse_retrieve
+    cents = kmeans(prefill, 64, iters=10, seed=0)
+    idx_pq = coarse_retrieve(all_keys, cents, q, 100)
+    rec_pq = float(recall_at_k(idx_pq, oracle))
+    # Drift claim (paper Fig. 1): prefill-fitted centroids collapse; the
+    # analytic centroids keep retrieving. The synthetic drift here is extreme
+    # (a coherent cluster → indistinguishable directions after normalization),
+    # so we assert the *relative* robustness, not a high absolute recall.
+    assert rec_pq < 0.1, rec_pq                     # learned centroids collapse
+    assert rec_pariskv > rec_pq + 0.25, (rec_pariskv, rec_pq)
+    assert rec_pariskv > 0.3, rec_pariskv
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_property_topk_indices_unique_and_valid(seed):
+    n = 512
+    keys = make_keys(seed % 1000, n)
+    q = jax.random.normal(jax.random.PRNGKey(seed), (D,))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((n,), bool)
+    res = retrieve(meta, qt, valid, CFG, 128, 32)
+    idx = np.asarray(res.indices)
+    assert len(np.unique(idx)) == 32          # no duplicates
+    assert (idx >= 0).all() and (idx < n).all()
+    # scores come back sorted descending
+    s = np.asarray(res.scores)
+    assert (np.diff(s) <= 1e-5).all()

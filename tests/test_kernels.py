@@ -1,0 +1,175 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Also cross-checks the kernels against the core reference pipeline so the
+serving path could swap them in without behavioural change.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParisKVConfig, encode_keys, encode_query, srht
+from repro.core import centroids, retrieval as R
+
+CFG = ParisKVConfig()
+
+
+def _meta(n, d=128, seed=0, lead=()):
+    signs = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(d), CFG.srht_seed))
+    keys = jax.random.normal(jax.random.PRNGKey(seed), lead + (n, d)) \
+        * jnp.linspace(2.0, 0.2, d)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), lead + (d,))
+    return encode_keys(keys, CFG, signs), encode_query(q, CFG, signs), keys, q
+
+
+# -------------------------------------------------------------- collision --
+@pytest.mark.parametrize("n,block", [(1024, 256), (2048, 1024), (4096, 512),
+                                     (1000, 256)])
+@pytest.mark.parametrize("ids_dtype", [jnp.uint8, jnp.int32])
+def test_collision_kernel_matches_ref(n, block, ids_dtype):
+    from repro.kernels.collision import collision_scores_kernel
+    from repro.kernels.collision.ref import collision_scores_ref
+    meta, qt, _, _ = _meta(n, seed=n)
+    ids = meta.centroid_ids.astype(ids_dtype)
+    cs = centroids.centroid_scores(qt.q_sub, CFG.m)
+    counts = R.bucket_histogram(meta.centroid_ids, jnp.ones((n,), bool),
+                                CFG.num_centroids())
+    table = R.tier_weight_table(cs, counts, jnp.asarray(float(n)), CFG)
+    got = collision_scores_kernel(ids, table, block_n=block)
+    want = collision_scores_ref(ids, table)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_collision_kernel_batched():
+    from repro.kernels.collision import collision_scores_kernel
+    from repro.kernels.collision.ref import collision_scores_ref
+    lead = (2, 3)
+    meta, qt, _, _ = _meta(512, seed=7, lead=lead)
+    cs = centroids.centroid_scores(qt.q_sub, CFG.m)
+    counts = R.bucket_histogram(meta.centroid_ids,
+                                jnp.ones(lead + (512,), bool),
+                                CFG.num_centroids())
+    table = R.tier_weight_table(cs, counts,
+                                jnp.full(lead, 512.0), CFG)
+    got = collision_scores_kernel(meta.centroid_ids, table, block_n=256)
+    for i in range(2):
+        for j in range(3):
+            want = collision_scores_ref(meta.centroid_ids[i, j], table[i, j])
+            np.testing.assert_array_equal(np.asarray(got[i, j]),
+                                          np.asarray(want))
+
+
+# ------------------------------------------------------------ bucket_topk --
+@pytest.mark.parametrize("n,k", [(1024, 100), (4096, 100), (4096, 500),
+                                 (3000, 64)])
+def test_bucket_topk_matches_lax_topk(n, k):
+    from repro.kernels.bucket_topk import bucket_topk
+    from repro.kernels.bucket_topk.ref import bucket_topk_ref
+    rng = np.random.RandomState(n + k)
+    scores = jnp.asarray(rng.randint(-1, 97, size=(n,)), jnp.int32)
+    got = np.asarray(bucket_topk(scores, k, score_range=97))
+    want = np.asarray(bucket_topk_ref(scores, k))
+    # identical score multisets and (for the tie rule) identical index sets
+    np.testing.assert_array_equal(np.sort(got), np.sort(want))
+    s = np.asarray(scores)
+    np.testing.assert_array_equal(np.sort(s[got])[::-1], np.sort(s[want])[::-1])
+
+
+def test_bucket_topk_tie_rule_lowest_index_first():
+    from repro.kernels.bucket_topk import bucket_topk
+    scores = jnp.asarray([5, 7, 7, 5, 7, 3, 7], jnp.int32)
+    got = set(np.asarray(bucket_topk(scores, 3, score_range=8)).tolist())
+    assert got == {1, 2, 4}
+
+
+def test_bucket_topk_histogram_kernel():
+    from repro.kernels.bucket_topk.bucket_topk import histogram_pallas
+    from repro.kernels.bucket_topk.ref import histogram_ref
+    rng = np.random.RandomState(0)
+    s = jnp.asarray(rng.randint(0, 97, size=(8192,)), jnp.int32)
+    got = histogram_pallas(s, score_range=97, block_n=2048, interpret=True)
+    want = histogram_ref(s, 97)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------- rerank --
+@pytest.mark.parametrize("n,C,block", [(2048, 256, 128), (4096, 512, 512),
+                                       (1024, 100, 64)])
+def test_rerank_kernel_matches_ref(n, C, block):
+    from repro.kernels.rerank import rerank_kernel
+    from repro.kernels.rerank.ref import rerank_ref
+    meta, qt, _, _ = _meta(n, seed=n + C)
+    cand = jnp.asarray(
+        np.random.RandomState(0).choice(n, C, replace=False), jnp.int32)
+    got = rerank_kernel(meta.codes, meta.weights, cand, qt.q_sub, qt.q_norm,
+                        m=CFG.m, block_c=block)
+    want = rerank_ref(meta.codes[cand], meta.weights[cand], qt.q_sub,
+                      qt.q_norm, CFG.m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_kernel_estimates_true_ip():
+    """End-to-end: kernel estimates correlate with exact ⟨k, q⟩."""
+    from repro.kernels.rerank import rerank_kernel
+    n = 2048
+    meta, qt, keys, q = _meta(n, seed=3)
+    cand = jnp.arange(512, dtype=jnp.int32)
+    est = rerank_kernel(meta.codes, meta.weights, cand, qt.q_sub, qt.q_norm)
+    exact = np.asarray(keys[:512] @ q)
+    corr = np.corrcoef(np.asarray(est), exact)[0, 1]
+    assert corr > 0.97, corr
+
+
+# -------------------------------------------------------------- gather_kv --
+@pytest.mark.parametrize("n,k,d", [(1024, 100, 128), (512, 64, 256),
+                                   (2048, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_kv_matches_ref(n, k, d, dtype):
+    from repro.kernels.gather_kv import gather_kv_kernel
+    from repro.kernels.gather_kv.ref import gather_rows_ref
+    store = jax.random.normal(jax.random.PRNGKey(0), (n, d)).astype(dtype)
+    idx = jnp.asarray(np.random.RandomState(1).choice(n, k, replace=False),
+                      jnp.int32)
+    got = gather_kv_kernel(store, idx)
+    want = gather_rows_ref(store, idx)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_gather_kv_batched():
+    from repro.kernels.gather_kv import gather_kv_kernel
+    store = jax.random.normal(jax.random.PRNGKey(2), (4, 256, 32))
+    idx = jnp.asarray(np.random.RandomState(3).randint(0, 256, (4, 16)),
+                      jnp.int32)
+    got = gather_kv_kernel(store, idx)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(store[i][idx[i]]))
+
+
+# --------------------------------------------- kernel ↔ core-pipeline ----
+def test_kernels_reproduce_core_retrieval():
+    """collision + bucket_topk + rerank kernels = core.retrieval.retrieve."""
+    from repro.kernels.bucket_topk import bucket_topk
+    from repro.kernels.collision import collision_scores_kernel
+    from repro.kernels.rerank import rerank_kernel
+    n, C, k = 2048, 256, 64
+    meta, qt, keys, q = _meta(n, seed=11)
+    valid = jnp.ones((n,), bool)
+
+    want = R.retrieve(meta, qt, valid, CFG, C, k)
+
+    cs = centroids.centroid_scores(qt.q_sub, CFG.m)
+    counts = R.bucket_histogram(meta.centroid_ids, valid, CFG.num_centroids())
+    table = R.tier_weight_table(cs, counts, jnp.asarray(float(n)), CFG)
+    scores = collision_scores_kernel(meta.centroid_ids, table, block_n=256)
+    np.testing.assert_array_equal(np.asarray(scores),
+                                  np.asarray(want.coarse_scores))
+    cand = bucket_topk(scores, C)
+    assert set(np.asarray(cand).tolist()) == set(
+        np.asarray(want.cand_indices).tolist())
+    est = rerank_kernel(meta.codes, meta.weights, cand, qt.q_sub, qt.q_norm)
+    _, top_pos = jax.lax.top_k(est, k)
+    got_idx = np.asarray(cand)[np.asarray(top_pos)]
+    assert set(got_idx.tolist()) == set(np.asarray(want.indices).tolist())

@@ -1,0 +1,104 @@
+"""Unit tests for the launch layer: sharding name-rules, HLO collective
+parser, roofline math — all single-device safe (no 512-device flags)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import mesh as MX
+
+
+def _fake_mesh():
+    """1-device mesh with production axis names (divisibility rules then
+    trivially pass — we only check axis *placement* logic)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_spec_rules():
+    mesh = _fake_mesh()
+    P = jax.sharding.PartitionSpec
+    cases = {
+        ("embed", (1024, 64), False): P("model", ("data",)),
+        ("stages/0/l0/attn/wq", (8, 64, 128), True): P(None, ("data",), "model"),
+        ("stages/0/l0/attn/wo", (8, 128, 64), True): P(None, "model", ("data",)),
+        ("stages/0/l0/mlp/wi_gate", (8, 64, 256), True): P(None, ("data",), "model"),
+        ("stages/0/l0/moe/experts_gate", (8, 4, 64, 128), True):
+            P(None, None, ("data",), "model"),
+        ("stages/0/l0/moe/experts_down", (8, 4, 128, 64), True):
+            P(None, None, "model", ("data",)),
+        ("stages/0/l0/norm_attn", (8, 64), True): P(None, None),
+        ("final_norm", (64,), False): P(None),
+    }
+    for (path, shape, stacked), want in cases.items():
+        got = MX.param_spec(path, shape, mesh, multi_pod=False,
+                            stacked=stacked)
+        assert tuple(got) == tuple(want), (path, got, want)
+
+
+def test_param_spec_drops_indivisible_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # craft a mesh-shape lookup where model=16 would not divide dim 10 —
+    # with the 1-device mesh everything divides; test the guard directly:
+    assert MX._divisible(10, mesh, "model")  # 1 device divides
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    assert not MX._divisible(10, FakeMesh, "model")
+    assert MX._divisible(32, FakeMesh, "model")
+    assert not MX._divisible(8, FakeMesh, ("data", "model"))
+
+
+def test_batch_axes_small_batch_returns_none():
+    mesh = _fake_mesh()
+    assert MX.batch_axes(mesh, 4) == ("data",)
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    assert MX.batch_axes(FakeMesh, 1) is None      # long_500k case
+    assert MX.batch_axes(FakeMesh, 128) == ("data",)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %all-gather.1 = bf16[4,2048]{1,0} all-gather(%p0), replica_groups={}
+  %x = f32[8] add(%a, %b)
+  ROOT %all-reduce.2 = (f32[128]{0}, f32[64]{0}) all-reduce(%c, %d)
+  %all-to-all.3 = u8[1024]{0} all-to-all(%e)
+  %collective-permute.9 = f32[16,16]{1,0} collective-permute(%f)
+"""
+    out = MX.collective_bytes(hlo)
+    assert out["all-gather"] == 4 * 2048 * 2
+    assert out["all-reduce"] == (128 + 64) * 4
+    assert out["all-to-all"] == 1024
+    assert out["collective-permute"] == 16 * 16 * 4
+    assert out["total"] == sum(out[k] for k in (
+        "all-gather", "all-reduce", "all-to-all", "collective-permute",
+        "reduce-scatter"))
+
+
+def test_roofline_terms_math():
+    from benchmarks.bench_roofline import terms
+    rec = dict(arch="qwen2-1.5b", shape="decode_32k", chips=256,
+               flops=197e12 * 0.001, bytes_accessed=819e9 * 0.002,
+               collectives_compiled={"total": 50e9 * 0.003})
+    t = terms(rec)
+    np.testing.assert_allclose(t["t_compute"], 0.001, rtol=1e-6)
+    np.testing.assert_allclose(t["t_memory"], 0.002, rtol=1e-6)
+    np.testing.assert_allclose(t["t_collective"], 0.003, rtol=1e-6)
+    assert t["dominant"] == "collective"
+
+
+def test_roofline_trip_count_correction():
+    from benchmarks.bench_roofline import corrected
+    rec = dict(arch="a", shape="s", flops=10.0, bytes_accessed=20.0,
+               collectives_compiled={"total": 5})
+    bodies = {("a", "s"): [dict(flops=1.0, bytes=2.0, coll=1, repeat=11)]}
+    f, b, c, was = corrected(rec, bodies)
+    assert was and f == 10 + 10 * 1.0 and b == 20 + 10 * 2.0 and c == 5 + 10
+
+
+def test_model_flops_per_device():
+    from benchmarks.bench_roofline import model_flops_per_device
+    f_train = model_flops_per_device("qwen2-1.5b", "train_4k", 256)
+    f_dec = model_flops_per_device("qwen2-1.5b", "decode_32k", 256)
+    assert f_train > f_dec * 1000     # train crunches ~1M tokens vs 128
+    assert f_dec > 0
