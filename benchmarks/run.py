@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
   bench_decode_latency  Table 7              per-step cost vs context length
   bench_kernels         Fig. 6               kernel fusion/selection wins
   bench_throughput      Fig. 7/11            TPOT & throughput vs batch
+  bench_continuous_batching  serving         slot engine vs lockstep waves
   bench_prefill         Fig. 8               summarization overhead
   bench_memory_scale    §5.2(3)              runnable-range / OOM model
   bench_roofline        deliverable (g)      three-term roofline per combo
@@ -26,6 +27,7 @@ MODULES = [
     "bench_decode_latency",
     "bench_kernels",
     "bench_throughput",
+    "bench_continuous_batching",
     "bench_prefill",
     "bench_memory_scale",
     "bench_roofline",

@@ -47,9 +47,12 @@ def main():
                                   media=media))
         done = engine.run()
         results[tag] = {r.uid: r for r in done}
-        tpot = np.mean([r.decode_s / r.max_new_tokens for r in done]) * 1000
-        print(f"[{tag}] ttft {done[0].ttft_s*1000:.0f}ms  "
-              f"tpot {tpot:.1f}ms/tok")
+        # per-request metrics (the slot engine reports honest admission→
+        # first-token TTFT and per-request decode seconds)
+        ttft = np.mean([r.ttft_s for r in done]) * 1000
+        tpot = np.mean([r.decode_s / max(len(r.output) - 1, 1)
+                        for r in done]) * 1000
+        print(f"[{tag}] mean ttft {ttft:.0f}ms  mean tpot {tpot:.1f}ms/tok")
 
     agree = []
     for uid in results["pariskv"]:

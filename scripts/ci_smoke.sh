@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: run the full test suite from a clean checkout.
+#
+#   scripts/ci_smoke.sh               # whole suite
+#   scripts/ci_smoke.sh tests/test_core_cache.py   # subset / extra args
+#
+# The suite has no hard dependency on optional dev packages (hypothesis):
+# property tests fall back to fixed seed sweeps when it is missing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

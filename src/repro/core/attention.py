@@ -72,7 +72,7 @@ def blockwise_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         def kv_step(carry, inputs):
             acc, m_run, l_run = carry
             k_blk, v_blk, kp = inputs
-            s = jnp.einsum("bqghd,bkgd->bgqhk" if False else "bqghd,bkgd->bgqhk",
+            s = jnp.einsum("bqghd,bkgd->bgqhk",
                            q_blk, k_blk) * sm_scale  # (b, G, qc, Hg, kc)
             s = _softcap(s, softcap)
             causal = q_pos[qi][None, None, :, None, None] >= kp[None, None, None, None, :]
@@ -138,14 +138,20 @@ def sparse_decode_attention(q: jax.Array,
     q:        (b, H, hd) — single new-token query per sequence
     k_cache:  (b, n_max, G, hd) (same for v_cache)
     top_idx:  (b, G, Hg, k) retrieved positions (∈ [sink, enc_end))
-    window_start: scalar int32 — static-size dense window [ws, ws+window_size)
-    pos:      scalar int32 — current token position (attends ≤ pos)
-    enc_end:  scalar int32 — retrieval-region end; window positions < enc_end
-              are masked out (they are covered by retrieval instead)
+    window_start: (b,) int32 (scalar broadcasts) — per-row static-size dense
+              window [ws[i], ws[i]+window_size)
+    pos:      (b,) int32 (scalar broadcasts) — per-row current token
+              position (row i attends ≤ pos[i])
+    enc_end:  (b,) int32 (scalar broadcasts) — per-row retrieval-region end;
+              window positions < enc_end[i] are masked out (they are covered
+              by retrieval instead)
     """
     b, H, hd = q.shape
     G = k_cache.shape[2]
     Hg = H // G
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    enc_end = jnp.broadcast_to(jnp.asarray(enc_end, jnp.int32), (b,))
+    window_start = jnp.broadcast_to(jnp.asarray(window_start, jnp.int32), (b,))
     if k_ret is None:  # rows may arrive pre-fetched (distributed retrieval)
         k_ret = gather_kv_heads(k_cache, top_idx)      # (b, G, Hg, k, hd)
         v_ret = gather_kv_heads(v_cache, top_idx)
@@ -155,25 +161,27 @@ def sparse_decode_attention(q: jax.Array,
     s_ret = jnp.einsum("bghd,bghkd->bghk", qg, k_ret.astype(jnp.float32))
     # guard: only positions actually inside the Retrieval region count —
     # with an empty region (early decode) Stage-II returns arbitrary indices
-    ret_valid = (top_idx >= sink_size) & (top_idx < enc_end)
+    ret_valid = (top_idx >= sink_size) & (top_idx < enc_end[:, None, None, None])
     s_ret = jnp.where(ret_valid, s_ret, NEG_INF)
 
     # --- sink segment (static slice) ---------------------------------------
     k_sink = k_cache[:, :sink_size].astype(jnp.float32)  # (b, sink, G, hd)
     v_sink = v_cache[:, :sink_size].astype(jnp.float32)
     s_sink = jnp.einsum("bghd,bsgd->bghs", qg, k_sink)
-    sink_valid = (jnp.arange(sink_size) <= pos)[None, None, None, :]
-    s_sink = jnp.where(sink_valid, s_sink, NEG_INF)
+    sink_valid = (jnp.arange(sink_size)[None] <= pos[:, None])  # (b, sink)
+    s_sink = jnp.where(sink_valid[:, None, None, :], s_sink, NEG_INF)
 
-    # --- local + update-buffer window (dynamic slice, static size) ---------
+    # --- local + update-buffer window (per-row dynamic slice, static size) -
     def slice_window(c):
-        return jax.lax.dynamic_slice_in_dim(c, window_start, window_size, axis=1)
+        return jax.vmap(lambda row, s: jax.lax.dynamic_slice_in_dim(
+            row, s, window_size, axis=0))(c, window_start)
     k_loc = slice_window(k_cache).astype(jnp.float32)    # (b, W, G, hd)
     v_loc = slice_window(v_cache).astype(jnp.float32)
     s_loc = jnp.einsum("bghd,bwgd->bghw", qg, k_loc)
-    w_pos = window_start + jnp.arange(window_size)
-    loc_valid = (w_pos >= enc_end) & (w_pos >= sink_size) & (w_pos <= pos)
-    s_loc = jnp.where(loc_valid[None, None, None, :], s_loc, NEG_INF)
+    w_pos = window_start[:, None] + jnp.arange(window_size)  # (b, W)
+    loc_valid = ((w_pos >= enc_end[:, None]) & (w_pos >= sink_size)
+                 & (w_pos <= pos[:, None]))
+    s_loc = jnp.where(loc_valid[:, None, None, :], s_loc, NEG_INF)
 
     # --- joint softmax -------------------------------------------------------
     scores = jnp.concatenate([s_sink, s_ret, s_loc], axis=-1) * sm_scale
@@ -193,19 +201,21 @@ def dense_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                            sliding_window: int = 0) -> jax.Array:
     """Full-cache decode attention (baseline / local-layer path).
 
-    q: (b, H, hd); caches (b, n_max, G, hd); attends to positions ≤ pos
-    (optionally within a sliding window)."""
+    q: (b, H, hd); caches (b, n_max, G, hd); row i attends to positions
+    ≤ pos[i] (``pos`` (b,) int32; scalar broadcasts), optionally within a
+    sliding window."""
     b, H, hd = q.shape
     n, G = k_cache.shape[1], k_cache.shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     qg = q.reshape(b, G, H // G, hd).astype(jnp.float32)
     s = jnp.einsum("bghd,bngd->bghn", qg,
                    k_cache.astype(jnp.float32)) * sm_scale
     s = _softcap(s, softcap)
-    positions = jnp.arange(n)
-    valid = positions <= pos
+    positions = jnp.arange(n)[None]                      # (1, n)
+    valid = positions <= pos[:, None]                    # (b, n)
     if sliding_window:
-        valid &= positions > (pos - sliding_window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= positions > (pos[:, None] - sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bghn,bngd->bghd", p,
                     v_cache.astype(jnp.float32))

@@ -20,10 +20,20 @@ the retrieval region* by encoding their metadata in one vectorized block
 (amortized, exactly as the paper's periodic codebook update), and
 ``enc_end`` advances by ``update_interval``. Under jit this is a
 ``lax.cond`` + ``dynamic_update_slice`` of a static-size block.
+
+Region state is **per sequence**: ``CacheRegions.pos``/``enc_end`` are
+``(b,)`` int32 vectors so every row of a batch tracks its own position and
+retrieval-region boundary (continuous batching admits requests into cache
+slots at different times, so rows are never in lockstep). Promotion is
+per-row: each row triggers when *its* window fills, and the block encode
+runs under one ``lax.cond`` guarded by "any row triggered", with the
+results applied only to triggered rows. All public helpers also accept
+scalar ``pos``/``enc_end`` (legacy single-sequence call sites, tests) and
+broadcast internally.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +58,27 @@ class LayerKVCache(NamedTuple):
 
 
 class CacheRegions(NamedTuple):
-    pos: jax.Array       # scalar int32: index of the most recent token
-    enc_end: jax.Array   # scalar int32: retrieval-region end (exclusive)
+    pos: jax.Array       # (b,) int32: index of each row's most recent token
+    enc_end: jax.Array   # (b,) int32: retrieval-region end (exclusive)
+
+
+def _as_batch(x: jax.Array, batch: int) -> jax.Array:
+    """Broadcast a scalar or (b,) region field to a (b,) int32 vector."""
+    return jnp.broadcast_to(jnp.asarray(x, jnp.int32), (batch,))
 
 
 def window_size(cfg: ParisKVConfig) -> int:
     return cfg.local_size + cfg.update_interval
+
+
+def initial_regions(lengths: jax.Array, cfg: ParisKVConfig) -> CacheRegions:
+    """Per-row regions right after prefilling prompts of ``lengths`` (b,):
+    pos at the last prompt token, enc_end clamped so the trailing
+    local window stays dense (and never below the sink)."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+    enc_end = jnp.maximum(jnp.minimum(cfg.sink_size, lengths),
+                          lengths - cfg.local_size)
+    return CacheRegions(pos=lengths - 1, enc_end=enc_end)
 
 
 def init_layer_cache(batch: int, n_max: int, num_kv_heads: int, head_dim: int,
@@ -92,14 +117,20 @@ def _encode_block(keys_block: jax.Array, cfg: ParisKVConfig,
 
 
 def prefill_write(cache: LayerKVCache, k_new: jax.Array, v_new: jax.Array,
-                  cfg: ParisKVConfig, signs: jax.Array) -> Tuple[LayerKVCache, CacheRegions]:
+                  cfg: ParisKVConfig, signs: jax.Array,
+                  lengths: Optional[jax.Array] = None
+                  ) -> Tuple[LayerKVCache, CacheRegions]:
     """Write a full prompt's K/V and encode the retrieval-region metadata.
 
-    k_new/v_new: (b, S, G, hd). Metadata is encoded for every position (the
-    valid mask at retrieval time restricts to [sink, enc_end)); enc_end is
-    set so the trailing local window stays dense.
+    k_new/v_new: (b, S, G, hd), LEFT-aligned prompts. ``lengths`` (b,) gives
+    each row's true prompt length (default: all S). Metadata is encoded for
+    every position (the valid mask at retrieval time restricts to
+    [sink, enc_end)); per-row enc_end is set so each row's trailing local
+    window stays dense. Positions ≥ lengths[i] hold padding garbage that is
+    never attended (every mask is bounded by pos/enc_end) and is overwritten
+    as row i decodes.
     """
-    S = k_new.shape[1]
+    b, S = k_new.shape[:2]
     cache = cache._replace(
         k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), 0, axis=1),
         v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), 0, axis=1),
@@ -110,19 +141,23 @@ def prefill_write(cache: LayerKVCache, k_new: jax.Array, v_new: jax.Array,
         meta_codes=jax.lax.dynamic_update_slice_in_dim(cache.meta_codes, meta.codes, 0, axis=2),
         meta_w=jax.lax.dynamic_update_slice_in_dim(cache.meta_w, meta.weights, 0, axis=2),
     )
-    enc_end = jnp.int32(max(min(cfg.sink_size, S), S - cfg.local_size))
-    regions = CacheRegions(pos=jnp.int32(S - 1), enc_end=enc_end)
-    return cache, regions
+    if lengths is None:
+        lengths = jnp.full((b,), S, jnp.int32)
+    return cache, initial_regions(_as_batch(lengths, b), cfg)
 
 
 def decode_append(cache: LayerKVCache, k_t: jax.Array, v_t: jax.Array,
                   pos: jax.Array) -> LayerKVCache:
-    """Append one token's K/V at position ``pos``. k_t/v_t: (b, G, hd)."""
-    k_t = k_t[:, None].astype(cache.k.dtype)
-    v_t = v_t[:, None].astype(cache.v.dtype)
+    """Append one token's K/V at per-row position ``pos`` (scalar or (b,)).
+
+    k_t/v_t: (b, G, hd)."""
+    b = k_t.shape[0]
+    pos = _as_batch(pos, b)
+    upd = jax.vmap(lambda c, t, p: jax.lax.dynamic_update_slice_in_dim(
+        c, t[None], p, axis=0))
     return cache._replace(
-        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_t, pos, axis=1),
-        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_t, pos, axis=1),
+        k=upd(cache.k, k_t.astype(cache.k.dtype), pos),
+        v=upd(cache.v, v_t.astype(cache.v.dtype), pos),
     )
 
 
@@ -142,28 +177,67 @@ def promote_block(cache: LayerKVCache, start: jax.Array,
     )
 
 
+def promote_rows(cache: LayerKVCache, starts: jax.Array, mask: jax.Array,
+                 cfg: ParisKVConfig, signs: jax.Array) -> LayerKVCache:
+    """Per-row block promotion: for each batch row ``i`` with ``mask[i]``,
+    encode metadata for keys [starts[i], starts[i]+update_interval).
+
+    Rows with ``mask[i] == False`` are returned unchanged (the block encode
+    still runs for them — vectorized — but the result is discarded), which
+    is what keeps this a single fused computation under jit even when rows
+    promote at different decode steps.
+    """
+    U = cfg.update_interval
+    b = cache.k.shape[0]
+    starts = _as_batch(starts, b)
+    blk_k = jax.vmap(lambda k, s: jax.lax.dynamic_slice_in_dim(
+        k, s, U, axis=0))(cache.k, starts)               # (b, U, G, hd)
+    meta = _encode_block(blk_k, cfg, signs)              # (b, G, U, B)
+
+    def upd(dst, new):
+        out = jax.vmap(lambda d, n, s: jax.lax.dynamic_update_slice_in_dim(
+            d, n, s, axis=1))(dst, new, starts)
+        m = mask.reshape((b,) + (1,) * (dst.ndim - 1))
+        return jnp.where(m, out, dst)
+
+    return cache._replace(
+        meta_ids=upd(cache.meta_ids, meta.centroid_ids),
+        meta_codes=upd(cache.meta_codes, meta.codes),
+        meta_w=upd(cache.meta_w, meta.weights),
+    )
+
+
 def promote_trigger(regions: CacheRegions, cfg: ParisKVConfig) -> jax.Array:
-    """True when the Local+Buffer window is full and a block must promote."""
+    """Per-row bool: True where the Local+Buffer window is full and a block
+    must promote. Shape follows ``regions`` (scalar in → scalar out)."""
     return (regions.pos + 1 - regions.enc_end) >= window_size(cfg)
 
 
 def maybe_promote(cache: LayerKVCache, regions: CacheRegions,
                   cfg: ParisKVConfig, signs: jax.Array
                   ) -> Tuple[LayerKVCache, CacheRegions]:
-    """Sliding-window update (§4.2.1): when the Local+Buffer window is full,
-    encode the oldest ``update_interval`` tokens and advance enc_end."""
-    trigger = promote_trigger(regions, cfg)
+    """Sliding-window update (§4.2.1), per row: wherever a row's Local+Buffer
+    window is full, encode its oldest ``update_interval`` tokens and advance
+    that row's enc_end. The encode is skipped entirely (lax.cond) when no
+    row triggers, preserving the amortized cost profile."""
+    b = cache.k.shape[0]
+    pos = _as_batch(regions.pos, b)
+    enc_end = _as_batch(regions.enc_end, b)
+    trigger = (pos + 1 - enc_end) >= window_size(cfg)
 
-    def promote(args):
-        cache, regions = args
-        cache = promote_block(cache, regions.enc_end, cfg, signs)
-        return cache, regions._replace(enc_end=regions.enc_end + cfg.update_interval)
-
-    return jax.lax.cond(trigger, promote, lambda a: a, (cache, regions))
+    cache = jax.lax.cond(
+        jnp.any(trigger),
+        lambda c: promote_rows(c, enc_end, trigger, cfg, signs),
+        lambda c: c, cache)
+    new_enc = jnp.where(trigger, enc_end + cfg.update_interval, enc_end)
+    return cache, CacheRegions(pos=pos, enc_end=new_enc)
 
 
 def retrieval_valid_mask(n_max: int, regions: CacheRegions,
                          cfg: ParisKVConfig) -> jax.Array:
-    """(n_max,) bool — True on the Retrieval region [sink, enc_end)."""
+    """Bool mask over the Retrieval region [sink, enc_end).
+
+    (n_max,) for scalar ``enc_end`` (legacy), (b, n_max) for (b,) vectors."""
     idx = jnp.arange(n_max)
-    return (idx >= cfg.sink_size) & (idx < regions.enc_end)
+    enc_end = jnp.asarray(regions.enc_end)
+    return (idx >= cfg.sink_size) & (idx < enc_end[..., None])

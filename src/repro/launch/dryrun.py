@@ -114,11 +114,12 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
             n_max = shape.seq_len
             caches = SV.make_caches(cfg, shape.global_batch, n_max,
                                     as_spec=True)
-            state_sds = SV.ServeState(caches, SV.regions_spec(as_spec=True))
+            state_sds = SV.ServeState(
+                caches, SV.regions_spec(shape.global_batch, as_spec=True))
             c_shard = MX.cache_sharding(caches, mesh, shape.global_batch)
             r_shard = jax.tree.map(
                 lambda s: jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
-                SV.regions_spec(as_spec=True))
+                SV.regions_spec(shape.global_batch, as_spec=True))
             state_shard = SV.ServeState(c_shard, r_shard)
             tok_shard = MX.data_sharding(mesh, shape.global_batch)
             dist = None
@@ -304,7 +305,7 @@ def body_costs(arch: str, shape_name: str, multi_pod: bool = False
                     xt_shard = jax.NamedSharding(
                         mesh, jax.sharding.PartitionSpec(ba, None))
                     regions = CC.CacheRegions(
-                        pos=_sds((), jnp.int32), enc_end=_sds((), jnp.int32))
+                        pos=_sds((b,), jnp.int32), enc_end=_sds((b,), jnp.int32))
                     r_shard = jax.tree.map(
                         lambda a: jax.NamedSharding(
                             mesh, jax.sharding.PartitionSpec()), regions)

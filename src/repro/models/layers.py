@@ -197,7 +197,8 @@ def attn_prefill(p: dict, x: jax.Array, spec: AttnSpec, positions: jax.Array
 
 
 def _decode_qkv(p: dict, x_t: jax.Array, spec: AttnSpec, pos: jax.Array):
-    """x_t: (b, d) single token → q (b,H,hd), k/v (b,G,hd) with rope at pos."""
+    """x_t: (b, d) single token → q (b,H,hd), k/v (b,G,hd) with rope at the
+    per-row position ``pos`` ((b,) int32; scalar broadcasts)."""
     b, _ = x_t.shape
     H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     q = x_t @ p["wq"]
@@ -211,7 +212,7 @@ def _decode_qkv(p: dict, x_t: jax.Array, spec: AttnSpec, pos: jax.Array):
     if spec.qk_norm:
         q = rms_norm(q, p["q_norm"], plus_one=True)
         k = rms_norm(k, p["k_norm"], plus_one=True)
-    pos_arr = jnp.broadcast_to(pos, (b, 1))
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]
     q = rope(q, pos_arr, spec.rope_theta)
     k = rope(k, pos_arr, spec.rope_theta)
     return q[:, 0], k[:, 0], v[:, 0]
@@ -222,19 +223,23 @@ def attn_decode_dense(p: dict, x_t: jax.Array, kv: Tuple[jax.Array, jax.Array],
                       ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Dense decode over a (possibly ring-buffered) cache.
 
-    kv: (k_cache, v_cache) each (b, n, G, hd). For sliding-window layers the
-    cache length n equals the window and indices wrap (pos % n)."""
+    kv: (k_cache, v_cache) each (b, n, G, hd). ``pos`` is (b,) int32 (scalar
+    broadcasts). For sliding-window layers the cache length n equals the
+    window and indices wrap per row (pos[i] % n)."""
     k_cache, v_cache = kv
     n = k_cache.shape[1]
+    b = x_t.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
     slot = pos % n if spec.sliding_window else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_t[:, None].astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_t[:, None].astype(v_cache.dtype), slot, axis=1)
+    upd = jax.vmap(lambda c, t, s: jax.lax.dynamic_update_slice_in_dim(
+        c, t[None], s, axis=0))
+    k_cache = upd(k_cache, k_t.astype(k_cache.dtype), slot)
+    v_cache = upd(v_cache, v_t.astype(v_cache.dtype), slot)
     if spec.sliding_window and spec.sliding_window <= n:
-        # ring buffer: all n slots valid once pos >= n-1; before that, ≤ pos
-        valid = (jnp.arange(n) <= pos) | (pos >= n)
+        # ring buffer: all n slots valid once pos[i] >= n-1; before, ≤ pos[i]
+        valid = ((jnp.arange(n)[None] <= pos[:, None])
+                 | (pos[:, None] >= n))                   # (b, n)
         b, H, hd = q.shape
         G = k_cache.shape[2]
         qg = q.reshape(b, G, H // G, hd).astype(jnp.float32)
@@ -242,7 +247,7 @@ def attn_decode_dense(p: dict, x_t: jax.Array, kv: Tuple[jax.Array, jax.Array],
         s = s * spec.scale()
         if spec.softcap:
             s = spec.softcap * jnp.tanh(s / spec.softcap)
-        s = jnp.where(valid[None, None, None], s, -1e30)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
         prob = jax.nn.softmax(s, -1)
         out = jnp.einsum("bghn,bngd->bghd", prob, v_cache.astype(jnp.float32))
         out = out.reshape(b, H * hd)
@@ -284,8 +289,12 @@ def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
                              w[:, :, None])
         qt = E.encode_query(q, pcfg, signs)
         gpos = base + jnp.arange(n_loc)
-        valid = (gpos >= pcfg.sink_size) & (gpos < enc_end)
-        valid = jnp.broadcast_to(valid, (q.shape[0], q.shape[1], 1, n_loc))
+        # enc_end is per-row (b,): each sequence has its own region boundary
+        enc_b = jnp.broadcast_to(jnp.asarray(enc_end, jnp.int32),
+                                 (q.shape[0],))
+        valid = (gpos[None] >= pcfg.sink_size) & (gpos[None] < enc_b[:, None])
+        valid = jnp.broadcast_to(valid[:, None, None, :],
+                                 (q.shape[0], q.shape[1], 1, n_loc))
         res = R.retrieve(meta, qt, valid, pcfg, C_loc, k_top,
                          hist_sample=pcfg.hist_sample)
         glob_idx = res.indices + base
@@ -315,15 +324,17 @@ def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
                 P(ba, None, seq_axes, None),        # ids
                 P(ba, None, seq_axes, None),        # codes
                 P(ba, None, seq_axes, None),        # w
-                P(), P())
+                P(ba), P(ba))                       # per-row pos / enc_end
     out_specs = (P(ba, None, None, None),
                  P(ba, None, None, None, None),
                  P(ba, None, None, None, None))
     fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
+    b = q_grp.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,))
+    enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
     return fn(q_grp, layer_cache.k, layer_cache.v, layer_cache.meta_ids,
-              layer_cache.meta_codes, layer_cache.meta_w,
-              regions.pos, regions.enc_end)
+              layer_cache.meta_codes, layer_cache.meta_w, pos_b, enc_b)
 
 
 def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,
@@ -339,8 +350,8 @@ def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,
     """
     b, _ = x_t.shape
     H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
-    q, k_t, v_t = _decode_qkv(p, x_t, spec, regions.pos + 1)
-    pos = regions.pos + 1
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
     layer_cache = C.decode_append(layer_cache, k_t, v_t, pos)
 
     n_max = layer_cache.k.shape[1]
@@ -355,8 +366,10 @@ def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,
     else:
         meta = E.KeyMetadata(layer_cache.meta_ids, layer_cache.meta_codes,
                              layer_cache.meta_w)
-        valid = C.retrieval_valid_mask(n_max, regions, pcfg)  # (n_max,)
-        valid = jnp.broadcast_to(valid, (b, G, 1, n_max))
+        valid = C.retrieval_valid_mask(n_max, regions, pcfg)
+        if valid.ndim == 1:                       # scalar-region call site
+            valid = valid[None]
+        valid = jnp.broadcast_to(valid[:, None, None, :], (b, G, 1, n_max))
         qt = E.encode_query(q_grp, pcfg, signs)
         meta_b = jax.tree.map(lambda a: a[:, :, None], meta)  # (b,G,1,n,B)
         res = R.retrieve(meta_b, qt, valid, pcfg, num_candidates, pcfg.top_k,

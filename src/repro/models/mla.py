@@ -136,7 +136,7 @@ def mla_prefill_cache(p: dict, x: jax.Array, cache: MLACache, cfg: ModelConfig,
 def mla_promote_block(mcache: MLACache, start: jax.Array, pcfg: ParisKVConfig,
                       signs: jax.Array) -> MLACache:
     """Encode metadata for latent rows [start, start+interval) (sliding-window
-    update for the latent cache)."""
+    update for the latent cache). Scalar ``start``, all batch rows."""
     blk = jax.lax.dynamic_slice_in_dim(
         mcache.latent, start, pcfg.update_interval, axis=1)
     meta = E.encode_keys(blk[:, None], pcfg, signs)
@@ -150,27 +150,55 @@ def mla_promote_block(mcache: MLACache, start: jax.Array, pcfg: ParisKVConfig,
     )
 
 
+def mla_promote_rows(mcache: MLACache, starts: jax.Array, mask: jax.Array,
+                     pcfg: ParisKVConfig, signs: jax.Array) -> MLACache:
+    """Per-row promotion: row ``i`` with ``mask[i]`` encodes latent rows
+    [starts[i], starts[i]+interval); unmasked rows are unchanged."""
+    U = pcfg.update_interval
+    b = mcache.latent.shape[0]
+    starts = jnp.broadcast_to(jnp.asarray(starts, jnp.int32), (b,))
+    blk = jax.vmap(lambda lat, s: jax.lax.dynamic_slice_in_dim(
+        lat, s, U, axis=0))(mcache.latent, starts)       # (b, U, r+dr)
+    meta = E.encode_keys(blk[:, None], pcfg, signs)      # (b, 1, U, B)
+
+    def upd(dst, new):
+        out = jax.vmap(lambda d, n, s: jax.lax.dynamic_update_slice_in_dim(
+            d, n, s, axis=1))(dst, new, starts)
+        m = mask.reshape((b,) + (1,) * (dst.ndim - 1))
+        return jnp.where(m, out, dst)
+
+    return mcache._replace(
+        meta_ids=upd(mcache.meta_ids, meta.centroid_ids),
+        meta_codes=upd(mcache.meta_codes, meta.codes),
+        meta_w=upd(mcache.meta_w, meta.weights),
+    )
+
+
 def mla_decode(p: dict, x_t: jax.Array, mcache: MLACache,
                regions: C.CacheRegions, cfg: ModelConfig, signs: jax.Array,
                num_candidates: int, use_pariskv: bool = True
                ) -> Tuple[jax.Array, MLACache]:
-    """Absorbed-form decode with latent-space ParisKV retrieval."""
+    """Absorbed-form decode with latent-space ParisKV retrieval.
+
+    ``regions`` fields are per-row (b,) int32 (scalars broadcast)."""
     b, _ = x_t.shape
     H, dn, dr, dv = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
     pcfg = cfg.pariskv
-    pos = regions.pos + 1
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
 
     q = (x_t @ p["wq"]).reshape(b, H, dn + dr)
     q_n, q_r = q[..., :dn], q[..., dn:]
-    pos_arr = jnp.broadcast_to(pos, (b, 1))
+    pos_arr = pos[:, None]
     q_r = rope(q_r[:, None], pos_arr, cfg.rope_theta)[:, 0]
 
     x3 = x_t[:, None]
     c, k_r = _latent_kv(p, x3, cfg, pos_arr)
     lat_t = jnp.concatenate([c, k_r], -1)[:, 0]              # (b, r+dr)
-    mcache = mcache._replace(latent=jax.lax.dynamic_update_slice_in_dim(
-        mcache.latent, lat_t[:, None].astype(mcache.latent.dtype), pos, 1))
+    mcache = mcache._replace(latent=jax.vmap(
+        lambda lat, t, s: jax.lax.dynamic_update_slice_in_dim(
+            lat, t[None], s, axis=0))(
+        mcache.latent, lat_t.astype(mcache.latent.dtype), pos))
 
     # absorb W_UK into the query:  q_eff = q_nope @ W_UK^T(head)  ∈ R^r
     w_uk = p["w_uk"].reshape(r, H, dn)
@@ -183,8 +211,10 @@ def mla_decode(p: dict, x_t: jax.Array, mcache: MLACache,
 
     if use_pariskv:
         meta = E.KeyMetadata(mcache.meta_ids, mcache.meta_codes, mcache.meta_w)
-        valid = jnp.broadcast_to(C.retrieval_valid_mask(n_max, regions, pcfg),
-                                 (b, 1, 1, n_max))
+        valid = C.retrieval_valid_mask(n_max, regions, pcfg)
+        if valid.ndim == 1:                       # scalar-region call site
+            valid = valid[None]
+        valid = jnp.broadcast_to(valid[:, None, None, :], (b, 1, 1, n_max))
         qt = E.encode_query(q_lat[:, None], pcfg, signs)     # group dim = 1
         meta_b = jax.tree.map(lambda a: a[:, :, None], meta)
         res = R.retrieve(meta_b, qt, valid, pcfg, num_candidates,

@@ -10,9 +10,19 @@ stage, stacked over the stage's repeats, with a per-LayerDef cache kind:
   ssm                 → models.ssm.SSMCache (O(1) recurrent state)
   hybrid              → {"kv": LayerKVCache, "ssm": SSMCache}
 
-All layers share one CacheRegions (positions advance in lockstep); the
-sliding-window metadata promotion triggers globally and each ParisKV layer
-encodes its own block (amortized update, paper §4.2.1/D.2).
+All layers share one CacheRegions whose ``pos``/``enc_end`` are **per-row
+(b,) vectors**: each sequence in the batch advances independently
+(continuous batching admits requests into cache slots mid-flight, so rows
+are never in lockstep). The sliding-window metadata promotion triggers
+per row; the block encode runs under a single "any row triggered" lax.cond
+and is applied only to triggered rows (amortized update, §4.2.1/D.2).
+
+Prompts are LEFT-aligned: ``prefill(..., lengths=)`` accepts per-row true
+prompt lengths, gathers last-token logits per row, and sets per-row
+regions; pad positions beyond a row's length are never attended and are
+overwritten as the row decodes. ``decode_chunk`` scans ``decode_step`` N
+steps on-device (argmax sampling + per-slot active mask) so a serving host
+syncs once per chunk instead of once per token.
 """
 from __future__ import annotations
 
@@ -115,35 +125,60 @@ def make_caches(cfg: ModelConfig, batch: int, n_max: int,
     return caches
 
 
-def regions_spec(as_spec: bool = False) -> CC.CacheRegions:
+def regions_spec(batch: int, as_spec: bool = False) -> CC.CacheRegions:
     if as_spec:
-        s = jax.ShapeDtypeStruct((), jnp.int32)
+        s = jax.ShapeDtypeStruct((batch,), jnp.int32)
         return CC.CacheRegions(pos=s, enc_end=s)
-    return CC.CacheRegions(pos=jnp.int32(-1), enc_end=jnp.int32(0))
+    return CC.CacheRegions(pos=jnp.full((batch,), -1, jnp.int32),
+                           enc_end=jnp.zeros((batch,), jnp.int32))
 
 
 # ------------------------------------------------------------- prefill -----
+def _ring_prefill(kv, k_new, v_new, lengths):
+    """Fill a ring-buffer cache from a LEFT-aligned padded prompt.
+
+    Ring layout: position t sits at slot t % w. Per row, slot j must hold
+    the *latest real* position p < lengths[i] with p ≡ j (mod w); slots
+    with no such position stay zero (masked at decode by pos-bounded
+    validity). Gather-based so rows with different lengths vectorize.
+    """
+    w = kv[0].shape[1]
+    b, S = k_new.shape[:2]
+    if lengths is None:
+        lengths = jnp.full((b,), S, jnp.int32)
+    j = jnp.arange(w)[None]                                  # (1, w)
+    last = (lengths - 1)[:, None]                            # (b, 1)
+    p_src = last - (last - j) % w                            # (b, w)
+    ok = p_src >= 0
+    src = jnp.clip(p_src, 0, S - 1)[..., None, None]
+    kc = jnp.where(ok[..., None, None],
+                   jnp.take_along_axis(k_new, src, axis=1), 0)
+    vc = jnp.where(ok[..., None, None],
+                   jnp.take_along_axis(v_new, src, axis=1), 0)
+    return kc.astype(kv[0].dtype), vc.astype(kv[1].dtype)
+
+
 def _layer_prefill(p, x, ld: LayerDef, cfg: ModelConfig, positions, media,
-                   cache, signs):
-    """Layer forward over the full prompt; fills this layer's cache."""
+                   cache, signs, lengths=None, token_valid=None):
+    """Layer forward over the full prompt; fills this layer's cache.
+
+    ``lengths`` (b,) / ``token_valid`` (b, S) describe LEFT-aligned per-row
+    prompt lengths (None → every row uses the full padded length). Causal
+    attention already hides a row's pad tail from its real tokens; SSM
+    state scans have no such masking, so the pad steps are skipped exactly
+    inside ssm_prefill (dt = 0 there).
+    """
     pcfg = cfg.pariskv
     h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
     if ld.mixer == "attn":
         y, k_new, v_new = L.attn_prefill(p["attn"], h, ld.attn, positions)
         if ld.use_pariskv:
-            kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs)
+            kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs,
+                                      lengths=lengths)
             cache = {**cache, "kv": kvc}
         else:
-            w = cache["kv"][0].shape[1]
-            S = k_new.shape[1]
-            # ring layout: token t sits at slot t % w
-            tail_k, tail_v = k_new[:, -w:], v_new[:, -w:]
-            slots = (jnp.arange(S - w, S) % w) if S >= w else jnp.arange(S) % w
-            kc = cache["kv"][0].at[:, slots].set(
-                tail_k.astype(cache["kv"][0].dtype))
-            vc = cache["kv"][1].at[:, slots].set(
-                tail_v.astype(cache["kv"][1].dtype))
-            cache = {**cache, "kv": (kc, vc)}
+            cache = {**cache,
+                     "kv": _ring_prefill(cache["kv"], k_new, v_new, lengths)}
     elif ld.mixer == "mla":
         y = MLA.mla_train(p["attn"], h, cfg, positions)
         mc = MLA.mla_prefill_cache(p["attn"], h, cache["kv"], cfg, positions,
@@ -158,12 +193,15 @@ def _layer_prefill(p, x, ld: LayerDef, cfg: ModelConfig, positions, media,
         cache = {**cache, "media_kv": (km.astype(_dtype(cfg)),
                                        vm.astype(_dtype(cfg)))}
     elif ld.mixer == "ssm":
-        y, sc = SSM.ssm_prefill(p["ssm"], h, cfg)
+        y, sc = SSM.ssm_prefill(p["ssm"], h, cfg, token_valid=token_valid,
+                                lengths=lengths)
         cache = {**cache, "ssm": sc}
     elif ld.mixer == "hybrid":
         ya, k_new, v_new = L.attn_prefill(p["attn"], h, ld.attn, positions)
-        ys, sc = SSM.ssm_prefill(p["ssm"], h, cfg)
-        kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs)
+        ys, sc = SSM.ssm_prefill(p["ssm"], h, cfg, token_valid=token_valid,
+                                 lengths=lengths)
+        kvc, _ = CC.prefill_write(cache["kv"], k_new, v_new, pcfg, signs,
+                                  lengths=lengths)
         y = 0.5 * (ya + ys)
         cache = {**cache, "kv": kvc, "ssm": sc}
     x = x + y.astype(x.dtype)
@@ -187,13 +225,24 @@ def _layer_prefill(p, x, ld: LayerDef, cfg: ModelConfig, positions, media,
 
 
 def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
-            media: Optional[jax.Array] = None
+            media: Optional[jax.Array] = None,
+            lengths: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, ServeState]:
-    """Process the prompt; returns last-position logits + populated caches."""
+    """Process the prompt; returns last-position logits + populated caches.
+
+    ``lengths`` (b,) int32: true prompt length per row for LEFT-aligned
+    padded batches (None → every row spans the full S). Logits are gathered
+    at each row's last real token and regions are per-row.
+    """
     b, S = tokens.shape
     signs = rotation_signs(cfg)
     x = _embed(params, cfg, tokens)
     positions = jnp.broadcast_to(jnp.arange(S), (b, S))
+    lens_b = None
+    token_valid = None
+    if lengths is not None:
+        lens_b = jnp.asarray(lengths, jnp.int32)
+        token_valid = jnp.arange(S)[None] < lens_b[:, None]
     if cfg.family == "audio":
         media = encoder_fwd(params, cfg, media)
     caches = make_caches(cfg, b, n_max)
@@ -206,38 +255,53 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
             for i, ld in enumerate(stage.layers):
                 x, new_c[f"l{i}"] = _layer_prefill(
                     p_slice[f"l{i}"], x, ld, cfg, positions, media,
-                    c_slice[f"l{i}"], signs)
+                    c_slice[f"l{i}"], signs, lengths=lens_b,
+                    token_valid=token_valid)
             return x, new_c
 
         x, filled = jax.lax.scan(body, x, (sp, sc))
         new_caches.append(filled)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _unembed(params, cfg, x[:, -1])
-    pcfg = cfg.pariskv
-    regions = CC.CacheRegions(
-        pos=jnp.int32(S - 1),
-        enc_end=jnp.int32(max(min(pcfg.sink_size, S), S - pcfg.local_size)))
-    return logits, ServeState(new_caches, regions)
+    if lens_b is None:
+        x_last = x[:, -1]
+        lens_b = jnp.full((b,), S, jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(
+            x, (lens_b - 1)[:, None, None], axis=1)[:, 0]
+    logits = _unembed(params, cfg, x_last)
+    return logits, ServeState(new_caches,
+                              CC.initial_regions(lens_b, cfg.pariskv))
 
 
 # --------------------------------------------------------------- decode ----
 def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                   signs, num_candidates: int, will_promote, media=None,
                   dist=None):
+    """One layer of one decode step.
+
+    ``regions`` fields and ``will_promote`` are per-row (b,) vectors: each
+    row promotes its own block when *its* window fills; the block encode is
+    guarded by a single any-row lax.cond so quiet steps stay cheap."""
     pcfg = cfg.pariskv
+    b = x_t.shape[0]
     h = L.rms_norm(x_t[:, None], p["norm_attn"], cfg.norm_eps)[:, 0]
     pos = regions.pos + 1
+    promote_mask = jnp.broadcast_to(jnp.asarray(will_promote), (b,))
+
+    def maybe_promote_rows(c):
+        return jax.lax.cond(
+            jnp.any(promote_mask),
+            lambda cc: CC.promote_rows(cc, regions.enc_end, promote_mask,
+                                       pcfg, signs),
+            lambda cc: cc, c)
+
     if ld.mixer == "attn":
         if ld.use_pariskv:
             y, kvc = L.attn_decode_pariskv(
                 p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
                 num_candidates, dist=dist)
             if os.environ.get("REPRO_NO_PROMOTE") != "1":  # cost bisection
-                kvc = jax.lax.cond(
-                    will_promote,
-                    lambda c: CC.promote_block(c, regions.enc_end, pcfg,
-                                               signs),
-                    lambda c: c, kvc)
+                kvc = maybe_promote_rows(kvc)
             cache = {**cache, "kv": kvc}
         elif isinstance(cache["kv"], CC.LayerKVCache):
             # baseline full-attention decode over the ParisKV store
@@ -252,8 +316,9 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         y, mc = MLA.mla_decode(p["attn"], h, cache["kv"], regions, cfg, signs,
                                num_candidates)
         mc = jax.lax.cond(
-            will_promote,
-            lambda c: MLA.mla_promote_block(c, regions.enc_end, pcfg, signs),
+            jnp.any(promote_mask),
+            lambda c: MLA.mla_promote_rows(c, regions.enc_end, promote_mask,
+                                           pcfg, signs),
             lambda c: c, mc)
         cache = {**cache, "kv": mc}
     elif ld.mixer == "cross":
@@ -272,10 +337,7 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         ya, kvc = L.attn_decode_pariskv(
             p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
             num_candidates, dist=dist)
-        kvc = jax.lax.cond(
-            will_promote,
-            lambda c: CC.promote_block(c, regions.enc_end, pcfg, signs),
-            lambda c: c, kvc)
+        kvc = maybe_promote_rows(kvc)
         ys, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
         y = 0.5 * (ya + ys)
         cache = {**cache, "kv": kvc, "ssm": sc}
@@ -300,18 +362,31 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
-                use_pariskv: bool = True, dist=None
+                use_pariskv: bool = True, dist=None, active=None
                 ) -> Tuple[jax.Array, ServeState]:
     """One decode step: token (b,) int32 → (logits (b, v), new state).
+
+    Rows advance independently (per-row regions). ``active`` (b,) bool
+    gates advancement: inactive rows (free/finished slots in a continuous-
+    batching engine) keep their ``pos``/``enc_end`` frozen and never
+    promote — their compute still runs (SPMD) but writes only touch the
+    already-dead position pos+1, so their committed cache state is
+    untouched until the slot is re-admitted.
 
     dist: optional (mesh, seq_axes, batch_axes) — enables the context-
     parallel hierarchical retrieval (EXPERIMENTS §Perf E1/E2) on ParisKV
     layers when the cache is sequence-sharded."""
     pcfg = cfg.pariskv
+    b = token.shape[0]
     signs = rotation_signs(cfg)
     x_t = _embed(params, cfg, token[:, None])[:, 0]
-    regions = state.regions
-    will_promote = CC.promote_trigger(regions, pcfg)
+    pos_b = jnp.broadcast_to(jnp.asarray(state.regions.pos, jnp.int32), (b,))
+    enc_b = jnp.broadcast_to(jnp.asarray(state.regions.enc_end, jnp.int32),
+                             (b,))
+    regions = CC.CacheRegions(pos=pos_b, enc_end=enc_b)
+    act = (jnp.ones((b,), bool) if active is None
+           else jnp.broadcast_to(active, (b,)))
+    will_promote = CC.promote_trigger(regions, pcfg) & act
     n_max = _cache_n_max(cfg, state.caches)
     num_candidates = pcfg.candidate_count(n_max)
 
@@ -334,11 +409,60 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
     x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
     logits = _unembed(params, cfg, x_t)
     new_regions = CC.CacheRegions(
-        pos=regions.pos + 1,
-        enc_end=jnp.where(will_promote,
-                          regions.enc_end + pcfg.update_interval,
-                          regions.enc_end))
+        pos=jnp.where(act, pos_b + 1, pos_b),
+        enc_end=jnp.where(will_promote, enc_b + pcfg.update_interval, enc_b))
     return logits, ServeState(new_caches, new_regions)
+
+
+# ---------------------------------------------------- chunked decode --------
+class SlotState(NamedTuple):
+    """Device-resident state of a slot-based continuous-batching engine.
+
+    caches/regions span ``max_batch`` cache slots; ``cur_tok`` is the last
+    emitted token per slot and ``remaining`` the number of tokens each slot
+    still has to emit (0 ⇒ slot idle/free).
+    """
+    caches: Any
+    regions: CC.CacheRegions
+    cur_tok: jax.Array    # (b,) int32
+    remaining: jax.Array  # (b,) int32
+
+
+def init_slot_state(cfg: ModelConfig, batch: int, n_max: int) -> SlotState:
+    return SlotState(
+        caches=make_caches(cfg, batch, n_max),
+        regions=regions_spec(batch),
+        cur_tok=jnp.zeros((batch,), jnp.int32),
+        remaining=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
+                 use_pariskv: bool = True, eos_id: Optional[int] = None,
+                 dist=None) -> Tuple[jax.Array, SlotState]:
+    """Run ``num_steps`` decode steps fully on-device (lax.scan): greedy
+    argmax sampling, per-slot active masking, one host sync per chunk.
+
+    Returns (tokens (b, num_steps) int32 with -1 at inactive steps, state).
+    Valid tokens form a prefix per row: the host recovers each slot's
+    emissions by scanning for the first -1 sentinel (argmax emits only
+    non-negative token ids, so the sentinel is unambiguous).
+    """
+    def step(st, _):
+        active = st.remaining > 0
+        logits, new = decode_step(params, cfg, st.cur_tok,
+                                  ServeState(st.caches, st.regions),
+                                  use_pariskv=use_pariskv, dist=dist,
+                                  active=active)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        emit = jnp.where(active, nxt, -1)
+        rem = st.remaining - active.astype(jnp.int32)
+        if eos_id is not None:
+            rem = jnp.where(active & (nxt == eos_id), 0, rem)
+        cur = jnp.where(active, nxt, st.cur_tok)
+        return SlotState(new.caches, new.regions, cur, rem), emit
+
+    final, emitted = jax.lax.scan(step, state, None, length=num_steps)
+    return jnp.moveaxis(emitted, 0, 1), final
 
 
 def dataclasses_replace_nopk(ld: LayerDef) -> LayerDef:

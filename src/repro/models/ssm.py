@@ -166,7 +166,8 @@ def ssm_cache_spec(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SSMCache:
                     conv_buf=sds((batch, cfg.ssm_conv_width - 1, conv_dim), dtype))
 
 
-def _ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, chunk: int):
+def _ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, chunk: int,
+               token_valid=None):
     b, l, d = x.shape
     d_in, nh, hp, n, g = ssm_dims(cfg)
     xz = x @ p["w_in"]
@@ -176,6 +177,11 @@ def _ssm_apply(p: dict, x: jax.Array, cfg: ModelConfig, chunk: int):
     Bm = xBC_act[..., d_in:d_in + g * n].reshape(b, l, g, n)
     Cm = xBC_act[..., d_in + g * n:].reshape(b, l, g, n)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if token_valid is not None:
+        # dt = 0 at pad positions makes the recurrence an exact identity
+        # there (decay exp(0·A) = 1, update dt·B·x = 0): the final state of
+        # a LEFT-aligned padded row equals the state after its real tokens.
+        dt = dt * token_valid[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])
     ck = min(chunk, l)
     y, final_state = ssd_chunked(xs.astype(jnp.float32), dt, A,
@@ -196,12 +202,24 @@ def ssm_train(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def ssm_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
-                chunk: int = 256) -> Tuple[jax.Array, SSMCache]:
+                chunk: int = 256, token_valid=None, lengths=None
+                ) -> Tuple[jax.Array, SSMCache]:
     """Full-sequence SSD that also returns the decode cache (final recurrent
-    state + conv ring tail = last k-1 *pre-activation* conv inputs)."""
-    out, final_state, xBC = _ssm_apply(p, x, cfg, chunk)
+    state + conv ring tail = last k-1 *pre-activation* conv inputs).
+
+    ``token_valid`` (b, l) / ``lengths`` (b,) support LEFT-aligned padded
+    rows: pad positions are skipped exactly in the recurrence and the conv
+    tail holds each row's last k-1 *real* inputs."""
+    out, final_state, xBC = _ssm_apply(p, x, cfg, chunk, token_valid)
     k = cfg.ssm_conv_width
-    tail = xBC[:, -(k - 1):]
+    if lengths is None:
+        tail = xBC[:, -(k - 1):]
+    else:
+        idx = lengths[:, None] - (k - 1) + jnp.arange(k - 1)[None]  # (b, k-1)
+        ok = idx >= 0          # before the prompt start: causal zero-padding
+        gathered = jnp.take_along_axis(
+            xBC, jnp.clip(idx, 0, xBC.shape[1] - 1)[..., None], axis=1)
+        tail = jnp.where(ok[..., None], gathered, 0)
     return out, SSMCache(final_state, tail)
 
 

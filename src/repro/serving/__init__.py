@@ -1,1 +1,2 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Request, ServingEngine, WaveServingEngine)

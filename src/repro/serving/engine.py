@@ -1,26 +1,50 @@
-"""Batched serving engine over the ParisKV decode path.
+"""Serving engines over the ParisKV decode path.
 
-Lifecycle (paper Fig. 2): requests queue → padded-batch *prefill* (KV +
-metadata build, full-precision store conceptually offloaded) → lockstep
-*decode* with two-stage retrieval per step → detokenized completions.
+``ServingEngine`` (the default) is a **slot-based continuous-batching
+scheduler** (paper Fig. 2 lifecycle; LouisKV/FreeKV-style per-request
+state):
 
-Scheduling model: static max_batch with wave-style continuous batching —
-new requests join at wave boundaries (positions advance in lockstep per
-wave, which is what keeps a single CacheRegions per wave; per-request
-position tracking is listed in DESIGN.md §8 as future work). Prompts are
-right-aligned by padding to the wave's max prompt length so Sink/Local
-regions line up.
+* The device holds a fixed pool of ``max_batch`` cache slots
+  (``models.serve.SlotState``): stacked per-layer caches plus per-slot
+  ``pos`` / ``enc_end`` / ``cur_tok`` / ``remaining`` vectors. Rows are
+  fully independent — per-row CacheRegions, per-row sliding-window
+  promotion — so slots never run in lockstep.
+* Admission happens at any chunk boundary: a queued request is prefilled
+  solo (batch=1, prompt LEFT-aligned and padded to a power-of-two length
+  bucket to bound compilations) and its cache rows are scattered into a
+  free slot (``dynamic_update_slice`` on every cache leaf). Finished
+  sequences are evicted at chunk boundaries and their slots reused
+  mid-flight — no wave barriers.
+* Decoding runs as a **multi-token inner loop**: ``decode_chunk`` scans
+  ``chunk_size`` steps on-device (greedy argmax sampling + per-slot active
+  mask), so the host syncs once per chunk instead of once per token.
+
+Timing is honest and per-request: ``ttft_s`` is measured from the moment
+the request is admitted (popped from the queue) to its first token being
+ready on the host; ``decode_s`` is the wall time from first token to the
+end of the chunk in which the request finished (chunk-boundary
+granularity, ± chunk_size·TPOT).
+
+``WaveServingEngine`` preserves the previous lockstep wave scheduler
+(padded-batch prefill, whole-wave decode) as a baseline for
+``benchmarks/bench_continuous_batching.py``. Its timing is wave-level by
+construction and documented as such.
+
+Deferred (ROADMAP · Open items): async/overlapped prefill (prefill
+currently blocks the decode loop), paged KV blocks (a slot owns a
+contiguous n_max region), and non-greedy sampling.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cache as CC
 from repro.core.config import ModelConfig
 from repro.models import serve as SV
 
@@ -33,12 +57,161 @@ class Request:
     media: Optional[np.ndarray] = None
     # filled by the engine:
     output: Optional[np.ndarray] = None
-    ttft_s: float = 0.0
-    decode_s: float = 0.0
+    ttft_s: float = 0.0             # admission → first token (per request)
+    decode_s: float = 0.0           # first token → completion (per request)
+    # engine-internal:
+    _tokens: Optional[list] = None
+    _t_first: float = 0.0
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    """Smallest power of two ≥ max(n, floor) — bounds prefill recompiles."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServingEngine:
-    """Drives prefill/decode for waves of requests."""
+    """Slot-based continuous-batching engine (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
+                 max_batch: int = 8, greedy: bool = True, use_pariskv=True,
+                 chunk_size: int = 8, eos_id: Optional[int] = None):
+        assert greedy, "sampling is on-device argmax; greedy only for now"
+        self.cfg = cfg
+        self.params = params
+        self.n_max = n_max
+        self.max_batch = max_batch
+        self.use_pariskv = use_pariskv
+        self.chunk_size = chunk_size
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
+                                             lengths=lens))
+        self._chunk = jax.jit(
+            lambda p, st: SV.decode_chunk(p, cfg, st, chunk_size,
+                                          use_pariskv=use_pariskv,
+                                          eos_id=eos_id),
+            donate_argnums=(1,))
+        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.n_max:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens exceeds n_max={self.n_max}")
+        self.queue.append(req)
+
+    # ------------------------------------------------------ device helpers --
+    @staticmethod
+    def _admit_impl(state: SV.SlotState, slot, caches1, regions1, tok0, rem):
+        """Scatter a batch=1 prefill result into cache slot ``slot``.
+
+        Every cache leaf is stacked (repeat, b, ...) — batch is uniformly
+        axis 1, so one dynamic_update_slice per leaf installs the row.
+        """
+        caches = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small, slot, axis=1),
+            state.caches, caches1)
+        return SV.SlotState(
+            caches=caches,
+            regions=CC.CacheRegions(
+                pos=state.regions.pos.at[slot].set(regions1.pos[0]),
+                enc_end=state.regions.enc_end.at[slot].set(
+                    regions1.enc_end[0])),
+            cur_tok=state.cur_tok.at[slot].set(tok0),
+            remaining=state.remaining.at[slot].set(rem))
+
+    def _prefill_request(self, req: Request):
+        """Solo prefill into a fresh batch=1 state; returns (state1, tok0)."""
+        # bucket is capped at n_max: the padded prompt must fit the cache
+        # (submit() already guarantees len(prompt) + gen ≤ n_max)
+        s = min(_bucket(len(req.prompt)), self.n_max)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :len(req.prompt)] = req.prompt           # LEFT-aligned
+        lens = jnp.asarray([len(req.prompt)], jnp.int32)
+        media = None
+        if req.media is not None:
+            media = jnp.asarray(req.media)[None]
+        logits, state1 = self._prefill(self.params, jnp.asarray(toks), lens,
+                                       media)
+        tok0 = int(jnp.argmax(logits[0], -1))            # blocks: first token
+        return state1, tok0
+
+    # ------------------------------------------------------------- serving --
+    def run(self) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        done: List[Request] = []
+        state = SV.init_slot_state(self.cfg, self.max_batch, self.n_max)
+        slots: List[Optional[Request]] = [None] * self.max_batch
+
+        while self.queue or any(r is not None for r in slots):
+            # --- admission: fill free slots from the queue -----------------
+            for slot in range(self.max_batch):
+                if slots[slot] is not None or not self.queue:
+                    continue
+                req = self.queue.pop(0)
+                t_admit = time.perf_counter()
+                state1, tok0 = self._prefill_request(req)
+                t_first = time.perf_counter()
+                req.ttft_s = t_first - t_admit
+                req._t_first = t_first
+                req._tokens = [tok0]
+                if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+                    req.output = np.asarray(req._tokens, np.int32)
+                    req.decode_s = 0.0
+                    done.append(req)
+                    continue
+                state = self._admit_fn(
+                    state, jnp.int32(slot), state1.caches, state1.regions,
+                    jnp.int32(tok0), jnp.int32(req.max_new_tokens - 1))
+                slots[slot] = req
+            if all(r is None for r in slots):
+                continue    # everything finished at prefill; maybe more queued
+
+            # --- one decode chunk: a single host sync ----------------------
+            tokens, state = self._chunk(self.params, state)
+            tokens = np.asarray(tokens)                  # sync point
+            rem_after = np.asarray(state.remaining)
+            t_now = time.perf_counter()
+
+            # --- collection: evict finished slots for reuse ----------------
+            for slot, req in enumerate(slots):
+                if req is None:
+                    continue
+                # valid emissions are the non-negative prefix (-1 marks
+                # inactive steps); with eos_id, remaining jumps to 0 so
+                # rem_before - rem_after would over-count — the sentinel
+                # scan is the reliable source
+                row = tokens[slot]
+                n_emit = int(np.argmax(row < 0)) if (row < 0).any() \
+                    else len(row)
+                req._tokens.extend(row[:n_emit].tolist())
+                if rem_after[slot] <= 0:
+                    out = np.asarray(req._tokens[:req.max_new_tokens],
+                                     np.int32)
+                    if self.eos_id is not None and self.eos_id in out:
+                        out = out[:int(np.argmax(out == self.eos_id)) + 1]
+                    req.output = out
+                    req.decode_s = t_now - req._t_first
+                    done.append(req)
+                    slots[slot] = None
+        return done
+
+
+class WaveServingEngine:
+    """Legacy lockstep wave scheduler (baseline for benchmarks).
+
+    All requests of a wave are prefilled as one right-aligned padded batch
+    and decoded together to the wave's max generation length; new requests
+    only join at wave boundaries. Timing is **wave-level**: every request
+    of a wave reports the shared batched-prefill latency as ttft_s and the
+    shared decode wall time as decode_s (the slot engine reports honest
+    per-request numbers instead).
+    """
 
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
                  max_batch: int = 8, greedy: bool = True, use_pariskv=True):
@@ -49,8 +222,7 @@ class ServingEngine:
         self.greedy = greedy
         self.use_pariskv = use_pariskv
         self._prefill = jax.jit(
-            lambda p, t, m: SV.prefill(p, cfg, t, n_max, m),
-            static_argnums=())
+            lambda p, t, m: SV.prefill(p, cfg, t, n_max, m))
         self._decode = jax.jit(
             lambda p, tok, st: SV.decode_step(p, cfg, tok, st,
                                               use_pariskv=use_pariskv))
@@ -68,7 +240,6 @@ class ServingEngine:
         return jnp.asarray(toks)
 
     def run(self) -> List[Request]:
-        """Serve everything in the queue; returns completed requests."""
         done: List[Request] = []
         while self.queue:
             wave = self.queue[:self.max_batch]

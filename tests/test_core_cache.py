@@ -22,8 +22,9 @@ def test_prefill_sets_regions():
     k = jax.random.normal(jax.random.PRNGKey(0), (1, S, G, D))
     v = jax.random.normal(jax.random.PRNGKey(1), (1, S, G, D))
     cache, regions = prefill_write(cache, k, v, CFG, SIGNS)
-    assert int(regions.pos) == S - 1
-    assert int(regions.enc_end) == S - CFG.local_size
+    assert regions.pos.shape == (1,) and regions.enc_end.shape == (1,)
+    assert int(regions.pos[0]) == S - 1
+    assert int(regions.enc_end[0]) == S - CFG.local_size
     np.testing.assert_allclose(np.asarray(cache.k[0, :S], np.float32),
                                np.asarray(k[0], np.float32), rtol=2e-2, atol=2e-2)
 
@@ -33,7 +34,7 @@ def test_sliding_window_update_promotes_blocks():
     S = 256
     k = jax.random.normal(jax.random.PRNGKey(0), (1, S, G, D))
     cache, regions = prefill_write(cache, k, k, CFG, SIGNS)
-    enc0 = int(regions.enc_end)
+    enc0 = int(regions.enc_end[0])
     W = window_size(CFG)
     rng = jax.random.PRNGKey(2)
     promoted = 0
@@ -44,11 +45,11 @@ def test_sliding_window_update_promotes_blocks():
         cache = decode_append(cache, kt, kt, pos)
         regions = regions._replace(pos=pos)
         cache, regions = maybe_promote(cache, regions, CFG, SIGNS)
-        if int(regions.enc_end) > enc0 + promoted * CFG.update_interval:
+        if int(regions.enc_end[0]) > enc0 + promoted * CFG.update_interval:
             promoted += 1
     assert promoted >= 1
     # window invariant: dense span never exceeds W
-    assert int(regions.pos) + 1 - int(regions.enc_end) < W
+    assert int(regions.pos[0]) + 1 - int(regions.enc_end[0]) < W
     # metadata for the promoted block is non-trivial (weights > 0)
     w = np.asarray(cache.meta_w[0, :, enc0:enc0 + CFG.update_interval])
     assert (w > 0).all()
@@ -79,11 +80,12 @@ def test_sparse_attention_approaches_full_attention():
     cache, regions = prefill_write(cache, k, v, CFG, SIGNS)
 
     meta = KeyMetadata(cache.meta_ids, cache.meta_codes, cache.meta_w)
-    valid = retrieval_valid_mask(n_max, regions, CFG)[None, None]
+    valid = retrieval_valid_mask(n_max, regions, CFG)  # (1, n_max) per-row
+    valid = jnp.broadcast_to(valid[:, None, None, :], (1, G, 1, n_max))
     qg = encode_query(q.reshape(1, G, H // G, D), CFG, SIGNS)
     qt = jax.tree.map(lambda a: a, qg)
     meta_b = jax.tree.map(lambda a: a[:, :, None], meta)  # broadcast head dim
-    res = retrieve(meta_b, qt, valid[:, :, None], CFG, 256, CFG.top_k)
+    res = retrieve(meta_b, qt, valid, CFG, 256, CFG.top_k)
 
     W = window_size(CFG)
     ws = jnp.maximum(regions.pos + 1 - W, 0)

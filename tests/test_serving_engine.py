@@ -1,0 +1,195 @@
+"""Continuous-batching refactor tests: per-sequence regions & promotion,
+chunked decode parity, slot reuse, staggered-admission token identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import srht
+from repro.core.cache import (CacheRegions, decode_append, init_layer_cache,
+                              maybe_promote, prefill_write, window_size)
+from repro.core.config import ParisKVConfig
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.serving import Request, ServingEngine
+
+CFG = ParisKVConfig(sink_size=16, local_size=64, update_interval=32,
+                    top_k=32, min_candidates=64)
+D, G = 32, 2
+SIGNS = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D), CFG.srht_seed))
+
+
+# ------------------------------------------------- per-sequence regions ----
+def test_per_sequence_promotion_independent():
+    """Two rows with different prompt lengths promote independently, and the
+    batched cache/regions stay bit-identical to solo (batch=1) references."""
+    n_max, S = 256, 128
+    lens = [128, 40]   # spans 64 vs 24 after prefill → promote at ≠ steps
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, S, G, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, S, G, D))
+
+    cache = init_layer_cache(2, n_max, G, D, CFG)
+    cache, regions = prefill_write(cache, k, v, CFG, SIGNS,
+                                   lengths=jnp.asarray(lens))
+    np.testing.assert_array_equal(np.asarray(regions.pos), [127, 39])
+    np.testing.assert_array_equal(np.asarray(regions.enc_end), [64, 16])
+
+    solo = []
+    for i in range(2):
+        c1 = init_layer_cache(1, n_max, G, D, CFG)
+        c1, r1 = prefill_write(c1, k[i:i + 1], v[i:i + 1], CFG, SIGNS,
+                               lengths=jnp.asarray([lens[i]]))
+        solo.append((c1, r1))
+
+    steps = 40   # row 0 fills its window after 32 steps; row 1 needs 72
+    rng = jax.random.PRNGKey(2)
+    for _ in range(steps):
+        rng, sub = jax.random.split(rng)
+        kt = jax.random.normal(sub, (2, G, D))
+        cache = decode_append(cache, kt, kt, regions.pos + 1)
+        regions = regions._replace(pos=regions.pos + 1)
+        cache, regions = maybe_promote(cache, regions, CFG, SIGNS)
+        new_solo = []
+        for i, (c1, r1) in enumerate(solo):
+            c1 = decode_append(c1, kt[i:i + 1], kt[i:i + 1], r1.pos + 1)
+            r1 = r1._replace(pos=r1.pos + 1)
+            c1, r1 = maybe_promote(c1, r1, CFG, SIGNS)
+            new_solo.append((c1, r1))
+        solo = new_solo
+
+    # row 0 promoted once (enc_end 64→96), row 1 untouched (still 16)
+    np.testing.assert_array_equal(np.asarray(regions.enc_end), [96, 16])
+    for i, (c1, r1) in enumerate(solo):
+        assert int(regions.pos[i]) == int(r1.pos[0])
+        assert int(regions.enc_end[i]) == int(r1.enc_end[0])
+        for field in ("k", "v", "meta_ids", "meta_codes", "meta_w"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cache, field)[i], np.float32),
+                np.asarray(getattr(c1, field)[0], np.float32), err_msg=field)
+
+
+def test_prefill_lengths_set_per_row_state():
+    """Model-level prefill with lengths: per-row regions + per-row logits
+    equal to solo prefills of the unpadded prompts."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_max = 256
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, cfg.vocab_size, size=(2, 64)).astype(np.int32)
+    lens = np.asarray([64, 40], np.int32)
+    toks[1, 40:] = 0                                  # left-aligned pad
+
+    logits, state = SV.prefill(params, cfg, jnp.asarray(toks), n_max,
+                               lengths=jnp.asarray(lens))
+    np.testing.assert_array_equal(np.asarray(state.regions.pos), lens - 1)
+
+    for i in range(2):
+        li, st1 = SV.prefill(params, cfg, jnp.asarray(toks[i:i + 1]), n_max,
+                             lengths=jnp.asarray(lens[i:i + 1]))
+        assert int(jnp.argmax(li[0])) == int(jnp.argmax(logits[i]))
+
+
+# ----------------------------------------------------- chunked decode ------
+def test_decode_chunk_matches_step_loop():
+    """decode_chunk (on-device scan, 1 host sync) emits exactly the tokens
+    a per-step decode_step loop produces."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    n_max, S, N = 256, 48, 8
+    rng = np.random.RandomState(1)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, size=(2, S)), jnp.int32)
+
+    logits, st = SV.prefill(params, cfg, toks, n_max)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # reference: step-by-step host loop
+    ref, tok, st_ref = [], tok0, st
+    for _ in range(N):
+        lg, st_ref = SV.decode_step(params, cfg, tok, st_ref)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        ref.append(np.asarray(tok))
+    ref = np.stack(ref, 1)                            # (2, N)
+
+    slot = SV.SlotState(caches=st.caches, regions=st.regions,
+                        cur_tok=tok0,
+                        remaining=jnp.asarray([N, N], jnp.int32))
+    chunk, slot = SV.decode_chunk(params, cfg, slot, N)
+    np.testing.assert_array_equal(np.asarray(chunk), ref)
+    np.testing.assert_array_equal(np.asarray(slot.remaining), [0, 0])
+
+    # a row finishing mid-chunk freezes: emits -1 and stops advancing
+    slot2 = SV.SlotState(caches=st.caches, regions=st.regions,
+                         cur_tok=tok0,
+                         remaining=jnp.asarray([N, 3], jnp.int32))
+    chunk2, slot2 = SV.decode_chunk(params, cfg, slot2, N)
+    c2 = np.asarray(chunk2)
+    np.testing.assert_array_equal(c2[0], ref[0])
+    np.testing.assert_array_equal(c2[1, :3], ref[1, :3])
+    assert (c2[1, 3:] == -1).all()
+    np.testing.assert_array_equal(
+        np.asarray(slot2.regions.pos), [S - 1 + N, S - 1 + 3])
+
+
+# ------------------------------------------- engine: slots & staggering ----
+def test_engine_staggered_admission_matches_solo():
+    """3 requests with different prompt/output lengths on a 2-slot pool:
+    requests are admitted mid-flight into freed slots, yet every request's
+    tokens are identical to a solo (max_batch=1) engine run — and the slot
+    engine syncs once per chunk, not per token. Checked for a mid-chunk-
+    eviction chunk size (4) and the default N=8."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(2)
+    specs = [(33, 6), (48, 9), (70, 5)]   # (prompt_len, max_new)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+               for s, _ in specs]
+
+    def run(max_batch, chunk_size):
+        eng = ServingEngine(cfg, params, n_max=256, max_batch=max_batch,
+                            chunk_size=chunk_size)
+        for i, ((_, gen), p) in enumerate(zip(specs, prompts)):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+        return {r.uid: r for r in eng.run()}
+
+    solo = run(max_batch=1, chunk_size=4)
+    for chunk_size in (4, 8):
+        multi = run(max_batch=2, chunk_size=chunk_size)
+        assert sorted(multi) == [0, 1, 2]
+        for uid, (_, gen) in enumerate(specs):
+            assert multi[uid].output.shape == (gen,)
+            np.testing.assert_array_equal(
+                multi[uid].output, solo[uid].output,
+                err_msg=f"request {uid} (chunk={chunk_size})")
+            assert multi[uid].ttft_s > 0 and multi[uid].decode_s > 0
+
+
+def test_engine_non_power_of_two_n_max():
+    """The prompt-length bucket is capped at n_max: a valid request whose
+    bucket would overshoot a non-power-of-two cache still prefills."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    eng = ServingEngine(cfg, params, n_max=96, max_batch=1, chunk_size=4)
+    prompt = np.arange(70).astype(np.int32) % cfg.vocab_size
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=10))
+    done = eng.run()
+    assert len(done) == 1 and done[0].output.shape == (10,)
+
+
+def test_engine_slot_reuse_after_eviction():
+    """More requests than slots: finished sequences are evicted and their
+    slots re-admitted mid-flight; every request still completes correctly."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.RandomState(3)
+    eng = ServingEngine(cfg, params, n_max=256, max_batch=2, chunk_size=4)
+    gens = [3, 11, 7, 5, 2]
+    for i, gen in enumerate(gens):
+        prompt = rng.randint(0, cfg.vocab_size, size=(24 + 8 * i,))
+        eng.submit(Request(uid=i, prompt=prompt.astype(np.int32),
+                           max_new_tokens=gen))
+    done = eng.run()
+    assert sorted(r.uid for r in done) == list(range(5))
+    for r in done:
+        assert r.output.shape == (gens[r.uid],)
+        assert (r.output >= 0).all() and (r.output < cfg.vocab_size).all()
