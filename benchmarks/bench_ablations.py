@@ -15,15 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import attention_keys, csv_row, query_like
 from repro.core import (ParisKVConfig, encode_keys, encode_query, exact_topk,
                         recall_at_k, retrieve, srht)
 from repro.core import quantizer
-from repro.core import retrieval as R
 from repro.core.encode import KeyMetadata, rotate_split
 
 D = 128

@@ -1,15 +1,24 @@
-"""Continuous batching vs lockstep waves on a mixed-length workload.
+"""Continuous batching: lockstep waves vs contiguous slots vs paged blocks.
 
 Scenario: requests with mixed prompt lengths and mixed output lengths
 (the regime LouisKV/FreeKV call "long input–output serving"). The wave
 engine pads every prompt to the wave max and decodes the whole wave to the
 longest generation — short requests pay for long ones twice. The slot
 engine admits each request into a free cache slot, evicts it the chunk
-after it finishes, and syncs the host once per chunk.
+after it finishes, and syncs the host once per chunk. The paged engine
+additionally shares one physical block pool across all slots, so a fixed
+cache budget admits far more concurrent mixed-length requests than
+``budget / n_max`` contiguous slots.
 
-Derived columns: end-to-end tokens/s (all emitted tokens / wall time) and
-p50/p95 per-request latency (ttft + decode; honest per-request numbers on
-the slot engine, wave-shared ones on the wave engine).
+All three run the same fixed cache budget (``SLOT_BATCH · N_MAX`` tokens);
+the paged engine spends it as a ``POOL_BLOCKS × BLOCK_SIZE`` pool with
+``PAGED_BATCH`` slots. Reported: end-to-end tokens/s, p50/p95 per-request
+latency, p50 TTFT, peak concurrent admissions at that fixed memory, and a
+token-parity check (paged output must equal the contiguous slot engine's).
+
+``run_smoke()`` returns the same numbers machine-readable — the CI
+benchmark job persists them as BENCH_ci.json and fails on >20% tokens/s
+regression vs the committed BENCH_continuous_batching.json baseline.
 """
 from __future__ import annotations
 
@@ -22,15 +31,37 @@ from benchmarks.common import csv_row
 from repro import configs
 from repro.data import SyntheticLMStream
 from repro.models import model as M
-from repro.serving import Request, ServingEngine, WaveServingEngine
+from repro.serving import (PagedServingEngine, Request, ServingEngine,
+                           WaveServingEngine)
 
 # (prompt_len, max_new) — short chatty requests mixed with long ones,
 # queued in an order that staggers completions (exercises slot reuse)
 WORKLOAD = [(48, 4), (160, 24), (32, 8), (96, 4), (224, 16),
             (64, 12), (40, 4), (128, 20)]
 
+N_MAX = 512
+BLOCK_SIZE = 128
+SLOT_BATCH = 4                                  # contiguous: 4×512 tokens
+POOL_BLOCKS = SLOT_BATCH * N_MAX // BLOCK_SIZE  # same 2048-token budget
+PAGED_BATCH = 8                                 # slots are cheap; memory
+                                                # is the pool
 
-def _run_engine(engine, prompts, warmup: bool = True) -> dict:
+
+def _engines(cfg, params):
+    return (
+        ("wave", lambda: WaveServingEngine(
+            cfg, params, n_max=N_MAX, max_batch=SLOT_BATCH)),
+        ("slots", lambda: ServingEngine(
+            cfg, params, n_max=N_MAX, max_batch=SLOT_BATCH, chunk_size=8)),
+        ("paged", lambda: PagedServingEngine(
+            cfg, params, n_max=N_MAX, max_batch=PAGED_BATCH,
+            block_size=BLOCK_SIZE, num_blocks=POOL_BLOCKS, chunk_size=8)),
+    )
+
+
+def _run_engine(make, prompts, warmup: bool = True) -> dict:
+    engine = make()
+
     def once():
         for i, ((_, gen), p) in enumerate(zip(WORKLOAD, prompts)):
             engine.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
@@ -42,35 +73,67 @@ def _run_engine(engine, prompts, warmup: bool = True) -> dict:
         once()          # compile every prompt bucket / chunk / wave shape
     done, wall = once()
     lat = sorted(r.ttft_s + r.decode_s for r in done)
+    ttft = sorted(r.ttft_s for r in done)
     toks = sum(len(r.output) for r in done)
     return dict(
         wall=wall, tok_per_s=toks / wall,
-        p50=lat[len(lat) // 2], p95=lat[min(len(lat) - 1,
-                                            int(0.95 * len(lat)))])
+        p50=lat[len(lat) // 2],
+        p95=lat[min(len(lat) - 1, int(0.95 * len(lat)))],
+        p50_ttft=ttft[len(ttft) // 2],
+        peak=getattr(engine, "peak_concurrency", len(done)),
+        outputs={r.uid: np.asarray(r.output) for r in done})
 
 
-def run() -> list:
-    rows = []
+def _measure() -> dict:
     cfg = configs.smoke("qwen2-1.5b")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     stream = SyntheticLMStream(cfg.vocab_size, seed=4)
     prompts = [stream.sequence(s) for s, _ in WORKLOAD]
-    n_max, batch = 512, 4
+    res = {tag: _run_engine(make, prompts)
+           for tag, make in _engines(cfg, params)}
+    parity = all(
+        np.array_equal(res["slots"]["outputs"][uid],
+                       res["paged"]["outputs"][uid])
+        for uid in range(len(WORKLOAD)))
+    return dict(res=res, parity=parity, arch=cfg.name)
 
-    res = {}
-    for tag, make in (
-        ("slots", lambda: ServingEngine(cfg, params, n_max=n_max,
-                                        max_batch=batch, chunk_size=8)),
-        ("wave", lambda: WaveServingEngine(cfg, params, n_max=n_max,
-                                           max_batch=batch)),
-    ):
-        res[tag] = _run_engine(make(), prompts)   # warm pass inside
-        r = res[tag]
+
+def run_smoke() -> dict:
+    """Machine-readable result for CI regression tracking (BENCH_*.json)."""
+    m = _measure()
+    return {
+        "benchmark": "continuous_batching",
+        "arch": m["arch"],
+        "cache_tokens": SLOT_BATCH * N_MAX,
+        "engines": {
+            tag: {"tok_per_s": round(r["tok_per_s"], 2),
+                  "p50_ttft_s": round(r["p50_ttft"], 5),
+                  "p50_latency_s": round(r["p50"], 5),
+                  "peak_concurrency": int(r["peak"])}
+            for tag, r in m["res"].items()},
+        "capacity_ratio_paged_over_slots":
+            m["res"]["paged"]["peak"] / max(m["res"]["slots"]["peak"], 1),
+        "token_parity_paged_vs_slots": bool(m["parity"]),
+    }
+
+
+def run() -> list:
+    m = _measure()
+    rows = []
+    for tag, r in m["res"].items():
         rows.append(csv_row(
             f"continuous_batching/{tag}", r["wall"] * 1e6,
             f"tok_per_s={r['tok_per_s']:.1f};p50_s={r['p50']:.3f};"
-            f"p95_s={r['p95']:.3f}"))
+            f"p95_s={r['p95']:.3f};p50_ttft_s={r['p50_ttft']:.3f};"
+            f"peak={r['peak']}"))
+    res = m["res"]
     speedup = res["slots"]["tok_per_s"] / max(res["wave"]["tok_per_s"], 1e-9)
     rows.append(csv_row("continuous_batching/speedup", 0.0,
                         f"slots_over_wave={speedup:.2f}x"))
+    cap = res["paged"]["peak"] / max(res["slots"]["peak"], 1)
+    rows.append(csv_row(
+        "continuous_batching/capacity", 0.0,
+        f"paged_peak={res['paged']['peak']};slots_peak={res['slots']['peak']};"
+        f"ratio={cap:.2f}x;fixed_cache_tokens={SLOT_BATCH * N_MAX};"
+        f"token_parity={'ok' if m['parity'] else 'MISMATCH'}"))
     return rows

@@ -8,9 +8,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import attention_keys, csv_row, query_like, time_fn
+from benchmarks.common import attention_keys, csv_row, query_like
 from repro.baselines import magicpig, pqcache
 from repro.core import (ParisKVConfig, encode_keys, encode_query, exact_topk,
                         recall_at_k, retrieve, srht)

@@ -1,26 +1,72 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
-dryrun_results.json.
+"""Render benchmark/dry-run tables.
 
-    PYTHONPATH=src python -m benchmarks.report [--results dryrun_results.json]
+Two data sources, both optional:
+
+* ``BENCH_*.json`` trajectory files (written by ``benchmarks.run --smoke``
+  over successive PRs) → per-engine tokens/s / TTFT / capacity table,
+  oldest first, so regressions and wins are visible as a time series:
+
+      PYTHONPATH=src python -m benchmarks.report            # bench mode
+      PYTHONPATH=src python -m benchmarks.report --bench-glob 'BENCH_*.json'
+
+* ``dryrun_results.json`` → the EXPERIMENTS.md §Dry-run and §Roofline
+  tables (unchanged behaviour):
+
+      PYTHONPATH=src python -m benchmarks.report --results dryrun_results.json
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
-
-from benchmarks.bench_roofline import _body_lookup, terms
+import os
 
 
 def gb(x) -> str:
     return f"{x/1e9:.2f}"
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--results", default="dryrun_results.json")
-    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
-    args = ap.parse_args()
-    recs = json.load(open(args.results))
+# ----------------------------------------------------- BENCH trajectory ----
+def render_bench_trajectory(paths: list) -> None:
+    """One row per (file, benchmark, engine), oldest file first."""
+    records = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# skipping {path}: {e}")
+            continue
+        records.append((payload.get("created_unix", 0), path, payload))
+    if not records:
+        print("no readable BENCH_*.json files found")
+        return
+    records.sort()
+
+    print("### Benchmark trajectory (oldest → newest)\n")
+    print("| file | benchmark | engine | tok/s | p50 TTFT ms | "
+          "p50 latency ms | peak conc | capacity (paged/slots) | parity |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for _, path, payload in records:
+        name = os.path.basename(path)
+        for rec in payload.get("results", []):
+            cap = rec.get("capacity_ratio_paged_over_slots")
+            par = rec.get("token_parity_paged_vs_slots")
+            for engine, m in sorted(rec.get("engines", {}).items()):
+                print(f"| {name} | {rec['benchmark']} | {engine} "
+                      f"| {m.get('tok_per_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('p50_ttft_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('p50_latency_s', float('nan')):.1f} "
+                      f"| {m.get('peak_concurrency', '-')} "
+                      f"| {f'{cap:.2f}x' if cap is not None else '-'} "
+                      f"| {'ok' if par else '✗' if par is not None else '-'} |")
+
+
+# --------------------------------------------------------- dry-run table ---
+def render_dryrun(results_path: str, mesh_filter) -> None:
+    from benchmarks.bench_roofline import _body_lookup, terms
+
+    recs = json.load(open(results_path))
 
     print("### Dry-run table (per-device numbers from the compiled SPMD "
           "module)\n")
@@ -28,7 +74,7 @@ def main() -> None:
           "HBM GB/dev | collective GB/dev | arg GB/dev |")
     print("|---|---|---|---|---|---|---|---|---|")
     for r in recs:
-        if args.mesh and r["mesh"] != args.mesh:
+        if mesh_filter and r["mesh"] != mesh_filter:
             continue
         if not r.get("ok"):
             print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ✗ "
@@ -65,6 +111,26 @@ def main() -> None:
               f"| {t['t_collective']*1e3:.2f} ms | **{t['dominant']}** "
               f"| {t['useful_ratio']:.2f} | {'Y' if t['corrected'] else 'n'} "
               f"| {levers[t['dominant']]} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
+    ap.add_argument("--bench-glob", default="BENCH_*.json",
+                    help="trajectory files to render (bench mode)")
+    args = ap.parse_args()
+
+    bench_files = sorted(glob.glob(args.bench_glob))
+    if bench_files:
+        render_bench_trajectory(bench_files)
+    if os.path.exists(args.results):
+        if bench_files:
+            print()
+        render_dryrun(args.results, args.mesh)
+    elif not bench_files:
+        print(f"nothing to render: no {args.bench_glob} and no "
+              f"{args.results}")
 
 
 if __name__ == "__main__":

@@ -8,16 +8,26 @@ Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
   bench_decode_latency  Table 7              per-step cost vs context length
   bench_kernels         Fig. 6               kernel fusion/selection wins
   bench_throughput      Fig. 7/11            TPOT & throughput vs batch
-  bench_continuous_batching  serving         slot engine vs lockstep waves
+  bench_continuous_batching  serving         wave vs slot vs paged engines
   bench_prefill         Fig. 8               summarization overhead
   bench_memory_scale    §5.2(3)              runnable-range / OOM model
   bench_roofline        deliverable (g)      three-term roofline per combo
+
+CI regression tracking (``--smoke``): every module exposing
+``run_smoke()`` contributes a machine-readable record; the set is written
+to ``--out`` (default BENCH_ci.json) and compared engine-by-engine
+against the committed baseline (default BENCH_continuous_batching.json):
+a tokens/s drop of more than ``--tol`` (default 20%) fails the run.
+``benchmarks/report.py`` renders the trajectory across any BENCH_*.json.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import platform
 import sys
+import time
 import traceback
 
 MODULES = [
@@ -34,10 +44,146 @@ MODULES = [
 ]
 
 
+def _host_fingerprint() -> str:
+    """Identify the machine for baseline comparability. platform.node()
+    alone is too generic (every sandboxed checkout reports e.g. 'runsc'),
+    so fold in arch + cpu count; still heuristic — across-host runs fall
+    back to ratio comparison, the safe mode."""
+    import os
+    return f"{platform.node()}/{platform.machine()}/{os.cpu_count()}cpu"
+
+
+def _smoke_payload(only: str | None) -> dict:
+    """Collect run_smoke() records. Import/run failures of one module
+    don't kill the others — they're recorded and reported (mirrors
+    main()'s per-module try/except) so BENCH_ci.json always gets
+    written and the artifact upload has something to grab."""
+    import jax
+    results = []
+    errors = []
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            if hasattr(mod, "run_smoke"):
+                results.append(mod.run_smoke())
+        except Exception:
+            errors.append(mod_name)
+            traceback.print_exc()
+    return {
+        "schema": 1,
+        "created_unix": int(time.time()),
+        "host": _host_fingerprint(),
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "results": results,
+        "errors": errors,
+    }
+
+
+def check_regression(payload: dict, baseline: dict, tol: float) -> list:
+    """Engine-by-engine tokens/s comparison. Returns failure strings.
+
+    Same host fingerprint as the baseline → absolute tokens/s must stay
+    within ``tol``. Different host (the committed baseline on a CI
+    runner) → absolute throughput is machine-dependent, so each engine is
+    first normalized by the run's own reference engine ("wave", the
+    simplest scheduler) and the *ratios* are compared — a relative
+    regression of one engine against the others still fails while
+    machine speed cancels out. Known trade-offs of the cross-host mode:
+    a wave-*only* speedup deflates the other engines' ratios (refresh the
+    baseline when intentionally changing wave), and a uniform slowdown of
+    all engines cancels — the same-host absolute check is the backstop
+    for that, which is why baselines should be refreshed on the machine
+    that runs CI when possible.
+    """
+    same_host = baseline.get("host") == payload.get("host")
+    base_by_name = {r["benchmark"]: r for r in baseline.get("results", [])}
+    failures = []
+    for rec in payload.get("results", []):
+        base = base_by_name.get(rec["benchmark"])
+        if base is None:
+            continue
+        engines = rec.get("engines", {})
+        base_engines = base.get("engines", {})
+
+        def norm(engs, engine):
+            t = engs.get(engine, {}).get("tok_per_s")
+            if t is None:
+                return None
+            if same_host:
+                return t
+            ref = engs.get("wave", {}).get("tok_per_s")
+            return t / ref if ref else None
+
+        unit = "tok/s" if same_host else "×wave"
+        for engine in engines:
+            if engine == "wave" and not same_host:
+                continue                      # wave is the normalizer
+            got, ref = norm(engines, engine), norm(base_engines, engine)
+            if got is None or ref is None:
+                continue
+            floor = (1.0 - tol) * ref
+            if got < floor:
+                failures.append(
+                    f"{rec['benchmark']}/{engine}: {got:.2f} {unit} "
+                    f"< {floor:.2f} (baseline {ref:.2f}, tol {tol:.0%})")
+        if rec.get("token_parity_paged_vs_slots") is False:
+            failures.append(
+                f"{rec['benchmark']}: paged/slots token parity broken")
+    return failures
+
+
+def run_smoke(args) -> None:
+    payload = _smoke_payload(args.only)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(payload['results'])} benchmark(s))")
+    if payload["errors"]:
+        print(f"# FAILED benchmark modules: {payload['errors']}",
+              file=sys.stderr)
+        sys.exit(1)
+    if args.skip_check:
+        return
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"# no baseline at {args.baseline} — skipping regression "
+              f"check (commit one with --smoke --out {args.baseline} "
+              f"--skip-check)", file=sys.stderr)
+        return
+    if baseline.get("host") != payload["host"]:
+        print(f"# baseline host {baseline.get('host')!r} != "
+              f"{payload['host']!r}: comparing wave-normalized engine "
+              f"ratios instead of absolute tokens/s", file=sys.stderr)
+    failures = check_regression(payload, baseline, args.tol)
+    for f_ in failures:
+        print(f"REGRESSION: {f_}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+    print(f"regression check vs {args.baseline}: OK (tol {args.tol:.0%})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="machine-readable smoke run + regression check")
+    ap.add_argument("--out", default="BENCH_ci.json",
+                    help="--smoke: where to write the results")
+    ap.add_argument("--baseline", default="BENCH_continuous_batching.json",
+                    help="--smoke: committed baseline to compare against")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="--smoke: allowed fractional tokens/s regression")
+    ap.add_argument("--skip-check", action="store_true",
+                    help="--smoke: write results without comparing")
     args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args)
+        return
     print("name,us_per_call,derived")
     failed = []
     for mod_name in MODULES:

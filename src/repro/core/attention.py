@@ -157,6 +157,42 @@ def sparse_decode_attention(q: jax.Array,
         v_ret = gather_kv_heads(v_cache, top_idx)
     qg = q.reshape(b, G, Hg, hd).astype(jnp.float32)
 
+    k_sink = k_cache[:, :sink_size]                    # (b, sink, G, hd)
+    v_sink = v_cache[:, :sink_size]
+
+    def slice_window(c):
+        return jax.vmap(lambda row, s: jax.lax.dynamic_slice_in_dim(
+            row, s, window_size, axis=0))(c, window_start)
+    k_loc = slice_window(k_cache)                      # (b, W, G, hd)
+    v_loc = slice_window(v_cache)
+
+    return _segment_attention(
+        qg, k_sink, v_sink, k_ret, v_ret, k_loc, v_loc, top_idx,
+        window_start, pos, enc_end, sink_size=sink_size,
+        window_size=window_size, sm_scale=sm_scale, softcap=softcap
+    ).reshape(b, H, hd)
+
+
+def _segment_attention(qg: jax.Array,
+                       k_sink: jax.Array, v_sink: jax.Array,
+                       k_ret: jax.Array, v_ret: jax.Array,
+                       k_loc: jax.Array, v_loc: jax.Array,
+                       top_idx: jax.Array, window_start: jax.Array,
+                       pos: jax.Array, enc_end: jax.Array, *,
+                       sink_size: int, window_size: int,
+                       sm_scale: float, softcap: float) -> jax.Array:
+    """Joint softmax over the three gathered segments (Eq. 2-3 core).
+
+    The segments may come from a contiguous per-row cache *or* from a
+    paged block pool — the validity masks depend only on logical
+    positions, so both layouts produce identical attention (values at
+    masked slots are garbage in either layout and receive exactly-zero
+    probability; pools hold only zeros/real activations, never NaN).
+
+    qg: (b, G, Hg, hd) float32; k_sink/v_sink: (b, sink, G, hd);
+    k_ret/v_ret: (b, G, Hg, k, hd); k_loc/v_loc: (b, W, G, hd).
+    → (b, G, Hg, hd) float32.
+    """
     # --- retrieved segment ------------------------------------------------
     s_ret = jnp.einsum("bghd,bghkd->bghk", qg, k_ret.astype(jnp.float32))
     # guard: only positions actually inside the Retrieval region count —
@@ -164,19 +200,16 @@ def sparse_decode_attention(q: jax.Array,
     ret_valid = (top_idx >= sink_size) & (top_idx < enc_end[:, None, None, None])
     s_ret = jnp.where(ret_valid, s_ret, NEG_INF)
 
-    # --- sink segment (static slice) ---------------------------------------
-    k_sink = k_cache[:, :sink_size].astype(jnp.float32)  # (b, sink, G, hd)
-    v_sink = v_cache[:, :sink_size].astype(jnp.float32)
+    # --- sink segment -----------------------------------------------------
+    k_sink = k_sink.astype(jnp.float32)
+    v_sink = v_sink.astype(jnp.float32)
     s_sink = jnp.einsum("bghd,bsgd->bghs", qg, k_sink)
     sink_valid = (jnp.arange(sink_size)[None] <= pos[:, None])  # (b, sink)
     s_sink = jnp.where(sink_valid[:, None, None, :], s_sink, NEG_INF)
 
-    # --- local + update-buffer window (per-row dynamic slice, static size) -
-    def slice_window(c):
-        return jax.vmap(lambda row, s: jax.lax.dynamic_slice_in_dim(
-            row, s, window_size, axis=0))(c, window_start)
-    k_loc = slice_window(k_cache).astype(jnp.float32)    # (b, W, G, hd)
-    v_loc = slice_window(v_cache).astype(jnp.float32)
+    # --- local + update-buffer window --------------------------------------
+    k_loc = k_loc.astype(jnp.float32)
+    v_loc = v_loc.astype(jnp.float32)
     s_loc = jnp.einsum("bghd,bwgd->bghw", qg, k_loc)
     w_pos = window_start[:, None] + jnp.arange(window_size)  # (b, W)
     loc_valid = ((w_pos >= enc_end[:, None]) & (w_pos >= sink_size)
@@ -192,7 +225,58 @@ def sparse_decode_attention(q: jax.Array,
     out = jnp.einsum("bghs,bsgd->bghd", p_sink, v_sink)
     out += jnp.einsum("bghk,bghkd->bghd", p_ret, v_ret.astype(jnp.float32))
     out += jnp.einsum("bghw,bwgd->bghd", p_loc, v_loc)
-    return out.reshape(b, H, hd)
+    return out
+
+
+def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
+                                  pool_v: jax.Array, block_tables: jax.Array,
+                                  top_idx: jax.Array, window_start: jax.Array,
+                                  pos: jax.Array, enc_end: jax.Array, *,
+                                  sink_size: int, window_size: int,
+                                  sm_scale: float, softcap: float = 0.0,
+                                  k_ret: Optional[jax.Array] = None,
+                                  v_ret: Optional[jax.Array] = None
+                                  ) -> jax.Array:
+    """Paged twin of ``sparse_decode_attention``: all three segments are
+    gathered from the shared block pool through per-row block tables
+    (kernels/gather_kv provides the Pallas fast path for these gathers).
+
+    pool_k/pool_v: (num_blocks, block_size, G, hd); block_tables:
+    (b, n_logical // block_size) int32; ``top_idx`` holds *logical*
+    positions (as produced by retrieval over the logical metadata view) —
+    the retrieved rows themselves may arrive pre-fetched via
+    ``k_ret``/``v_ret`` (retrieve_paged hands out block-relative physical
+    rows, so the caller can gather without a second table lookup).
+    Masks are identical to the contiguous path, so the result is
+    token-identical for the same cache contents.
+    """
+    from repro.core import cache as CC
+
+    b, H, hd = q.shape
+    G = pool_k.shape[2]
+    Hg = H // G
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    enc_end = jnp.broadcast_to(jnp.asarray(enc_end, jnp.int32), (b,))
+    window_start = jnp.broadcast_to(jnp.asarray(window_start, jnp.int32), (b,))
+    qg = q.reshape(b, G, Hg, hd).astype(jnp.float32)
+
+    if k_ret is None:
+        k_ret = CC.paged_gather_heads(pool_k, block_tables, top_idx)
+        v_ret = CC.paged_gather_heads(pool_v, block_tables, top_idx)
+
+    sink_idx = jnp.broadcast_to(jnp.arange(sink_size)[None], (b, sink_size))
+    k_sink = CC.paged_gather_rows(pool_k, block_tables, sink_idx)
+    v_sink = CC.paged_gather_rows(pool_v, block_tables, sink_idx)
+
+    w_idx = window_start[:, None] + jnp.arange(window_size)[None]
+    k_loc = CC.paged_gather_rows(pool_k, block_tables, w_idx)
+    v_loc = CC.paged_gather_rows(pool_v, block_tables, w_idx)
+
+    return _segment_attention(
+        qg, k_sink, v_sink, k_ret, v_ret, k_loc, v_loc, top_idx,
+        window_start, pos, enc_end, sink_size=sink_size,
+        window_size=window_size, sm_scale=sm_scale, softcap=softcap
+    ).reshape(b, H, hd)
 
 
 def dense_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

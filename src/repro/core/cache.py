@@ -241,3 +241,288 @@ def retrieval_valid_mask(n_max: int, regions: CacheRegions,
     idx = jnp.arange(n_max)
     enc_end = jnp.asarray(regions.enc_end)
     return (idx >= cfg.sink_size) & (idx < enc_end[..., None])
+
+
+# ======================================================================
+# Paged KV cache: a global block pool + per-slot block tables
+# ======================================================================
+#
+# The contiguous layout above gives every sequence a private ``n_max``
+# region — short requests strand memory. The paged layout shares one
+# physical pool of fixed-size blocks across all serving slots:
+#
+#   k, v:        (num_blocks, block_size, G, hd)
+#   meta_*:      (num_blocks, G, block_size, B)
+#
+# A slot's sequence is described by a **block table** ``bt`` of shape
+# (b, n_max // block_size) int32: logical token position ``p`` of row
+# ``i`` lives at physical ``(bt[i, p // bs], p % bs)``. Entries < 0 mean
+# "not allocated" — reads through them are clipped (and masked by the
+# pos/enc_end validity masks, which never reach unwritten positions) and
+# writes through them are dropped. Allocation itself is host-side policy
+# (serving.PagedServingEngine owns the free list); everything here is
+# pure device-side addressing.
+
+PAGED_DEFAULT_BLOCK = 128
+
+
+class PagedLayerKVCache(NamedTuple):
+    """Block-pool twin of :class:`LayerKVCache` (no batch dim — the pool
+    is shared by every slot; per-slot views go through a block table).
+
+    k, v:        (num_blocks, block_size, G, hd)
+    meta_ids:    (num_blocks, G, block_size, B) uint8
+    meta_codes:  (num_blocks, G, block_size, B) uint32
+    meta_w:      (num_blocks, G, block_size, B) float32
+    """
+    k: jax.Array
+    v: jax.Array
+    meta_ids: jax.Array
+    meta_codes: jax.Array
+    meta_w: jax.Array
+
+
+def init_paged_cache(num_blocks: int, block_size: int, num_kv_heads: int,
+                     head_dim: int, cfg: ParisKVConfig,
+                     dtype=jnp.bfloat16) -> PagedLayerKVCache:
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    return PagedLayerKVCache(
+        k=jnp.zeros((num_blocks, block_size, g, head_dim), dtype),
+        v=jnp.zeros((num_blocks, block_size, g, head_dim), dtype),
+        meta_ids=jnp.zeros((num_blocks, g, block_size, B), jnp.uint8),
+        meta_codes=jnp.zeros((num_blocks, g, block_size, B), jnp.uint32),
+        meta_w=jnp.zeros((num_blocks, g, block_size, B), jnp.float32),
+    )
+
+
+def paged_cache_spec(num_blocks: int, block_size: int, num_kv_heads: int,
+                     head_dim: int, cfg: ParisKVConfig,
+                     dtype=jnp.bfloat16) -> PagedLayerKVCache:
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    sds = jax.ShapeDtypeStruct
+    return PagedLayerKVCache(
+        k=sds((num_blocks, block_size, g, head_dim), dtype),
+        v=sds((num_blocks, block_size, g, head_dim), dtype),
+        meta_ids=sds((num_blocks, g, block_size, B), jnp.uint8),
+        meta_codes=sds((num_blocks, g, block_size, B), jnp.uint32),
+        meta_w=sds((num_blocks, g, block_size, B), jnp.float32),
+    )
+
+
+def paged_block_size(pool: PagedLayerKVCache) -> int:
+    return pool.k.shape[-3]
+
+
+def paged_num_blocks(pool: PagedLayerKVCache) -> int:
+    return pool.k.shape[-4]
+
+
+def paged_lookup_blocks(block_tables: jax.Array, lidx: jax.Array,
+                        block_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-row block-table lookup: logical positions → (phys_block, offset).
+
+    block_tables: (b, nblk) int32 (entries < 0 = unallocated, passed
+    through so callers can sentinel/clip); lidx: (b, ...) logical token
+    positions, row-aligned with the tables."""
+    b = block_tables.shape[0]
+    blk = lidx // block_size
+    off = lidx % block_size
+    flat = blk.reshape(b, -1)
+    pb = jnp.take_along_axis(block_tables, flat, axis=1).reshape(blk.shape)
+    return pb, off
+
+
+def paged_physical_rows(block_tables: jax.Array, lidx: jax.Array,
+                        num_blocks: int, block_size: int) -> jax.Array:
+    """Logical positions → flat physical row ids into the
+    (num_blocks·block_size)-row pool. Unallocated entries are clipped to
+    block 0 — callers must mask such positions (every reader does: the
+    pos/enc_end masks only admit written, hence allocated, positions)."""
+    pb, off = paged_lookup_blocks(block_tables, lidx, block_size)
+    return jnp.clip(pb, 0, num_blocks - 1) * block_size + off
+
+
+def paged_decode_append(pool: PagedLayerKVCache, block_tables: jax.Array,
+                        k_t: jax.Array, v_t: jax.Array, pos: jax.Array
+                        ) -> PagedLayerKVCache:
+    """Append one token's K/V at per-row logical position ``pos`` through
+    the block table. k_t/v_t: (b, G, hd).
+
+    Mirrors ``decode_append``'s clamp-at-capacity semantics (a frozen row
+    at exactly n_max writes into its own last position — dead data) and
+    drops writes whose block is unallocated (free slots with cleared
+    tables)."""
+    b = k_t.shape[0]
+    bs = paged_block_size(pool)
+    nb = paged_num_blocks(pool)
+    n_log = block_tables.shape[1] * bs
+    lidx = jnp.minimum(_as_batch(pos, b), n_log - 1)
+    pb, off = paged_lookup_blocks(block_tables, lidx, bs)
+    pb = jnp.where(pb < 0, nb, pb)          # unallocated → OOB → dropped
+    return pool._replace(
+        k=pool.k.at[pb, off].set(k_t.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[pb, off].set(v_t.astype(pool.v.dtype), mode="drop"),
+    )
+
+
+def paged_meta_view(pool: PagedLayerKVCache, block_tables: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather each row's logical metadata view through its block table.
+
+    → (meta_ids, meta_codes, meta_w), each (b, G, n_logical, B). Values at
+    unallocated positions are arbitrary pool contents; the retrieval valid
+    mask (bounded by enc_end) never admits them."""
+    nb = paged_num_blocks(pool)
+    bs = paged_block_size(pool)
+    b, nblk = block_tables.shape
+    safe = jnp.clip(block_tables, 0, nb - 1)
+
+    def view(a):
+        g = a.shape[1]
+        out = a[safe]                            # (b, nblk, G, bs, B)
+        out = jnp.moveaxis(out, 2, 1)            # (b, G, nblk, bs, B)
+        return out.reshape(b, g, nblk * bs, a.shape[-1])
+
+    return view(pool.meta_ids), view(pool.meta_codes), view(pool.meta_w)
+
+
+def paged_gather_rows(pool_kv: jax.Array, block_tables: jax.Array,
+                      lidx: jax.Array) -> jax.Array:
+    """Gather K or V rows at per-row logical positions.
+
+    pool_kv: (num_blocks, block_size, G, hd); lidx: (b, L) → (b, L, G, hd).
+    The jnp twin of kernels.gather_kv.gather_rows_paged_pallas."""
+    nb, bs = pool_kv.shape[:2]
+    phys = paged_physical_rows(block_tables, lidx, nb, bs)
+    flat = pool_kv.reshape((nb * bs,) + pool_kv.shape[2:])
+    return flat[phys]
+
+
+def gather_heads_physical(pool_kv: jax.Array, phys_rows: jax.Array
+                          ) -> jax.Array:
+    """Per-(kv-head) gather by flat physical pool row ids.
+
+    pool_kv: (num_blocks, block_size, G, hd); phys_rows: (b, G, Q, k) →
+    (b, G, Q, k, hd): index (i, g, q, j) reads head g of pool row
+    phys_rows[i, g, q, j]."""
+    nb, bs, G, hd = pool_kv.shape
+    b, _, Q, k = phys_rows.shape
+    flat = jnp.moveaxis(pool_kv.reshape(nb * bs, G, hd), 1, 0)  # (G, N, hd)
+    idx = phys_rows.reshape(b, G, Q * k)
+    out = jnp.take_along_axis(
+        jnp.broadcast_to(flat[None], (b,) + flat.shape), idx[..., None],
+        axis=2)
+    return out.reshape(b, G, Q, k, hd)
+
+
+def paged_gather_heads(pool_kv: jax.Array, block_tables: jax.Array,
+                       lidx: jax.Array) -> jax.Array:
+    """Per-(kv-head) gather of selected rows, the paged twin of
+    ``attention.gather_kv_heads``.
+
+    pool_kv: (num_blocks, block_size, G, hd); lidx: (b, G, Q, k) logical →
+    (b, G, Q, k, hd): index (i, g, q, j) reads head g of the row at
+    logical position lidx[i, g, q, j] of row i's sequence."""
+    nb, bs = pool_kv.shape[:2]
+    phys = paged_physical_rows(block_tables, lidx, nb, bs)   # (b, G, Q, k)
+    return gather_heads_physical(pool_kv, phys)
+
+
+def paged_promote_rows(pool: PagedLayerKVCache, block_tables: jax.Array,
+                       starts: jax.Array, mask: jax.Array,
+                       cfg: ParisKVConfig, signs: jax.Array
+                       ) -> PagedLayerKVCache:
+    """Per-row block promotion through the block table: for each row ``i``
+    with ``mask[i]``, encode metadata for the keys at logical positions
+    [starts[i], starts[i]+update_interval) and scatter it back to their
+    physical blocks (a promotion span may straddle two blocks).
+
+    Rows with ``mask[i] == False`` (and spans through unallocated table
+    entries) are dropped via an out-of-bounds sentinel block id."""
+    U = cfg.update_interval
+    b = block_tables.shape[0]
+    nb = paged_num_blocks(pool)
+    bs = paged_block_size(pool)
+    starts = _as_batch(starts, b)
+    lidx = starts[:, None] + jnp.arange(U)[None]             # (b, U)
+    rows = paged_gather_rows(pool.k, block_tables, lidx)     # (b, U, G, hd)
+    meta = _encode_block(rows, cfg, signs)                   # (b, G, U, B)
+
+    pb, off = paged_lookup_blocks(block_tables, lidx, bs)
+    tgt = jnp.where(mask[:, None] & (pb >= 0), pb, nb)       # sentinel → drop
+
+    def upd(dst, new):                                       # new: (b, G, U, B)
+        return dst.at[tgt, :, off].set(jnp.moveaxis(new, 1, 2), mode="drop")
+
+    return pool._replace(
+        meta_ids=upd(pool.meta_ids, meta.centroid_ids),
+        meta_codes=upd(pool.meta_codes, meta.codes),
+        meta_w=upd(pool.meta_w, meta.weights),
+    )
+
+
+def paged_maybe_promote(pool: PagedLayerKVCache, block_tables: jax.Array,
+                        regions: CacheRegions, cfg: ParisKVConfig,
+                        signs: jax.Array
+                        ) -> Tuple[PagedLayerKVCache, CacheRegions]:
+    """Paged twin of ``maybe_promote``: same trigger, same amortized
+    any-row lax.cond, writes through the block table."""
+    b = block_tables.shape[0]
+    pos = _as_batch(regions.pos, b)
+    enc_end = _as_batch(regions.enc_end, b)
+    trigger = (pos + 1 - enc_end) >= window_size(cfg)
+
+    pool = jax.lax.cond(
+        jnp.any(trigger),
+        lambda c: paged_promote_rows(c, block_tables, enc_end, trigger,
+                                     cfg, signs),
+        lambda c: c, pool)
+    new_enc = jnp.where(trigger, enc_end + cfg.update_interval, enc_end)
+    return pool, CacheRegions(pos=pos, enc_end=new_enc)
+
+
+def paged_scatter_prefill(pool: PagedLayerKVCache, cache1: LayerKVCache,
+                          phys_blocks: jax.Array) -> PagedLayerKVCache:
+    """Install a solo (batch=1) contiguous prefill result into the pool.
+
+    cache1 leaves are stacked over the stage repeat with batch axis 1
+    (k: (R, 1, n_logical, G, hd)); ``phys_blocks`` (n_logical // bs,) maps
+    each logical block to its physical block, with out-of-range sentinels
+    (>= num_blocks) for blocks the allocator did not hand out (their
+    contents are prompt-pad garbage that no mask ever admits)."""
+    bs = paged_block_size(pool)
+    nblk = phys_blocks.shape[0]
+
+    def kv(dst, src):                       # src (R, 1, n, G, hd)
+        r, _, n, g, hd = src.shape
+        view = src.reshape(r, nblk, bs, g, hd)
+        return dst.at[:, phys_blocks].set(view.astype(dst.dtype),
+                                          mode="drop")
+
+    def meta(dst, src):                     # src (R, 1, G, n, B)
+        r, _, g, n, B = src.shape
+        view = jnp.moveaxis(src.reshape(r, g, nblk, bs, B), 1, 2)
+        return dst.at[:, phys_blocks].set(view.astype(dst.dtype),
+                                          mode="drop")
+
+    return PagedLayerKVCache(
+        k=kv(pool.k, cache1.k), v=kv(pool.v, cache1.v),
+        meta_ids=meta(pool.meta_ids, cache1.meta_ids),
+        meta_codes=meta(pool.meta_codes, cache1.meta_codes),
+        meta_w=meta(pool.meta_w, cache1.meta_w),
+    )
+
+
+def paged_clear_blocks(pool: PagedLayerKVCache,
+                       phys_blocks: jax.Array) -> PagedLayerKVCache:
+    """Zero the given physical blocks (eviction hygiene; correctness never
+    depends on it — masks stop stale reads — but it keeps reclaimed blocks
+    from leaking a tenant's K/V into debug dumps)."""
+    def z(a):
+        return a.at[:, phys_blocks].set(0, mode="drop")
+    return PagedLayerKVCache(k=z(pool.k), v=z(pool.v),
+                             meta_ids=z(pool.meta_ids),
+                             meta_codes=z(pool.meta_codes),
+                             meta_w=z(pool.meta_w))

@@ -18,15 +18,14 @@ of O(n log n).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import centroids
 from repro.core.config import ParisKVConfig
-from repro.core.encode import KeyMetadata, QueryTransform, estimate_inner_products
+from repro.core.encode import KeyMetadata, QueryTransform
 
 NEG_INF = jnp.float32(-1e30)
 
@@ -36,6 +35,23 @@ class RetrievalResult(NamedTuple):
     scores: jax.Array    # (..., k) float32 — RSQ-IP estimates for them
     cand_indices: jax.Array  # (..., C) int32 — Stage-I candidate positions
     coarse_scores: jax.Array  # (..., n) int32 — Stage-I collision scores
+
+
+class PagedRetrievalResult(NamedTuple):
+    """Retrieval result addressed block-relatively for a paged KV pool.
+
+    ``indices`` stay *logical* (what the attention masks need);
+    ``block_ids``/``offsets`` are the (physical block, in-block offset)
+    decomposition of each hit, and ``phys_rows`` the flattened physical
+    row ids into the (num_blocks·block_size)-row pool — exactly what the
+    block-table gather (kernels/gather_kv paged path) consumes."""
+    indices: jax.Array      # (b, ..., k) int32 logical positions
+    block_ids: jax.Array    # (b, ..., k) int32 physical block per hit
+    offsets: jax.Array      # (b, ..., k) int32 offset within the block
+    phys_rows: jax.Array    # (b, ..., k) int32 flat pool row ids
+    scores: jax.Array
+    cand_indices: jax.Array
+    coarse_scores: jax.Array
 
 
 def bucket_histogram(ids: jax.Array, valid: jax.Array, num_buckets: int) -> jax.Array:
@@ -217,6 +233,44 @@ def retrieve(meta: KeyMetadata, qt: QueryTransform, valid: jax.Array,
     top_est, top_pos = jax.lax.top_k(est, top_k)
     top_idx = jnp.take_along_axis(cand, top_pos, axis=-1)
     return RetrievalResult(top_idx, top_est, cand, coarse)
+
+
+def split_block_relative(idx: jax.Array, block_size: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Logical positions → (logical_block, in-block offset)."""
+    return idx // block_size, idx % block_size
+
+
+def retrieve_paged(meta: KeyMetadata, qt: QueryTransform, valid: jax.Array,
+                   cfg: ParisKVConfig, num_candidates: int, top_k: int,
+                   block_tables: jax.Array, block_size: int,
+                   hist_sample: int = 0, bucket_select: bool = True
+                   ) -> PagedRetrievalResult:
+    """Two-stage retrieval over a paged store's *logical* metadata view,
+    with the winners translated to block-relative physical addresses.
+
+    ``meta`` is the per-row logical view (cache.paged_meta_view output,
+    broadcast over query heads exactly like the contiguous path), so
+    Stage-I/II semantics — and the selected index sets — are identical to
+    ``retrieve``; only the addressing of the result changes. The leading
+    axis of every metadata/valid array is the batch row that
+    ``block_tables`` (b, nblk) is aligned with.
+    """
+    res = retrieve(meta, qt, valid, cfg, num_candidates, top_k,
+                   hist_sample=hist_sample, bucket_select=bucket_select)
+    blk, off = split_block_relative(res.indices, block_size)
+    b, nblk = block_tables.shape
+    phys_blk = jnp.take_along_axis(
+        block_tables, blk.reshape(b, -1), axis=1).reshape(blk.shape)
+    # unallocated entries (< 0) are clipped to block 0 — such hits only
+    # arise at masked (invalid) positions, which attention re-masks by
+    # enc_end; allocated entries are in-bounds block ids by construction
+    safe_blk = jnp.clip(phys_blk, 0, None)
+    phys_rows = safe_blk * block_size + off
+    return PagedRetrievalResult(
+        indices=res.indices, block_ids=safe_blk, offsets=off,
+        phys_rows=phys_rows, scores=res.scores,
+        cand_indices=res.cand_indices, coarse_scores=res.coarse_scores)
 
 
 def exact_topk(keys: jax.Array, q: jax.Array, valid: jax.Array, top_k: int):

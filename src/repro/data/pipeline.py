@@ -7,7 +7,7 @@ Sharded host feed: each data-parallel host slices its batch rows.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 

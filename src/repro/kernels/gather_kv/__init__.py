@@ -1,2 +1,3 @@
-from repro.kernels.gather_kv.ops import gather_kv_kernel  # noqa: F401
+from repro.kernels.gather_kv.ops import (  # noqa: F401
+    gather_kv_kernel, gather_kv_paged_kernel)
 from repro.kernels.gather_kv import ref  # noqa: F401

@@ -13,7 +13,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -40,3 +39,39 @@ def gather_rows_pallas(store: jax.Array, idx: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((k, d), store.dtype),
         interpret=interpret,
     )(idx, store)
+
+
+def _paged_kernel(idx_ref, bt_ref, rows_ref, out_ref):
+    out_ref[...] = rows_ref[0]          # (1, 1, d) block → (1, d) out row
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_paged_pallas(pool: jax.Array, block_table: jax.Array,
+                             idx: jax.Array, *,
+                             interpret: bool = True) -> jax.Array:
+    """Block-table-indirect fetch from a paged pool.
+
+    pool (num_blocks, block_size, d), block_table (nblk,) int32 mapping a
+    sequence's logical blocks to physical blocks, idx (k,) int32 *logical*
+    token positions → (k, d). Both the index vector and the block table
+    ride in SMEM via scalar prefetch; the input index_map double-dereferences
+    ``block_table[idx[i] // block_size]`` so each grid step DMAs exactly
+    one (1, 1, d) physical row HBM→VMEM — the paged UVA fetch.
+    """
+    num_blocks, block_size, d = pool.shape
+    k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(
+            (1, 1, d),
+            lambda i, idx_ref, bt_ref: (bt_ref[idx_ref[i] // block_size],
+                                        idx_ref[i] % block_size, 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref, bt_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, d), pool.dtype),
+        interpret=interpret,
+    )(idx, block_table, pool)

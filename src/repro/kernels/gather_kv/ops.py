@@ -1,11 +1,12 @@
-"""Jitted wrapper for the UVA-style KV fetch."""
+"""Jitted wrappers for the UVA-style KV fetch (contiguous + paged)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import INTERPRET
-from repro.kernels.gather_kv.gather_kv import gather_rows_pallas
+from repro.kernels.gather_kv.gather_kv import (gather_rows_paged_pallas,
+                                               gather_rows_pallas)
 
 
 def gather_kv_kernel(store: jax.Array, idx: jax.Array) -> jax.Array:
@@ -16,6 +17,29 @@ def gather_kv_kernel(store: jax.Array, idx: jax.Array) -> jax.Array:
     flat_store = store.reshape((-1, n, d))
     flat_idx = jnp.broadcast_to(idx, lead + (k,)).reshape((-1, k)).astype(
         jnp.int32)
-    fn = lambda s, i: gather_rows_pallas(s, i, interpret=INTERPRET)
+
+    def fn(s, i):
+        return gather_rows_pallas(s, i, interpret=INTERPRET)
+
     out = jax.vmap(fn)(flat_store, flat_idx)
+    return out.reshape(lead + (k, d))
+
+
+def gather_kv_paged_kernel(pool: jax.Array, block_tables: jax.Array,
+                           idx: jax.Array) -> jax.Array:
+    """Paged fetch: pool (num_blocks, block_size, d) shared across the
+    batch, block_tables (..., nblk) per-sequence tables, idx (..., k)
+    logical positions → (..., k, d)."""
+    lead = block_tables.shape[:-1]
+    nblk = block_tables.shape[-1]
+    k = idx.shape[-1]
+    d = pool.shape[-1]
+    flat_bt = block_tables.reshape((-1, nblk)).astype(jnp.int32)
+    flat_idx = jnp.broadcast_to(idx, lead + (k,)).reshape((-1, k)).astype(
+        jnp.int32)
+
+    def fn(bt, i):
+        return gather_rows_paged_pallas(pool, bt, i, interpret=INTERPRET)
+
+    out = jax.vmap(fn)(flat_bt, flat_idx)
     return out.reshape(lead + (k, d))

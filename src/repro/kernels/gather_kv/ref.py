@@ -1,6 +1,15 @@
-"""Pure-jnp oracle for gather_kv."""
+"""Pure-jnp oracle for gather_kv (contiguous and paged/block-table)."""
 
 
 def gather_rows_ref(store, idx):
     """store (n, d), idx (k,) → (k, d)."""
     return store[idx]
+
+
+def gather_rows_paged_ref(pool, block_table, idx):
+    """pool (num_blocks, block_size, d), block_table (nblk,), idx (k,)
+    logical positions → (k, d) via (block_table[p // bs], p % bs)."""
+    num_blocks, block_size, d = pool.shape
+    flat = pool.reshape(num_blocks * block_size, d)
+    phys = block_table[idx // block_size] * block_size + idx % block_size
+    return flat[phys]

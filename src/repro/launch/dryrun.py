@@ -22,7 +22,7 @@ import functools
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -188,7 +188,6 @@ def body_costs(arch: str, shape_name: str, multi_pod: bool = False
     """
     os.environ["REPRO_UNROLL_ATTN"] = "1"
     try:
-        import dataclasses as _dc
 
         import repro.models.model as M2
         cfg = configs.get(arch)

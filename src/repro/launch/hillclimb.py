@@ -22,17 +22,15 @@ pure-TP vs FSDP×TP parameter sharding.
 Usage: python -m repro.launch.hillclimb [--exp e1|e2|e3|all]
 """
 import argparse
-import functools
 import json
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.core import cache as CC
 from repro.core import encode as E
 from repro.core import retrieval as R
 from repro.core.config import ParisKVConfig

@@ -11,7 +11,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.data import SyntheticLMStream, media_stub

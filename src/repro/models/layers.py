@@ -15,7 +15,7 @@ global layers through ParisKV two-stage retrieval (core.retrieval) and local
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from repro.core import attention as A
 from repro.core import cache as C
 from repro.core import encode as E
 from repro.core import retrieval as R
-from repro.core.config import ModelConfig, ParisKVConfig
+from repro.core.config import ParisKVConfig
 
 
 # ----------------------------------------------------------------- helpers --
@@ -335,6 +335,54 @@ def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
     enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
     return fn(q_grp, layer_cache.k, layer_cache.v, layer_cache.meta_ids,
               layer_cache.meta_codes, layer_cache.meta_w, pos_b, enc_b)
+
+
+def attn_decode_pariskv_paged(p: dict, x_t: jax.Array,
+                              pool: C.PagedLayerKVCache,
+                              block_tables: jax.Array,
+                              regions: C.CacheRegions, spec: AttnSpec,
+                              pcfg: ParisKVConfig, signs: jax.Array,
+                              num_candidates: int
+                              ) -> Tuple[jax.Array, C.PagedLayerKVCache]:
+    """ParisKV decode over a paged block pool (vLLM-style block tables).
+
+    Identical math to ``attn_decode_pariskv`` — the token is appended
+    through the block table, two-stage retrieval runs over the logical
+    metadata view (candidates come back block-relative), and the three
+    attention segments are gathered from the pool — so for the same cache
+    contents the outputs are token-identical to the contiguous layout.
+    """
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
+    pool = C.paged_decode_append(pool, block_tables, k_t, v_t, pos)
+
+    bs = C.paged_block_size(pool)
+    n_log = block_tables.shape[1] * bs
+    q_grp = q.reshape(b, G, H // G, hd)
+    ids, codes, w = C.paged_meta_view(pool, block_tables)  # (b, G, n_log, B)
+    meta = E.KeyMetadata(ids, codes, w)
+    valid = C.retrieval_valid_mask(n_log, regions, pcfg)
+    if valid.ndim == 1:
+        valid = valid[None]
+    valid = jnp.broadcast_to(valid[:, None, None, :], (b, G, 1, n_log))
+    qt = E.encode_query(q_grp, pcfg, signs)
+    meta_b = jax.tree.map(lambda a: a[:, :, None], meta)   # (b, G, 1, n, B)
+    res = R.retrieve_paged(meta_b, qt, valid, pcfg, num_candidates,
+                           pcfg.top_k, block_tables, bs,
+                           hist_sample=pcfg.hist_sample)
+    k_ret = C.gather_heads_physical(pool.k, res.phys_rows)
+    v_ret = C.gather_heads_physical(pool.v, res.phys_rows)
+
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+    out = A.sparse_decode_attention_paged(
+        q, pool.k, pool.v, block_tables, res.indices, ws, pos,
+        regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        k_ret=k_ret, v_ret=v_ret)
+    return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], pool
 
 
 def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,

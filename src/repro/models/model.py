@@ -22,9 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cache as CC
-from repro.core import srht
-from repro.core.config import ModelConfig, ParisKVConfig
+from repro.core.config import ModelConfig
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE

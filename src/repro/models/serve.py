@@ -26,23 +26,21 @@ syncs once per chunk instead of once per token.
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import cache as CC
 from repro.core import srht
-from repro.core.config import ModelConfig, ParisKVConfig
+from repro.core.config import ModelConfig
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.model import (LayerDef, StageDef, _attn_spec, _dtype,
-                                _embed, _unembed, encoder_fwd, layer_plan)
+from repro.models.model import (LayerDef, _dtype, _embed, _unembed,
+    encoder_fwd, layer_plan)
 
 
 class ServeState(NamedTuple):
@@ -121,6 +119,40 @@ def make_caches(cfg: ModelConfig, batch: int, n_max: int,
                 _layer_cache_spec(cfg, ld, batch, n_max, as_spec),
                 stage.repeat, as_spec)
             for i, ld in enumerate(stage.layers)}
+        caches.append(stage_cache)
+    return caches
+
+
+def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
+                      block_size: int, n_max: int, as_spec: bool = False):
+    """Build the decode cache with ParisKV KV stores replaced by a shared
+    block pool (one PagedLayerKVCache per attn/hybrid-attn layer, stacked
+    over the stage repeat). Bounded-size state — sliding-window ring
+    buffers, SSM recurrent state, media K/V — stays slot-local (batch,
+    ...) because it neither fragments nor grows with context. MLA latent
+    caches are not paged yet (ROADMAP)."""
+    pcfg = cfg.pariskv
+    dt = _dtype(cfg)
+
+    def paged_kv():
+        if as_spec:
+            return CC.paged_cache_spec(num_blocks, block_size,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       pcfg, dt)
+        return CC.init_paged_cache(num_blocks, block_size, cfg.num_kv_heads,
+                                   cfg.head_dim, pcfg, dt)
+
+    caches = []
+    for stage in layer_plan(cfg):
+        stage_cache = {}
+        for i, ld in enumerate(stage.layers):
+            if ld.mixer == "mla":
+                raise NotImplementedError(
+                    "paged serving does not page MLA latent caches yet")
+            entry = _layer_cache_spec(cfg, ld, batch, n_max, as_spec)
+            if ld.mixer in ("attn", "hybrid") and ld.use_pariskv:
+                entry = {**entry, "kv": paged_kv()}
+            stage_cache[f"l{i}"] = _stack_spec(entry, stage.repeat, as_spec)
         caches.append(stage_cache)
     return caches
 
@@ -276,12 +308,14 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
 # --------------------------------------------------------------- decode ----
 def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                   signs, num_candidates: int, will_promote, media=None,
-                  dist=None):
+                  dist=None, block_tables=None):
     """One layer of one decode step.
 
     ``regions`` fields and ``will_promote`` are per-row (b,) vectors: each
     row promotes its own block when *its* window fills; the block encode is
-    guarded by a single any-row lax.cond so quiet steps stay cheap."""
+    guarded by a single any-row lax.cond so quiet steps stay cheap.
+    ``block_tables`` (b, nblk) routes ParisKV layers through the paged
+    block pool (the cache leaf is then a PagedLayerKVCache)."""
     pcfg = cfg.pariskv
     b = x_t.shape[0]
     h = L.rms_norm(x_t[:, None], p["norm_attn"], cfg.norm_eps)[:, 0]
@@ -289,17 +323,31 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
     promote_mask = jnp.broadcast_to(jnp.asarray(will_promote), (b,))
 
     def maybe_promote_rows(c):
+        if isinstance(c, CC.PagedLayerKVCache):
+            return jax.lax.cond(
+                jnp.any(promote_mask),
+                lambda cc: CC.paged_promote_rows(
+                    cc, block_tables, regions.enc_end, promote_mask,
+                    pcfg, signs),
+                lambda cc: cc, c)
         return jax.lax.cond(
             jnp.any(promote_mask),
             lambda cc: CC.promote_rows(cc, regions.enc_end, promote_mask,
                                        pcfg, signs),
             lambda cc: cc, c)
 
+    def pariskv_decode(kv):
+        if isinstance(kv, CC.PagedLayerKVCache):
+            return L.attn_decode_pariskv_paged(
+                p["attn"], h, kv, block_tables, regions, ld.attn, pcfg,
+                signs, num_candidates)
+        return L.attn_decode_pariskv(
+            p["attn"], h, kv, regions, ld.attn, pcfg, signs,
+            num_candidates, dist=dist)
+
     if ld.mixer == "attn":
         if ld.use_pariskv:
-            y, kvc = L.attn_decode_pariskv(
-                p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
-                num_candidates, dist=dist)
+            y, kvc = pariskv_decode(cache["kv"])
             if os.environ.get("REPRO_NO_PROMOTE") != "1":  # cost bisection
                 kvc = maybe_promote_rows(kvc)
             cache = {**cache, "kv": kvc}
@@ -334,9 +382,7 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         y, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
         cache = {**cache, "ssm": sc}
     elif ld.mixer == "hybrid":
-        ya, kvc = L.attn_decode_pariskv(
-            p["attn"], h, cache["kv"], regions, ld.attn, pcfg, signs,
-            num_candidates, dist=dist)
+        ya, kvc = pariskv_decode(cache["kv"])
         kvc = maybe_promote_rows(kvc)
         ys, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
         y = 0.5 * (ya + ys)
@@ -362,8 +408,8 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
-                use_pariskv: bool = True, dist=None, active=None
-                ) -> Tuple[jax.Array, ServeState]:
+                use_pariskv: bool = True, dist=None, active=None,
+                block_tables=None) -> Tuple[jax.Array, ServeState]:
     """One decode step: token (b,) int32 → (logits (b, v), new state).
 
     Rows advance independently (per-row regions). ``active`` (b,) bool
@@ -375,7 +421,11 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
 
     dist: optional (mesh, seq_axes, batch_axes) — enables the context-
     parallel hierarchical retrieval (EXPERIMENTS §Perf E1/E2) on ParisKV
-    layers when the cache is sequence-sharded."""
+    layers when the cache is sequence-sharded.
+
+    block_tables: (b, nblk) int32 — paged mode (caches built by
+    make_paged_caches); ParisKV reads/writes go through the block table
+    and the logical capacity is nblk · block_size per row."""
     pcfg = cfg.pariskv
     b = token.shape[0]
     signs = rotation_signs(cfg)
@@ -387,7 +437,12 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
     act = (jnp.ones((b,), bool) if active is None
            else jnp.broadcast_to(active, (b,)))
     will_promote = CC.promote_trigger(regions, pcfg) & act
-    n_max = _cache_n_max(cfg, state.caches)
+    if block_tables is not None:
+        assert dist is None, "paged decode + distributed retrieval: TODO"
+        assert use_pariskv, "paged decode serves the ParisKV path only"
+        n_max = block_tables.shape[1] * _pool_block_size(state.caches)
+    else:
+        n_max = _cache_n_max(cfg, state.caches)
     num_candidates = pcfg.candidate_count(n_max)
 
     new_caches = []
@@ -400,7 +455,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
                 ld_eff = ld if use_pariskv else dataclasses_replace_nopk(ld)
                 x_t, new_c[f"l{i}"] = _layer_decode(
                     p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
-                    regions, signs, num_candidates, will_promote, dist=dist)
+                    regions, signs, num_candidates, will_promote, dist=dist,
+                    block_tables=block_tables)
             return x_t, new_c
 
         x_t, filled = jax.lax.scan(body, x_t, (sp, sc))
@@ -436,9 +492,23 @@ def init_slot_state(cfg: ModelConfig, batch: int, n_max: int) -> SlotState:
         remaining=jnp.zeros((batch,), jnp.int32))
 
 
+def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
+                          block_size: int, n_max: int) -> SlotState:
+    """Slot state over a shared block pool: same per-slot scalar vectors,
+    but ParisKV cache leaves are PagedLayerKVCache pools (no batch dim).
+    The matching block tables are host-managed (serving engine) and passed
+    into decode_chunk per call — they change at admission/allocation/
+    eviction boundaries, never inside a chunk."""
+    return SlotState(
+        caches=make_paged_caches(cfg, batch, num_blocks, block_size, n_max),
+        regions=regions_spec(batch),
+        cur_tok=jnp.zeros((batch,), jnp.int32),
+        remaining=jnp.zeros((batch,), jnp.int32))
+
+
 def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
                  use_pariskv: bool = True, eos_id: Optional[int] = None,
-                 dist=None) -> Tuple[jax.Array, SlotState]:
+                 dist=None, block_tables=None) -> Tuple[jax.Array, SlotState]:
     """Run ``num_steps`` decode steps fully on-device (lax.scan): greedy
     argmax sampling, per-slot active masking, one host sync per chunk.
 
@@ -446,13 +516,17 @@ def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
     Valid tokens form a prefix per row: the host recovers each slot's
     emissions by scanning for the first -1 sentinel (argmax emits only
     non-negative token ids, so the sentinel is unambiguous).
+
+    ``block_tables`` (paged mode) is constant across the chunk — the
+    serving engine pre-allocates every block the chunk's appends can
+    reach before launching it (lazy allocation at chunk granularity).
     """
     def step(st, _):
         active = st.remaining > 0
         logits, new = decode_step(params, cfg, st.cur_tok,
                                   ServeState(st.caches, st.regions),
                                   use_pariskv=use_pariskv, dist=dist,
-                                  active=active)
+                                  active=active, block_tables=block_tables)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         emit = jnp.where(active, nxt, -1)
         rem = st.remaining - active.astype(jnp.int32)
@@ -482,3 +556,45 @@ def _cache_n_max(cfg: ModelConfig, caches) -> int:
                 if isinstance(kv, MLA.MLACache):
                     return kv.latent.shape[2]
     return 0
+
+
+def _pool_block_size(caches) -> int:
+    """Block size of the shared pool (stacked leaf: (repeat, nb, bs, G, hd))."""
+    for stage_cache in caches:
+        for lc in stage_cache.values():
+            if "kv" in lc and isinstance(lc["kv"], CC.PagedLayerKVCache):
+                return lc["kv"].k.shape[2]
+    raise ValueError("no PagedLayerKVCache leaf in caches")
+
+
+def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
+                tok0, rem) -> SlotState:
+    """Install a solo (batch=1) prefill result into a paged slot state.
+
+    Pool leaves scatter whole blocks to the physical ids in ``phys_blocks``
+    (n_max // block_size entries; unallocated → out-of-range sentinel,
+    dropped); slot-local leaves (ring/SSM/media) scatter into batch row
+    ``slot`` exactly like the contiguous engine. Jit this with the state
+    donated — it is the paged twin of ServingEngine._admit_impl.
+    """
+    def merge(pool_entry, new_entry):
+        if isinstance(pool_entry, CC.PagedLayerKVCache):
+            return CC.paged_scatter_prefill(pool_entry, new_entry,
+                                            phys_blocks)
+        return jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small, slot, axis=1),
+            pool_entry, new_entry)
+
+    caches = [
+        {lname: {key: merge(lcache[key], caches1[si][lname][key])
+                 for key in lcache}
+         for lname, lcache in stage_cache.items()}
+        for si, stage_cache in enumerate(state.caches)]
+    return SlotState(
+        caches=caches,
+        regions=CC.CacheRegions(
+            pos=state.regions.pos.at[slot].set(regions1.pos[0]),
+            enc_end=state.regions.enc_end.at[slot].set(regions1.enc_end[0])),
+        cur_tok=state.cur_tok.at[slot].set(tok0),
+        remaining=state.remaining.at[slot].set(rem))

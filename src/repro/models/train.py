@@ -1,7 +1,6 @@
 """Training step: loss, grads, AdamW update — pure function of (params, opt, batch)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

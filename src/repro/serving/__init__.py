@@ -1,2 +1,2 @@
 from repro.serving.engine import (  # noqa: F401
-    Request, ServingEngine, WaveServingEngine)
+    PagedServingEngine, Request, ServingEngine, WaveServingEngine)

@@ -25,20 +25,33 @@ ready on the host; ``decode_s`` is the wall time from first token to the
 end of the chunk in which the request finished (chunk-boundary
 granularity, ± chunk_size·TPOT).
 
+``PagedServingEngine`` replaces the per-slot contiguous ``n_max`` regions
+with a **paged KV cache**: one global pool of fixed-size token blocks
+(``num_blocks × block_size``) shared by all slots, plus per-slot block
+tables mapping logical positions to ``(block_id, offset)``. Admission is
+gated by *free-block count* (worst-case ``⌈(prompt+gen)/block_size⌉``
+reservation, so a request admitted can always finish — honest OOM
+backpressure instead of mid-flight deadlock), physical blocks are
+allocated lazily at chunk boundaries as each slot's appends approach
+them, and eviction reclaims (and zeroes) a slot's blocks for immediate
+reuse. Short requests no longer strand ``n_max``-sized regions, so a
+fixed pool admits far more concurrent mixed-length requests
+(``benchmarks/bench_continuous_batching.py`` measures the ratio).
+
 ``WaveServingEngine`` preserves the previous lockstep wave scheduler
 (padded-batch prefill, whole-wave decode) as a baseline for
 ``benchmarks/bench_continuous_batching.py``. Its timing is wave-level by
 construction and documented as such.
 
 Deferred (ROADMAP · Open items): async/overlapped prefill (prefill
-currently blocks the decode loop), paged KV blocks (a slot owns a
-contiguous n_max region), and non-greedy sampling.
+currently blocks the decode loop), paged MLA latent caches, and
+non-greedy sampling.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +85,46 @@ def _bucket(n: int, floor: int = 8) -> int:
     return b
 
 
+def _solo_prefill(prefill_fn, params, req: Request, n_max: int):
+    """Solo (batch=1) prefill of a request's prompt, LEFT-aligned and
+    padded to a power-of-two bucket (capped at n_max: submit() already
+    guarantees prompt + gen ≤ n_max). Returns (state1, tok0) — shared by
+    the contiguous and paged engines."""
+    s = min(_bucket(len(req.prompt)), n_max)
+    toks = np.zeros((1, s), np.int32)
+    toks[0, :len(req.prompt)] = req.prompt
+    lens = jnp.asarray([len(req.prompt)], jnp.int32)
+    media = None
+    if req.media is not None:
+        media = jnp.asarray(req.media)[None]
+    logits, state1 = prefill_fn(params, jnp.asarray(toks), lens, media)
+    tok0 = int(jnp.argmax(logits[0], -1))    # blocks: first token
+    return state1, tok0
+
+
+def _collect_chunk_row(req: Request, row: np.ndarray) -> int:
+    """Append a slot's valid chunk emissions to the request.
+
+    Valid emissions are the non-negative prefix (-1 marks inactive
+    steps); with eos_id, remaining jumps to 0 so rem_before - rem_after
+    would over-count — the sentinel scan is the reliable source. Returns
+    the number of tokens emitted this chunk."""
+    n_emit = int(np.argmax(row < 0)) if (row < 0).any() else len(row)
+    req._tokens.extend(row[:n_emit].tolist())
+    return n_emit
+
+
+def _finalize_output(req: Request, eos_id: Optional[int],
+                     t_now: float) -> None:
+    """Fix up a finished request: clip to max_new_tokens, truncate at the
+    first eos, set decode wall time."""
+    out = np.asarray(req._tokens[:req.max_new_tokens], np.int32)
+    if eos_id is not None and eos_id in out:
+        out = out[:int(np.argmax(out == eos_id)) + 1]
+    req.output = out
+    req.decode_s = t_now - req._t_first
+
+
 class ServingEngine:
     """Slot-based continuous-batching engine (see module docstring)."""
 
@@ -96,6 +149,7 @@ class ServingEngine:
             donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0,))
         self.queue: List[Request] = []
+        self.peak_concurrency = 0   # max slots simultaneously decoding
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.n_max:
@@ -127,19 +181,7 @@ class ServingEngine:
 
     def _prefill_request(self, req: Request):
         """Solo prefill into a fresh batch=1 state; returns (state1, tok0)."""
-        # bucket is capped at n_max: the padded prompt must fit the cache
-        # (submit() already guarantees len(prompt) + gen ≤ n_max)
-        s = min(_bucket(len(req.prompt)), self.n_max)
-        toks = np.zeros((1, s), np.int32)
-        toks[0, :len(req.prompt)] = req.prompt           # LEFT-aligned
-        lens = jnp.asarray([len(req.prompt)], jnp.int32)
-        media = None
-        if req.media is not None:
-            media = jnp.asarray(req.media)[None]
-        logits, state1 = self._prefill(self.params, jnp.asarray(toks), lens,
-                                       media)
-        tok0 = int(jnp.argmax(logits[0], -1))            # blocks: first token
-        return state1, tok0
+        return _solo_prefill(self._prefill, self.params, req, self.n_max)
 
     # ------------------------------------------------------------- serving --
     def run(self) -> List[Request]:
@@ -169,6 +211,9 @@ class ServingEngine:
                     state, jnp.int32(slot), state1.caches, state1.regions,
                     jnp.int32(tok0), jnp.int32(req.max_new_tokens - 1))
                 slots[slot] = req
+            self.peak_concurrency = max(
+                self.peak_concurrency,
+                sum(r is not None for r in slots))
             if all(r is None for r in slots):
                 continue    # everything finished at prefill; maybe more queued
 
@@ -182,23 +227,226 @@ class ServingEngine:
             for slot, req in enumerate(slots):
                 if req is None:
                     continue
-                # valid emissions are the non-negative prefix (-1 marks
-                # inactive steps); with eos_id, remaining jumps to 0 so
-                # rem_before - rem_after would over-count — the sentinel
-                # scan is the reliable source
-                row = tokens[slot]
-                n_emit = int(np.argmax(row < 0)) if (row < 0).any() \
-                    else len(row)
-                req._tokens.extend(row[:n_emit].tolist())
+                _collect_chunk_row(req, tokens[slot])
                 if rem_after[slot] <= 0:
-                    out = np.asarray(req._tokens[:req.max_new_tokens],
-                                     np.int32)
-                    if self.eos_id is not None and self.eos_id in out:
-                        out = out[:int(np.argmax(out == self.eos_id)) + 1]
-                    req.output = out
-                    req.decode_s = t_now - req._t_first
+                    _finalize_output(req, self.eos_id, t_now)
                     done.append(req)
                     slots[slot] = None
+        return done
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV cache (see module docstring).
+
+    Memory knobs:
+      * ``block_size``   — tokens per block (~128 on real hardware; small
+        powers of two in tests). ``n_max`` must be a multiple of it.
+      * ``num_blocks``   — size of the shared physical pool. Default
+        ``max_batch * n_max // block_size`` reproduces the contiguous
+        engine's footprint; the interesting regime is *smaller* pools
+        with *more* slots, where admission is block-bound, not slot-bound.
+
+    Scheduling is the slot engine's (solo bucket prefill, chunked decode,
+    mid-flight eviction) with three paging twists:
+      * admission requires ``⌈(prompt+gen)/block_size⌉`` unreserved blocks
+        (FIFO honest backpressure — the head of the queue waits rather
+        than being skipped);
+      * physical blocks are handed to a slot lazily, right before the
+        chunk whose appends will reach them;
+      * eviction returns the slot's blocks to the free list (zeroed).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
+                 max_batch: int = 8, block_size: int = CC.PAGED_DEFAULT_BLOCK,
+                 num_blocks: Optional[int] = None, greedy: bool = True,
+                 use_pariskv: bool = True, chunk_size: int = 8,
+                 eos_id: Optional[int] = None):
+        assert greedy, "sampling is on-device argmax; greedy only for now"
+        assert use_pariskv, "the paged engine serves the ParisKV path only"
+        if n_max % block_size != 0:
+            raise ValueError(f"n_max={n_max} must be a multiple of "
+                             f"block_size={block_size}")
+        self.cfg = cfg
+        self.params = params
+        self.n_max = n_max
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.nblk = n_max // block_size
+        self.num_blocks = (max_batch * self.nblk if num_blocks is None
+                           else num_blocks)
+        self.chunk_size = chunk_size
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
+                                             lengths=lens))
+        self._chunk = jax.jit(
+            lambda p, st, bt: SV.decode_chunk(p, cfg, st, chunk_size,
+                                              eos_id=eos_id,
+                                              block_tables=bt),
+            donate_argnums=(1,))
+        self._admit_fn = jax.jit(SV.admit_paged, donate_argnums=(0,))
+        self._evict_fn = jax.jit(self._evict_impl, donate_argnums=(0,))
+        self.queue: List[Request] = []
+        self.peak_concurrency = 0
+
+        # host-side allocator state
+        self._free: List[int] = list(range(self.num_blocks))
+        self._alloc: Dict[int, List[int]] = {}   # slot → physical blocks
+        self._resv: Dict[int, int] = {}          # slot → unallocated reserve
+        self._pos: Dict[int, int] = {}           # slot → host view of pos
+        self._need: Dict[int, int] = {}          # slot → total token budget
+        self._bt = np.full((max_batch, self.nblk), -1, np.int32)
+
+    # ------------------------------------------------------------ helpers --
+    def blocks_needed(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks neither allocated nor reserved — admission headroom."""
+        return len(self._free) - sum(self._resv.values())
+
+    @staticmethod
+    def _evict_impl(state: SV.SlotState, phys_blocks):
+        """Zero a reclaimed slot's pool blocks (hygiene: masks already stop
+        stale reads, but reclaimed blocks shouldn't leak tenant K/V)."""
+        def clear(entry):
+            if isinstance(entry, CC.PagedLayerKVCache):
+                return CC.paged_clear_blocks(entry, phys_blocks)
+            return entry
+        caches = [
+            {ln: {key: clear(lc[key]) for key in lc}
+             for ln, lc in stage.items()}
+            for stage in state.caches]
+        return SV.SlotState(caches, state.regions, state.cur_tok,
+                            state.remaining)
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.n_max:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens exceeds n_max={self.n_max}")
+        if self.blocks_needed(req) > self.num_blocks:
+            raise ValueError(
+                f"request {req.uid}: needs {self.blocks_needed(req)} blocks, "
+                f"pool holds {self.num_blocks} — request can never run")
+        self.queue.append(req)
+
+    def _take_block(self, slot: int) -> None:
+        blk = self._free.pop(0)
+        self._bt[slot, len(self._alloc[slot])] = blk
+        self._alloc[slot].append(blk)
+        self._resv[slot] -= 1
+
+    def _ensure_blocks(self, slot: int) -> None:
+        """Lazy allocation: before a chunk, give ``slot`` every block its
+        appends can reach (positions ≤ pos + chunk_size), capped by its
+        admission-time reservation."""
+        upto = min(self._pos[slot] + 1 + self.chunk_size, self._need[slot])
+        nb = min(-(-upto // self.block_size),
+                 len(self._alloc[slot]) + self._resv[slot])
+        while len(self._alloc[slot]) < nb:
+            self._take_block(slot)
+
+    def _phys_row(self, slot: int) -> jnp.ndarray:
+        """Slot's block-table row as physical ids with out-of-bounds
+        sentinels (num_blocks) at unallocated entries — scatter-droppable."""
+        phys = np.full((self.nblk,), self.num_blocks, np.int32)
+        row = self._bt[slot]
+        phys[row >= 0] = row[row >= 0]
+        return jnp.asarray(phys)
+
+    def _reserve_and_prefill(self, slot: int, req: Request):
+        """Reserve the request's worst-case blocks, allocate the prompt's,
+        and run the solo prefill. Returns (state1, tok0) — the device pool
+        is untouched until the caller scatters via _admit_fn."""
+        n_prompt_blocks = -(-len(req.prompt) // self.block_size)
+        self._alloc[slot] = []
+        self._resv[slot] = self.blocks_needed(req)
+        self._pos[slot] = len(req.prompt) - 1
+        self._need[slot] = len(req.prompt) + req.max_new_tokens
+        for _ in range(n_prompt_blocks):
+            self._take_block(slot)
+        return _solo_prefill(self._prefill, self.params, req, self.n_max)
+
+    def _release_host(self, slot: int) -> None:
+        """Return the slot's blocks to the free list, clear its table."""
+        self._free.extend(self._alloc.pop(slot))
+        self._resv.pop(slot, None)
+        self._pos.pop(slot, None)
+        self._need.pop(slot, None)
+        self._bt[slot] = -1
+
+    def _release(self, state, slot: int):
+        """Eviction: zero + reclaim the slot's blocks, clear its table."""
+        state = self._evict_fn(state, self._phys_row(slot))
+        self._release_host(slot)
+        return state
+
+    # ------------------------------------------------------------- serving --
+    def run(self) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        done: List[Request] = []
+        state = SV.init_paged_slot_state(self.cfg, self.max_batch,
+                                         self.num_blocks, self.block_size,
+                                         self.n_max)
+        slots: List[Optional[Request]] = [None] * self.max_batch
+
+        while self.queue or any(r is not None for r in slots):
+            # --- admission: FIFO, gated on slots AND unreserved blocks ----
+            for slot in range(self.max_batch):
+                if slots[slot] is not None or not self.queue:
+                    continue
+                if self.blocks_needed(self.queue[0]) > self.free_blocks:
+                    break                        # backpressure: pool is full
+                req = self.queue.pop(0)
+                t_admit = time.perf_counter()
+                state1, tok0 = self._reserve_and_prefill(slot, req)
+                t_first = time.perf_counter()
+                req.ttft_s = t_first - t_admit
+                req._t_first = t_first
+                req._tokens = [tok0]
+                if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+                    req.output = np.asarray(req._tokens, np.int32)
+                    req.decode_s = 0.0
+                    done.append(req)
+                    self._release_host(slot)  # pool untouched: host-only
+                    continue
+                state = self._admit_fn(
+                    state, jnp.int32(slot), self._phys_row(slot),
+                    state1.caches, state1.regions, jnp.int32(tok0),
+                    jnp.int32(req.max_new_tokens - 1))
+                slots[slot] = req
+            self.peak_concurrency = max(
+                self.peak_concurrency,
+                sum(r is not None for r in slots))
+            if all(r is None for r in slots):
+                continue    # everything finished at prefill; maybe more queued
+
+            # --- lazy allocation for the appends this chunk can reach ------
+            for slot, req in enumerate(slots):
+                if req is not None:
+                    self._ensure_blocks(slot)
+
+            # --- one decode chunk: a single host sync ----------------------
+            tokens, state = self._chunk(self.params, state,
+                                        jnp.asarray(self._bt))
+            tokens = np.asarray(tokens)                  # sync point
+            rem_after = np.asarray(state.remaining)
+            t_now = time.perf_counter()
+
+            # --- collection: evict finished slots, reclaim their blocks ----
+            for slot, req in enumerate(slots):
+                if req is None:
+                    continue
+                self._pos[slot] += _collect_chunk_row(req, tokens[slot])
+                if rem_after[slot] <= 0:
+                    _finalize_output(req, self.eos_id, t_now)
+                    done.append(req)
+                    slots[slot] = None
+                    state = self._release(state, slot)
+        assert len(self._free) == self.num_blocks, \
+            "block leak: allocator did not reclaim every block"
         return done
 
 
@@ -227,6 +475,7 @@ class WaveServingEngine:
             lambda p, tok, st: SV.decode_step(p, cfg, tok, st,
                                               use_pariskv=use_pariskv))
         self.queue: List[Request] = []
+        self.peak_concurrency = 0   # max requests decoding in one wave
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -249,6 +498,7 @@ class WaveServingEngine:
 
     def _run_wave(self, wave: List[Request]) -> List[Request]:
         b = len(wave)
+        self.peak_concurrency = max(self.peak_concurrency, b)
         toks = self._pad_prompts(wave)
         media = None
         if wave[0].media is not None:

@@ -6,7 +6,6 @@ asserting output shapes + finiteness, and (2) prefill + a few decode steps
 through the ParisKV serving path, asserting logits shape + no NaNs and
 decode/prefill consistency where cheap.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

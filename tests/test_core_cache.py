@@ -101,6 +101,172 @@ def test_sparse_attention_approaches_full_attention():
     assert float(cos.min()) > 0.9, np.asarray(cos)
 
 
+def test_paged_cache_matches_contiguous():
+    """Paged primitives (append / meta view / promote through a *shuffled*
+    block table) stay bit-identical to the contiguous layout at every
+    valid position — the invariant the paged serving engine rests on."""
+    from repro.core.cache import (PagedLayerKVCache, init_paged_cache,
+                                  paged_decode_append, paged_gather_rows,
+                                  paged_maybe_promote, paged_meta_view,
+                                  paged_scatter_prefill)
+
+    bs, nblk = 32, 8
+    n_max = bs * nblk
+    num_blocks = 20
+    b, S = 2, 128
+    lens = jnp.asarray([128, 40])
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, S, G, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (b, S, G, D))
+
+    cache = init_layer_cache(b, n_max, G, D, CFG)
+    cache, regions = prefill_write(cache, k, v, CFG, SIGNS, lengths=lens)
+
+    # install each row via the solo-prefill scatter, shuffled physical ids
+    pool = init_paged_cache(num_blocks, bs, G, D, CFG)
+    perm = np.random.RandomState(0).permutation(num_blocks)
+    bt = np.stack([perm[:nblk], perm[nblk:2 * nblk]]).astype(np.int32)
+    for i in range(b):
+        c1 = init_layer_cache(1, n_max, G, D, CFG)
+        c1, _ = prefill_write(c1, k[i:i + 1], v[i:i + 1], CFG, SIGNS,
+                              lengths=lens[i:i + 1])
+        stacked = jax.tree.map(lambda a: a[None], pool)
+        stacked = paged_scatter_prefill(
+            PagedLayerKVCache(*stacked),
+            jax.tree.map(lambda a: a[None], c1), jnp.asarray(bt[i]))
+        pool = jax.tree.map(lambda a: a[0], stacked)
+    btj = jnp.asarray(bt)
+
+    # decode appends + per-row promotion stay in lockstep with contiguous
+    rng = jax.random.PRNGKey(2)
+    for _ in range(40):
+        rng, sub = jax.random.split(rng)
+        kt = jax.random.normal(sub, (b, G, D))
+        cache = decode_append(cache, kt, kt, regions.pos + 1)
+        pool = paged_decode_append(pool, btj, kt, kt, regions.pos + 1)
+        regions = regions._replace(pos=regions.pos + 1)
+        cache, r_c = maybe_promote(cache, regions, CFG, SIGNS)
+        pool, r_p = paged_maybe_promote(pool, btj, regions, CFG, SIGNS)
+        np.testing.assert_array_equal(np.asarray(r_c.enc_end),
+                                      np.asarray(r_p.enc_end))
+        regions = r_c
+
+    hi = int(regions.pos[0]) + 1
+    rows = paged_gather_rows(pool.k, btj,
+                             jnp.broadcast_to(jnp.arange(hi)[None], (b, hi)))
+    np.testing.assert_array_equal(np.asarray(rows, np.float32),
+                                  np.asarray(cache.k[:, :hi], np.float32))
+    ids, codes, w = paged_meta_view(pool, btj)
+    for i in range(b):
+        e = int(regions.enc_end[i])
+        np.testing.assert_array_equal(np.asarray(ids[i, :, :e]),
+                                      np.asarray(cache.meta_ids[i, :, :e]))
+        np.testing.assert_array_equal(np.asarray(codes[i, :, :e]),
+                                      np.asarray(cache.meta_codes[i, :, :e]))
+        np.testing.assert_array_equal(
+            np.asarray(w[i, :, :e], np.float32),
+            np.asarray(cache.meta_w[i, :, :e], np.float32))
+
+
+def test_paged_append_drops_unallocated_writes():
+    """Writes through table entries < 0 (free slots, reclaimed rows) must
+    not touch the pool — that is what makes dead rows harmless."""
+    from repro.core.cache import init_paged_cache, paged_decode_append
+
+    pool = init_paged_cache(4, 8, G, D, CFG)
+    bt = jnp.asarray([[0, 1], [-1, -1]], jnp.int32)
+    kt = jnp.ones((2, G, D))
+    before = np.asarray(pool.k, np.float32).copy()
+    pool2 = paged_decode_append(pool, bt, kt, kt, jnp.asarray([3, 3]))
+    after = np.asarray(pool2.k, np.float32)
+    # row 0 wrote block 0 offset 3; row 1 (unallocated) wrote nothing
+    assert (after[0, 3] == 1).all()
+    after[0, 3] = before[0, 3]
+    np.testing.assert_array_equal(after, before)
+
+
+def test_paged_sparse_attention_matches_contiguous():
+    """sparse_decode_attention_paged == sparse_decode_attention on the
+    same cache contents (same masks, gathered segments vs slices)."""
+    from repro.core import sparse_decode_attention_paged
+    from repro.core.cache import (PagedLayerKVCache, init_paged_cache,
+                                  paged_scatter_prefill)
+    from repro.core.encode import encode_query
+
+    bs, nblk = 32, 8
+    n_max = bs * nblk
+    b, S = 2, 192
+    lens = jnp.asarray([192, 120])
+    k = jax.random.normal(jax.random.PRNGKey(3), (b, S, G, D))
+    v = jax.random.normal(jax.random.PRNGKey(4), (b, S, G, D))
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, H, D))
+
+    cache = init_layer_cache(b, n_max, G, D, CFG)
+    cache, regions = prefill_write(cache, k, v, CFG, SIGNS, lengths=lens)
+
+    pool = init_paged_cache(2 * nblk, bs, G, D, CFG)
+    perm = np.random.RandomState(1).permutation(2 * nblk)
+    bt = np.stack([perm[:nblk], perm[nblk:]]).astype(np.int32)
+    for i in range(b):
+        c1 = init_layer_cache(1, n_max, G, D, CFG)
+        c1, _ = prefill_write(c1, k[i:i + 1], v[i:i + 1], CFG, SIGNS,
+                              lengths=lens[i:i + 1])
+        stacked = paged_scatter_prefill(
+            PagedLayerKVCache(*jax.tree.map(lambda a: a[None], pool)),
+            jax.tree.map(lambda a: a[None], c1), jnp.asarray(bt[i]))
+        pool = jax.tree.map(lambda a: a[0], stacked)
+    btj = jnp.asarray(bt)
+
+    meta = KeyMetadata(cache.meta_ids, cache.meta_codes, cache.meta_w)
+    valid = retrieval_valid_mask(n_max, regions, CFG)
+    valid = jnp.broadcast_to(valid[:, None, None, :], (b, G, 1, n_max))
+    qt = encode_query(q.reshape(b, G, H // G, D), CFG, SIGNS)
+    meta_b = jax.tree.map(lambda a: a[:, :, None], meta)
+    res = retrieve(meta_b, qt, valid, CFG, 128, CFG.top_k)
+
+    W = window_size(CFG)
+    ws = jnp.maximum(regions.pos + 1 - W, 0)
+    sm = 1.0 / np.sqrt(D)
+    ref = sparse_decode_attention(q, cache.k, cache.v, res.indices, ws,
+                                  regions.pos, regions.enc_end,
+                                  sink_size=CFG.sink_size, window_size=W,
+                                  sm_scale=sm)
+    got = sparse_decode_attention_paged(q, pool.k, pool.v, btj, res.indices,
+                                        ws, regions.pos, regions.enc_end,
+                                        sink_size=CFG.sink_size,
+                                        window_size=W, sm_scale=sm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_retrieve_paged_block_relative_addresses():
+    """retrieve_paged returns the same logical winners as retrieve, with a
+    consistent (block, offset) decomposition through the table."""
+    from repro.core import retrieve_paged
+    from repro.core.encode import encode_keys, encode_query
+
+    bs, nblk = 16, 8
+    n = bs * nblk
+    keys = jax.random.normal(jax.random.PRNGKey(6), (1, n, D)) \
+        * jnp.linspace(2.0, 0.2, D)
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, D))
+    meta = encode_keys(keys, CFG, SIGNS)
+    qt = encode_query(q, CFG, SIGNS)
+    valid = jnp.ones((1, n), bool)
+    bt = jnp.asarray(np.random.RandomState(2).permutation(nblk)[None],
+                     jnp.int32)
+
+    ref = retrieve(meta, qt, valid, CFG, 128, CFG.top_k)
+    got = retrieve_paged(meta, qt, valid, CFG, 128, CFG.top_k, bt, bs)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    blk = np.asarray(got.indices) // bs
+    np.testing.assert_array_equal(np.asarray(got.block_ids),
+                                  np.asarray(bt)[0][blk])
+    np.testing.assert_array_equal(
+        np.asarray(got.phys_rows),
+        np.asarray(got.block_ids) * bs + np.asarray(got.offsets))
+
+
 def test_regions_disjoint_coverage():
     """Every attended position is in exactly one region."""
     regions = CacheRegions(pos=jnp.int32(700), enc_end=jnp.int32(640))

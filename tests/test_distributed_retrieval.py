@@ -7,7 +7,6 @@ global top-k is taken from the union. Exact because every member of the
 true global top-k is in its own shard's top-k. Simulated here by reshaping
 — no mesh needed, same math.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,7 @@
 """Unit tests for the launch layer: sharding name-rules, HLO collective
 parser, roofline math — all single-device safe (no 512-device flags)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import mesh as MX
 

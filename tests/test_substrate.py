@@ -1,5 +1,4 @@
 """Substrate correctness: SSD math, MoE routing, optimizer, data, ckpt, serving."""
-import dataclasses
 import os
 import tempfile
 
