@@ -10,6 +10,12 @@ using XLA-jitted implementations of both sides:
   bucket_topk        — histogram+threshold selection vs full jnp.sort
   collision          — bucket-level tier weights (2^m sort) vs per-key sort
   gather (UVA)       — top-k row gather vs full-cache copy (densification)
+  paged retrieval    — fused Stage-I/II over the block pool (incremental
+                       histogram, ids-only Stage-I gather, candidates-only
+                       Stage-II gather) vs the per-step paged_meta_view
+                       materialization — step latency AND gathered
+                       metadata bytes/step vs n_logical (ISSUE 4; the
+                       ``run_smoke`` record feeds the CI regression gate)
 
 Derived column: the work ratio that explains the speedup.
 """
@@ -25,6 +31,110 @@ from repro.core import quantizer, retrieval as R, centroids
 
 D = 128
 CFG = ParisKVConfig()
+
+
+# --------------------------------------------------------------------------
+# fused paged retrieval vs per-step meta-view materialization
+# --------------------------------------------------------------------------
+def _paged_retrieval_setup(n_logical: int, bs: int = 512):
+    """One-row paged store of ``n_logical`` tokens with a shuffled block
+    table, plus the query transform and the incremental histogram."""
+    from repro.core.cache import PagedLayerKVCache
+
+    signs = jnp.asarray(srht.rademacher_signs(CFG.padded_dim(D),
+                                              CFG.srht_seed))
+    nblk = n_logical // bs
+    num_blocks = nblk + 4
+    keys = attention_keys(n_logical, D, seed=31)
+    q = query_like(keys, seed=32)
+    meta = encode_keys(keys[None, None], CFG, signs)     # (1, G=1, n, B)
+    qt = encode_query(q[None, None, None], CFG, signs)   # (1, 1, Hg=1, ...)
+    B = meta.centroid_ids.shape[-1]
+
+    bt = np.random.RandomState(33).permutation(num_blocks)[:nblk]
+    bt = jnp.asarray(bt[None], jnp.int32)                # (1, nblk)
+
+    def to_pool(a, dtype):
+        pool = jnp.zeros((num_blocks, 1, bs, B), dtype)
+        return pool.at[bt[0], 0].set(a[0, 0].reshape(nblk, bs, B))
+
+    pool = PagedLayerKVCache(
+        k=jnp.zeros((num_blocks, bs, 1, 1), jnp.bfloat16),   # unused here
+        v=jnp.zeros((num_blocks, bs, 1, 1), jnp.bfloat16),
+        meta_ids=to_pool(meta.centroid_ids, jnp.uint8),
+        meta_codes=to_pool(meta.codes, jnp.uint32),
+        meta_w=to_pool(meta.weights, jnp.float32))
+
+    enc_end = jnp.asarray([n_logical - 256], jnp.int32)  # trailing local win
+    valid = ((jnp.arange(n_logical) >= CFG.sink_size)
+             & (jnp.arange(n_logical) < enc_end[0]))
+    hist = R.bucket_histogram(meta.centroid_ids, valid[None, None],
+                              CFG.num_centroids())       # (1, 1, B, 2^m)
+    return pool, bt, qt, hist, enc_end, valid, B
+
+
+def _measure_paged_retrieval(n_logical: int, bs: int = 512) -> dict:
+    from repro.core.cache import paged_meta_view
+    from repro.core.encode import KeyMetadata
+
+    pool, bt, qt, hist, enc_end, valid, B = _paged_retrieval_setup(
+        n_logical, bs)
+    C = CFG.candidate_count(n_logical)
+    valid_b = jnp.broadcast_to(valid[None, None, None],
+                               (1, 1, 1, n_logical))
+
+    @jax.jit
+    def step_meta_view(pool, bt):
+        ids, codes, w = paged_meta_view(pool, bt)        # the per-step copy
+        meta_b = jax.tree.map(lambda a: a[:, :, None],
+                              KeyMetadata(ids, codes, w))
+        res = R.retrieve_paged(meta_b, qt, valid_b, CFG, C, CFG.top_k,
+                               bt, bs)
+        return res.indices, res.scores
+
+    @jax.jit
+    def step_fused(pool, bt, hist):
+        res = R.retrieve_paged_fused(pool, bt, qt, hist, enc_end, CFG, C,
+                                     CFG.top_k)
+        return res.indices, res.scores
+
+    idx_ref, _ = step_meta_view(pool, bt)
+    idx_fused, _ = step_fused(pool, bt, hist)
+    identical = bool(jnp.array_equal(idx_ref, idx_fused))
+
+    us_view = time_fn(step_meta_view, pool, bt)
+    us_fused = time_fn(step_fused, pool, bt, hist)
+    # gathered metadata bytes per decode step: ids uint8 + codes uint32 +
+    # weights f32 for every logical key (view) vs ids only + the ≤C
+    # candidates' codes/weights (fused)
+    bytes_view = n_logical * B * (1 + 4 + 4)
+    bytes_fused = n_logical * B * 1 + C * B * (4 + 4)
+    return {
+        "n_logical": n_logical, "block_size": bs, "candidates": C,
+        "identical_indices": identical,
+        "meta_view": {"us_per_step": round(us_view, 1),
+                      "meta_bytes_per_step": bytes_view},
+        "fused": {"us_per_step": round(us_fused, 1),
+                  "meta_bytes_per_step": bytes_fused},
+        "fused_speedup": round(us_view / max(us_fused, 1e-9), 2),
+        "meta_bytes_ratio": round(bytes_view / bytes_fused, 2),
+    }
+
+
+def run_smoke() -> dict:
+    """Machine-readable retrieval-step record for CI regression tracking
+    (BENCH_*.json): fail if the fused step latency regresses >tol vs the
+    committed baseline (absolute on the same host, fused/meta_view ratio
+    across hosts), or if the paths stop agreeing on index sets."""
+    m = _measure_paged_retrieval(16_384)
+    return {
+        "benchmark": "paged_retrieval_step",
+        "n_logical": m["n_logical"],
+        "paths": {"fused": m["fused"], "meta_view": m["meta_view"]},
+        "fused_speedup": m["fused_speedup"],
+        "meta_bytes_ratio": m["meta_bytes_ratio"],
+        "identical_indices": m["identical_indices"],
+    }
 
 
 def run() -> list:
@@ -128,4 +238,17 @@ def run() -> list:
     rows.append(csv_row("kernel/gather_kv", us_g,
                         f"full_copy_us={us_a:.0f};speedup={us_a/us_g:.1f}x;"
                         f"bytes_ratio={n/CFG.top_k:.0f}"))
+
+    # --- fused paged retrieval vs meta-view materialization ------------------
+    for n_log in (16_384, 65_536):
+        m = _measure_paged_retrieval(n_log)
+        rows.append(csv_row(
+            f"kernel/paged_retrieval_fused_n{n_log}",
+            m["fused"]["us_per_step"],
+            f"meta_view_us={m['meta_view']['us_per_step']:.0f};"
+            f"speedup={m['fused_speedup']}x;"
+            f"gathered_bytes={m['fused']['meta_bytes_per_step']};"
+            f"view_bytes={m['meta_view']['meta_bytes_per_step']};"
+            f"bytes_ratio={m['meta_bytes_ratio']}x;"
+            f"identical={'ok' if m['identical_indices'] else 'MISMATCH'}"))
     return rows

@@ -61,6 +61,28 @@ def render_bench_trajectory(paths: list) -> None:
                       f"| {f'{cap:.2f}x' if cap is not None else '-'} "
                       f"| {'ok' if par else '✗' if par is not None else '-'} |")
 
+    path_rows = [(os.path.basename(p), rec)
+                 for _, p, payload in records
+                 for rec in payload.get("results", [])
+                 if rec.get("paths")]
+    if path_rows:
+        print("\n### Retrieval-step trajectory (fused vs meta-view, "
+              "lower is better)\n")
+        print("| file | benchmark | n_logical | fused us/step | "
+              "meta-view us/step | speedup | bytes ratio | identical |")
+        print("|---|---|---|---|---|---|---|---|")
+        for name, rec in path_rows:
+            p = rec["paths"]
+            ident = rec.get("identical_indices")
+            print(f"| {name} | {rec['benchmark']} "
+                  f"| {rec.get('n_logical', '-')} "
+                  f"| {p.get('fused', {}).get('us_per_step', '-')} "
+                  f"| {p.get('meta_view', {}).get('us_per_step', '-')} "
+                  f"| {rec.get('fused_speedup', '-')}x "
+                  f"| {rec.get('meta_bytes_ratio', '-')}x "
+                  f"| {'ok' if ident else '✗' if ident is not None else '-'} "
+                  f"|")
+
 
 # --------------------------------------------------------- dry-run table ---
 def render_dryrun(results_path: str, mesh_filter) -> None:

@@ -97,11 +97,24 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     all engines cancels — the same-host absolute check is the backstop
     for that, which is why baselines should be refreshed on the machine
     that runs CI when possible.
+
+    Records with ``paths`` (the fused-vs-meta-view retrieval-step
+    microbench) are latency records, lower-is-better, gated by the same
+    host-fingerprint rules: same host → the fused path's absolute
+    us_per_step may not grow more than ``tol``; across hosts → the
+    fused/meta_view latency *ratio* is compared instead (machine speed
+    cancels; the fused path slipping relative to the materialized view it
+    replaces still fails). A run whose paths stop agreeing on index sets
+    fails unconditionally.
     """
     same_host = baseline.get("host") == payload.get("host")
     base_by_name = {r["benchmark"]: r for r in baseline.get("results", [])}
     failures = []
     for rec in payload.get("results", []):
+        # correctness gates need no baseline — fail unconditionally
+        if rec.get("identical_indices") is False:
+            failures.append(f"{rec['benchmark']}: fused retrieval index "
+                            f"sets diverged from the meta-view path")
         base = base_by_name.get(rec["benchmark"])
         if base is None:
             continue
@@ -132,6 +145,28 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
         if rec.get("token_parity_paged_vs_slots") is False:
             failures.append(
                 f"{rec['benchmark']}: paged/slots token parity broken")
+
+        paths, base_paths = rec.get("paths"), base.get("paths")
+        if paths and base_paths:
+            def step_us(ps, path):
+                return ps.get(path, {}).get("us_per_step")
+
+            if same_host:
+                got, ref = step_us(paths, "fused"), step_us(base_paths,
+                                                            "fused")
+                unit = "us/step"
+            else:
+                def ratio(ps):
+                    f, mv = step_us(ps, "fused"), step_us(ps, "meta_view")
+                    return f / mv if f and mv else None
+                got, ref = ratio(paths), ratio(base_paths)
+                unit = "×meta_view"
+            if got is not None and ref is not None:
+                ceil = (1.0 + tol) * ref
+                if got > ceil:
+                    failures.append(
+                        f"{rec['benchmark']}/fused: {got:.2f} {unit} "
+                        f"> {ceil:.2f} (baseline {ref:.2f}, tol {tol:.0%})")
     return failures
 
 

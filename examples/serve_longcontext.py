@@ -19,6 +19,18 @@ contiguous per-slot regions. Its two knobs:
   block-bound — requests then queue until evictions free blocks
   (worst-case reservation at admission: honest backpressure, never a
   mid-flight OOM). A request that cannot ever fit is rejected at submit.
+* ``--no-fused``: fall back to the per-step meta-view retrieval (gathers
+  ids+codes+weights for every cached key each decode step). The default
+  fused path scores Stage I straight off the pool with the incremental
+  bucket histogram (admission/promotion-maintained cache state,
+  b × G × B × 2^m int32 per layer) and fetches only the ≤C candidates'
+  codes/weights at Stage II — token-identical either way at the default
+  ``hist_sample = 0`` (with sampled histograms the meta-view path is
+  approximate while fused stays exact), so this flag is an A/B knob,
+  not a quality trade-off.
+
+Kernel interpret mode autodetects the platform (compile on TPU,
+interpret elsewhere); override with REPRO_PALLAS_INTERPRET=0|1.
 
 Note the paged engine always runs the ParisKV path, so the ParisKV-vs-
 full-attention agreement check only runs with ``--engine slots``.
@@ -46,6 +58,9 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged: physical pool size (default: contiguous "
                          "footprint)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="paged: fall back to the per-step meta-view "
+                         "retrieval instead of the fused pool path")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch)
@@ -61,7 +76,8 @@ def main():
         if args.engine == "paged":
             return PagedServingEngine(
                 cfg, params, n_max=1024, max_batch=args.requests,
-                block_size=args.block_size, num_blocks=args.num_blocks)
+                block_size=args.block_size, num_blocks=args.num_blocks,
+                fused=not args.no_fused)
         return ServingEngine(cfg, params, n_max=1024,
                              max_batch=args.requests, use_pariskv=use_pk)
 

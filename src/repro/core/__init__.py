@@ -12,14 +12,16 @@ from repro.core.config import (  # noqa: F401
 from repro.core.encode import (  # noqa: F401
     KeyMetadata, QueryTransform, encode_keys, encode_query)
 from repro.core.retrieval import (  # noqa: F401
-    PagedRetrievalResult, RetrievalResult, collision_scores, exact_topk,
-    recall_at_k, rerank, retrieve, retrieve_paged, select_candidates)
+    PagedRetrievalResult, RetrievalResult, collision_scores,
+    collision_scores_paged, exact_topk, recall_at_k, rerank, rerank_paged,
+    retrieve, retrieve_paged, retrieve_paged_fused, select_candidates)
 from repro.core.attention import (  # noqa: F401
     blockwise_causal_attention, dense_decode_attention, full_attention,
     sparse_decode_attention, sparse_decode_attention_paged)
 from repro.core.cache import (  # noqa: F401
-    CacheRegions, LayerKVCache, PagedLayerKVCache, cache_spec, decode_append,
-    init_layer_cache, init_paged_cache, maybe_promote, paged_decode_append,
-    paged_maybe_promote, paged_meta_view, prefill_write, retrieval_valid_mask,
-    window_size)
+    CacheRegions, LayerKVCache, PagedLayerKVCache, bucket_hist_from_meta,
+    cache_spec, decode_append, init_layer_cache, init_paged_cache,
+    maybe_promote, paged_decode_append, paged_maybe_promote,
+    paged_maybe_promote_hist, paged_meta_view, prefill_write,
+    retrieval_valid_mask, window_size)
 from repro.core import srht  # noqa: F401

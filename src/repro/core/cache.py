@@ -483,6 +483,107 @@ def paged_maybe_promote(pool: PagedLayerKVCache, block_tables: jax.Array,
     return pool, CacheRegions(pos=pos, enc_end=new_enc)
 
 
+# ----------------------------------------------------------------------
+# Incremental bucket histograms (fused paged retrieval, ISSUE 4)
+# ----------------------------------------------------------------------
+#
+# Stage-I tier weights need the per-(row, kv-head, subspace) count of
+# retrieval-region keys in each of the 2^m centroid buckets. The paged
+# meta-view path recomputes that histogram with an O(n) scatter-add per
+# query; here it is *cache state* of shape (b, G, B, 2^m) int32
+# (b · G · B · 2^m · 4 bytes — e.g. 256 KiB per layer at b=4, G=4, B=16,
+# m=8), maintained exactly:
+#
+#   * admission   — one histogram over the freshly prefilled metadata
+#                   (bucket_hist_from_meta), amortized per request;
+#   * decode      — appends write K/V only (metadata is encoded lazily at
+#                   promotion), so the histogram is untouched: O(1);
+#   * promotion   — the U re-encoded keys' buckets are incremented
+#                   (paged_promote_rows_hist): O(U) every U steps, the
+#                   drift-robustness bookkeeping. The overwritten stale
+#                   entries sat at ≥ enc_end — outside the counted region
+#                   — so no decrement arises (invariant-tested);
+#   * eviction    — the slot's histogram row is zeroed by the engine.
+#
+# The invariant (tests/test_paged_fused.py):
+#   hist[i] == bucket_histogram(logical_ids[i], valid[i])  at every step.
+
+
+def bucket_hist_from_meta(meta_ids: jax.Array, regions: CacheRegions,
+                          cfg: ParisKVConfig) -> jax.Array:
+    """Histogram a contiguous metadata store over [sink, enc_end).
+
+    meta_ids: (..., b, G, n, B) (extra leading dims — e.g. a stacked stage
+    repeat — broadcast); regions aligned with the ``b`` axis.
+    → (..., b, G, B, 2^m) int32.
+    """
+    from repro.core import retrieval as R
+    n = meta_ids.shape[-2]
+    valid = retrieval_valid_mask(n, regions, cfg)
+    if valid.ndim == 1:
+        valid = valid[None]
+    return R.bucket_histogram(meta_ids, valid[:, None, :],
+                              cfg.num_centroids())
+
+
+def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
+                            block_tables: jax.Array, starts: jax.Array,
+                            mask: jax.Array, cfg: ParisKVConfig,
+                            signs: jax.Array
+                            ) -> Tuple[PagedLayerKVCache, jax.Array]:
+    """``paged_promote_rows`` + exact O(U) histogram maintenance.
+
+    For each promoting row the U newly encoded keys' buckets are
+    incremented — only positions ≥ sink (short prompts can promote spans
+    that start below the sink, which never become valid) under allocated
+    blocks (unallocated writes are dropped by the promote itself). No
+    decrement is needed: the span [starts, starts+U) starts at the
+    pre-promotion enc_end, so the stale ids it overwrites were never
+    inside the counted region [sink, enc_end) — the invariant test
+    (hist == recomputed histogram after every step) pins this down, and
+    any future overlapping re-encode would trip it immediately.
+    """
+    from repro.core import retrieval as R
+    U = cfg.update_interval
+    b = block_tables.shape[0]
+    nb = paged_num_blocks(pool)
+    bs = paged_block_size(pool)
+    nc = cfg.num_centroids()
+    starts = _as_batch(starts, b)
+    lidx = starts[:, None] + jnp.arange(U)[None]             # (b, U)
+    pb, off = paged_lookup_blocks(block_tables, lidx, bs)
+    phys = jnp.clip(pb, 0, nb - 1) * bs + off
+
+    new_pool = paged_promote_rows(pool, block_tables, starts, mask, cfg,
+                                  signs)
+    flat_ids = jnp.moveaxis(new_pool.meta_ids, 2, 1).reshape(
+        nb * bs, pool.meta_ids.shape[1], pool.meta_ids.shape[-1])
+    new_ids = jnp.moveaxis(flat_ids[phys], 2, 1)             # (b, G, U, B)
+
+    inc = mask[:, None] & (lidx >= cfg.sink_size) & (pb >= 0)  # (b, U)
+    return new_pool, hist + R.bucket_histogram(new_ids, inc[:, None], nc)
+
+
+def paged_maybe_promote_hist(pool: PagedLayerKVCache, hist: jax.Array,
+                             block_tables: jax.Array, regions: CacheRegions,
+                             cfg: ParisKVConfig, signs: jax.Array
+                             ) -> Tuple[PagedLayerKVCache, jax.Array,
+                                        CacheRegions]:
+    """``paged_maybe_promote`` twin that also maintains the histogram."""
+    b = block_tables.shape[0]
+    pos = _as_batch(regions.pos, b)
+    enc_end = _as_batch(regions.enc_end, b)
+    trigger = (pos + 1 - enc_end) >= window_size(cfg)
+
+    pool, hist = jax.lax.cond(
+        jnp.any(trigger),
+        lambda ph: paged_promote_rows_hist(ph[0], ph[1], block_tables,
+                                           enc_end, trigger, cfg, signs),
+        lambda ph: ph, (pool, hist))
+    new_enc = jnp.where(trigger, enc_end + cfg.update_interval, enc_end)
+    return pool, hist, CacheRegions(pos=pos, enc_end=new_enc)
+
+
 def paged_scatter_prefill(pool: PagedLayerKVCache, cache1: LayerKVCache,
                           phys_blocks: jax.Array) -> PagedLayerKVCache:
     """Install a solo (batch=1) contiguous prefill result into the pool.

@@ -258,19 +258,173 @@ def retrieve_paged(meta: KeyMetadata, qt: QueryTransform, valid: jax.Array,
     """
     res = retrieve(meta, qt, valid, cfg, num_candidates, top_k,
                    hist_sample=hist_sample, bucket_select=bucket_select)
-    blk, off = split_block_relative(res.indices, block_size)
-    b, nblk = block_tables.shape
-    phys_blk = jnp.take_along_axis(
-        block_tables, blk.reshape(b, -1), axis=1).reshape(blk.shape)
-    # unallocated entries (< 0) are clipped to block 0 — such hits only
-    # arise at masked (invalid) positions, which attention re-masks by
-    # enc_end; allocated entries are in-bounds block ids by construction
-    safe_blk = jnp.clip(phys_blk, 0, None)
-    phys_rows = safe_blk * block_size + off
+    # unallocated entries (< 0) are clipped to block 0 (_block_relative) —
+    # such hits only arise at masked (invalid) positions, which attention
+    # re-masks by enc_end; allocated entries are in-bounds by construction
+    safe_blk, off, phys_rows = _block_relative(res.indices, block_tables,
+                                               block_size)
     return PagedRetrievalResult(
         indices=res.indices, block_ids=safe_blk, offsets=off,
         phys_rows=phys_rows, scores=res.scores,
         cand_indices=res.cand_indices, coarse_scores=res.coarse_scores)
+
+
+# ======================================================================
+# Fused paged retrieval: Stage-I/II directly over the block pool
+# ======================================================================
+#
+# ``retrieve_paged`` above consumes the *materialized* logical metadata
+# view (cache.paged_meta_view): ids + codes + weights — 9·B bytes per key
+# — gathered through the block table on every decode step before any
+# scoring happens. The fused pipeline below eliminates that copy:
+#
+#   Stage I   reads only the uint8 centroid ids (1·B bytes/key in the
+#             pure-jnp twin; the Pallas kernel
+#             kernels.collision.collision_paged_pallas streams physical id
+#             tiles through VMEM without materializing anything), and
+#             takes the bucket histogram from **incrementally maintained
+#             cache state** (cache.bucket_hist_* — O(U) bookkeeping at
+#             promotion instead of an O(n) scatter-add per query);
+#   Stage II  gathers codes/weights for the ≤C Stage-I survivors only, by
+#             physical pool row (8·B bytes per *candidate*).
+#
+# Per step that is n·B + 2·C·4·B gathered metadata bytes instead of
+# n·9·B — ≥4× less for n ≥ 16k — and the index sets/scores are
+# *identical* to ``retrieve_paged`` (tests/test_paged_fused.py).
+
+def gather_meta_heads_physical(pool_meta: jax.Array, phys_rows: jax.Array
+                               ) -> jax.Array:
+    """Per-(kv-head) metadata gather by flat physical pool row ids.
+
+    pool_meta: (num_blocks, G, bs, B); phys_rows: (b, G, Q, C) →
+    (b, G, Q, C, B): index (i, g, q, c) reads head g of pool row
+    phys_rows[i, g, q, c]. Delegates to cache.gather_heads_physical —
+    metadata pools just keep G before the block offset, so one moveaxis
+    (free under jit) puts them in K/V pool layout."""
+    from repro.core.cache import gather_heads_physical
+    return gather_heads_physical(jnp.moveaxis(pool_meta, 1, 2), phys_rows)
+
+
+def collision_scores_paged(pool_ids: jax.Array, block_tables: jax.Array,
+                           q_sub: jax.Array, counts: jax.Array,
+                           enc_end: jax.Array, cfg: ParisKVConfig
+                           ) -> jax.Array:
+    """Stage-I coarse scores over a paged pool — pure-jnp twin of the
+    block-table-indirect kernel (kernels.collision.collision_paged_pallas).
+
+    pool_ids:     (num_blocks, G, bs, B) uint8 physical centroid ids
+    block_tables: (b, nblk) int32 (< 0 = unallocated; such positions lie
+                  beyond enc_end and are masked)
+    q_sub:        (b, G, Hg, B, m) rotated query subspaces
+    counts:       (b, G, B, 2^m) int32 — the incrementally maintained
+                  bucket histogram over each row's [sink, enc_end)
+                  (cache state; replaces the per-query O(n) scatter-add)
+    enc_end:      (b,) int32 retrieval-region end per row
+    → (b, G, Hg, n_logical) int32 scores, -1 outside [sink, enc_end).
+
+    Only the uint8 ids are gathered through the table — codes and weights
+    never leave the pool at Stage I.
+    """
+    nb, G, bs, B = pool_ids.shape
+    b, nblk = block_tables.shape
+    n = nblk * bs
+    nc = cfg.num_centroids()
+    cs = centroids.centroid_scores(q_sub, cfg.m)           # (b, G, Hg, B, 2^m)
+    n_valid = jnp.maximum(enc_end - cfg.sink_size, 0)      # (b,)
+    table = tier_weight_table(cs, counts[:, :, None],
+                              n_valid[:, None, None], cfg)
+    safe = jnp.clip(block_tables, 0, nb - 1)
+    ids = pool_ids[safe]                                   # (b, nblk, G, bs, B)
+    ids = jnp.moveaxis(ids, 2, 1).reshape(b, G, n, B)
+    # same flat (B·2^m) lookup as collision_scores
+    table_flat = table.reshape(table.shape[:-2] + (-1,))   # (b, G, Hg, B·2^m)
+    offsets = jnp.arange(B, dtype=jnp.int32) * nc
+    idx_flat = (ids.astype(jnp.int32) + offsets).reshape(b, G, 1, n * B)
+    idx_flat = jnp.broadcast_to(idx_flat, table_flat.shape[:-1] + (n * B,))
+    per_key = jnp.take_along_axis(table_flat, idx_flat, axis=-1)
+    scores = per_key.reshape(per_key.shape[:-1] + (n, B)).sum(-1)
+    pos = jnp.arange(n)
+    valid = (pos[None] >= cfg.sink_size) & (pos[None] < enc_end[:, None])
+    return jnp.where(valid[:, None, None, :], scores, -1)
+
+
+def rerank_paged(pool_codes: jax.Array, pool_w: jax.Array,
+                 phys_rows: jax.Array, cand_idx: jax.Array,
+                 qt: QueryTransform, enc_end: jax.Array,
+                 cfg: ParisKVConfig) -> jax.Array:
+    """Stage-II RSQ-IP estimates gathered by physical pool row — only the
+    ≤C candidates' codes/weights ever leave the pool.
+
+    pool_codes/pool_w: (num_blocks, G, bs, B) pool metadata
+    phys_rows:         (b, G, Hg, C) int32 flat physical row per candidate
+    cand_idx:          (b, G, Hg, C) int32 logical positions (validity)
+    qt:                q_sub (b, G, Hg, B, m), q_norm (b, G, Hg)
+    → (b, G, Hg, C) float32; invalid candidates masked to -inf.
+
+    Same float-op order as ``rerank`` → bit-identical estimates.
+    """
+    from repro.core import quantizer
+
+    codes = gather_meta_heads_physical(pool_codes, phys_rows)
+    w = gather_meta_heads_physical(pool_w, phys_rows)
+    v = quantizer.decode_directions(codes, cfg.m, cfg.magnitude_bits)
+    dots = jnp.einsum("...cbm,...bm->...cb", v, qt.q_sub)
+    est = qt.q_norm[..., None] * jnp.sum(w * dots, axis=-1)
+    cand_valid = ((cand_idx >= cfg.sink_size)
+                  & (cand_idx < enc_end[:, None, None, None]))
+    return jnp.where(cand_valid, est, NEG_INF)
+
+
+def _block_relative(idx: jax.Array, block_tables: jax.Array, block_size: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Logical positions → (safe physical block, offset, flat phys row),
+    with retrieve_paged's clip-at-0 convention for unallocated entries."""
+    blk, off = split_block_relative(idx, block_size)
+    b = block_tables.shape[0]
+    phys_blk = jnp.take_along_axis(
+        block_tables, blk.reshape(b, -1), axis=1).reshape(blk.shape)
+    safe_blk = jnp.clip(phys_blk, 0, None)
+    return safe_blk, off, safe_blk * block_size + off
+
+
+def retrieve_paged_fused(pool, block_tables: jax.Array, qt: QueryTransform,
+                         counts: jax.Array, enc_end: jax.Array,
+                         cfg: ParisKVConfig, num_candidates: int, top_k: int,
+                         bucket_select: bool = True) -> PagedRetrievalResult:
+    """Fused two-stage retrieval directly over a paged pool — no
+    ``paged_meta_view`` materialization anywhere.
+
+    ``pool`` is a cache.PagedLayerKVCache (only meta_ids/meta_codes/meta_w
+    are touched); ``counts`` the incrementally maintained (b, G, B, 2^m)
+    bucket histogram (cache.bucket_hist_from_meta at admission +
+    cache.paged_promote_rows_hist at promotion); ``enc_end`` (b,) the
+    per-row retrieval-region end. Token-identical to ``retrieve_paged``
+    over the materialized view whenever ``counts`` is exact and
+    ``hist_sample == 0`` (the incremental histogram *is* exact, so the
+    fused path has no sampled-histogram variant — it gets the exact
+    boundaries for free).
+    """
+    bs = pool.meta_ids.shape[2]
+    B = pool.meta_ids.shape[-1]
+    b = block_tables.shape[0]
+    enc_end = jnp.broadcast_to(jnp.asarray(enc_end, jnp.int32), (b,))
+    coarse = collision_scores_paged(pool.meta_ids, block_tables, qt.q_sub,
+                                    counts, enc_end, cfg)
+    if bucket_select:
+        cand = select_candidates_bucket(coarse, num_candidates,
+                                        score_range=max(cfg.tier_weights) * B)
+    else:
+        cand = select_candidates(coarse, num_candidates)
+    _, _, cand_phys = _block_relative(cand, block_tables, bs)
+    est = rerank_paged(pool.meta_codes, pool.meta_w, cand_phys, cand, qt,
+                       enc_end, cfg)
+    top_est, top_pos = jax.lax.top_k(est, top_k)
+    top_idx = jnp.take_along_axis(cand, top_pos, axis=-1)
+    safe_blk, off, phys_rows = _block_relative(top_idx, block_tables, bs)
+    return PagedRetrievalResult(
+        indices=top_idx, block_ids=safe_blk, offsets=off,
+        phys_rows=phys_rows, scores=top_est,
+        cand_indices=cand, coarse_scores=coarse)
 
 
 def exact_topk(keys: jax.Array, q: jax.Array, valid: jax.Array, top_k: int):

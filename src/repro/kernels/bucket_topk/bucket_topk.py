@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(scores_ref, hist_ref, *, score_range: int):
     s = scores_ref[...].astype(jnp.int32)          # (bn,)
@@ -27,11 +29,21 @@ def _kernel(scores_ref, hist_ref, *, score_range: int):
     hist_ref[...] = onehot.sum(axis=0)[None, :]
 
 
+def histogram_pallas(scores: jax.Array, *, score_range: int,
+                     block_n: int = 2048, interpret=None) -> jax.Array:
+    """scores (n,) int32 in [0, score_range) → histogram (score_range,).
+
+    Interpret-mode resolves outside the jitted body (env override honored
+    per call, not frozen into the first trace)."""
+    return _histogram_pallas(scores, score_range=score_range,
+                             block_n=block_n,
+                             interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("score_range", "block_n",
                                              "interpret"))
-def histogram_pallas(scores: jax.Array, *, score_range: int,
-                     block_n: int = 2048, interpret: bool = True) -> jax.Array:
-    """scores (n,) int32 in [0, score_range) → histogram (score_range,)."""
+def _histogram_pallas(scores, *, score_range: int, block_n: int,
+                      interpret: bool):
     n = scores.shape[0]
     assert n % block_n == 0
     grid = (n // block_n,)

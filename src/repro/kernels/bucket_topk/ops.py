@@ -12,7 +12,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import INTERPRET
 from repro.kernels.bucket_topk.bucket_topk import histogram_pallas
 
 
@@ -34,8 +33,7 @@ def bucket_topk(scores: jax.Array, k: int, score_range: int = 128,
             [shifted, jnp.zeros(lead + (pad,), scores.dtype)], -1)
 
     def one(s_row):
-        hist = histogram_pallas(s_row, score_range=rng, block_n=block_n,
-                                interpret=INTERPRET)
+        hist = histogram_pallas(s_row, score_range=rng, block_n=block_n)
         # threshold: smallest score t such that count(score > t) < k ≤
         # count(score ≥ t)
         desc = hist[::-1]

@@ -1,2 +1,3 @@
-from repro.kernels.collision.ops import collision_scores_kernel  # noqa: F401
+from repro.kernels.collision.ops import (  # noqa: F401
+    collision_scores_kernel, collision_scores_paged_kernel)
 from repro.kernels.collision import ref  # noqa: F401

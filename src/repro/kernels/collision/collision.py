@@ -1,8 +1,19 @@
-"""Pallas TPU kernel: Stage-I collision accumulation (paper §4.3 kernel ii).
+"""Pallas TPU kernels: Stage-I collision accumulation (paper §4.3 kernel ii).
 
-Given per-key centroid ids (n, B) and the per-(subspace, centroid) integer
+Given per-key centroid ids and the per-(subspace, centroid) integer
 tier-weight table (B, 2^m) — computed once per query from the ≤2^m bucket
 ranking — accumulate S_i = Σ_b table[b, ids[i, b]].
+
+Two variants:
+
+* ``collision_pallas``        — contiguous key stream (n, B).
+* ``collision_paged_pallas``  — block-table-indirect over a paged metadata
+  pool: the per-sequence block table rides in SMEM (scalar prefetch,
+  mirroring kernels/gather_kv's paged gather) and drives the input
+  BlockSpec's index_map, so each grid step DMAs exactly one physical
+  (block_size, B) uint8 id tile HBM→VMEM. The logical id view is **never
+  materialized** — this is the Stage-I half of the fused paged retrieval
+  path (ISSUE 4), replacing the per-step ``paged_meta_view`` gather.
 
 TPU adaptation: the per-key table lookup is a *gather*, which the VPU
 dislikes; we re-express it as a one-hot × table-row product per subspace
@@ -18,33 +29,58 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 
-def _kernel(ids_ref, table_ref, out_ref, *, num_subspaces: int,
-            num_centroids: int):
-    ids = ids_ref[...].astype(jnp.int32)          # (bn, B)
+def _accumulate(ids, table_row, *, num_subspaces: int, num_centroids: int):
+    """ids (bn, B) int32, table_row(b) → (2^m,) f32 rows → (bn,) f32."""
     bn = ids.shape[0]
     iota = jax.lax.broadcasted_iota(jnp.int32, (bn, num_centroids), 1)
 
     def body(b, acc):
         onehot = (ids[:, b][:, None] == iota).astype(jnp.float32)
-        row = table_ref[b, :].astype(jnp.float32)  # (2^m,)
+        row = table_row(b)                         # (2^m,)
         return acc + onehot @ row
 
-    acc = jax.lax.fori_loop(
+    return jax.lax.fori_loop(
         0, num_subspaces, body, jnp.zeros((bn,), jnp.float32))
+
+
+def _kernel(ids_ref, table_ref, out_ref, *, num_subspaces: int,
+            num_centroids: int):
+    ids = ids_ref[...].astype(jnp.int32)           # (bn, B)
+    acc = _accumulate(ids, lambda b: table_ref[b, :].astype(jnp.float32),
+                      num_subspaces=num_subspaces,
+                      num_centroids=num_centroids)
     out_ref[...] = acc.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def collision_pallas(ids: jax.Array, table: jax.Array, *, block_n: int = 1024,
-                     interpret: bool = True) -> jax.Array:
-    """ids: (n, B) uint8/int32; table: (B, C) int32 → scores (n,) int32."""
+                     interpret=None) -> jax.Array:
+    """ids: (n, B) uint8/int32; table: (B, C) int32 → scores (n,) int32.
+
+    Arbitrary ``n`` is supported: the key stream is zero-padded to the
+    block multiple here (pad rows score against bucket 0 in every
+    subspace) and the tail is masked off by slicing the output back to
+    ``n`` — callers never pre-pad. Interpret-mode is resolved *outside*
+    the jitted body so the REPRO_PALLAS_INTERPRET override is honored on
+    every call, not frozen into the first trace's cache entry.
+    """
+    return _collision_pallas(ids, table, block_n=block_n,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _collision_pallas(ids, table, *, block_n: int, interpret: bool):
     n, B = ids.shape
     C = table.shape[1]
-    assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
-    return pl.pallas_call(
+    pad = (-n) % block_n
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros((pad, B), ids.dtype)], axis=0)
+    grid = ((n + pad) // block_n,)
+    out = pl.pallas_call(
         functools.partial(_kernel, num_subspaces=B, num_centroids=C),
         grid=grid,
         in_specs=[
@@ -52,6 +88,64 @@ def collision_pallas(ids: jax.Array, table: jax.Array, *, block_n: int = 1024,
             pl.BlockSpec((B, C), lambda i: (0, 0)),   # table resident
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
         interpret=interpret,
     )(ids, table)
+    return out[:n] if pad else out
+
+
+def _paged_kernel(bt_ref, ids_ref, table_ref, out_ref, *, num_subspaces: int,
+                  num_centroids: int):
+    ids = ids_ref[0, 0].astype(jnp.int32)          # (block_size, B)
+    acc = _accumulate(ids,
+                      lambda b: table_ref[0, 0, b, :].astype(jnp.float32),
+                      num_subspaces=num_subspaces,
+                      num_centroids=num_centroids)
+    out_ref[...] = acc.astype(jnp.int32)[None, None, :]
+
+
+def collision_paged_pallas(block_table: jax.Array, pool_ids: jax.Array,
+                           table: jax.Array, *, interpret=None) -> jax.Array:
+    """Block-table-indirect Stage-I scores over a paged metadata pool.
+
+    pool_ids:    (num_blocks, G, block_size, B) uint8 — the pool's centroid
+                 ids, *physical* layout (cache.PagedLayerKVCache.meta_ids).
+    block_table: (nblk,) int32 — one sequence's logical→physical block map
+                 (entries must be pre-clipped to [0, num_blocks); positions
+                 under unallocated blocks are masked by enc_end upstream).
+    table:       (G, Hg, B, C) int32 — per-(kv-head, query-head) tier
+                 weights.
+    → (G, Hg, nblk · block_size) int32 logical collision scores.
+
+    The block table is prefetched to SMEM and double-indexes the pool in
+    the input BlockSpec — each (g, h, j) grid step streams one physical
+    (block_size, B) id tile through VMEM, accumulating S_i for the logical
+    block j. No (n_logical, B) id view ever exists in HBM.
+    """
+    return _collision_paged_pallas(block_table, pool_ids, table,
+                                   interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _collision_paged_pallas(block_table, pool_ids, table, *,
+                            interpret: bool):
+    num_blocks, G, bs, B = pool_ids.shape
+    Hg, C = table.shape[1], table.shape[3]
+    nblk = block_table.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, Hg, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, B),
+                         lambda g, h, j, bt: (bt[j], g, 0, 0)),
+            pl.BlockSpec((1, 1, B, C),
+                         lambda g, h, j, bt: (g, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs), lambda g, h, j, bt: (g, h, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, num_subspaces=B, num_centroids=C),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, Hg, nblk * bs), jnp.int32),
+        interpret=interpret,
+    )(block_table, pool_ids, table)

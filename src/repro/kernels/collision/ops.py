@@ -1,29 +1,51 @@
-"""Jitted wrapper: pads to block multiple, batches via vmap, CPU-interprets."""
+"""Jitted wrappers: batch via vmap, interpret-mode autodetect (see
+repro.kernels.resolve_interpret)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import INTERPRET
-from repro.kernels.collision.collision import collision_pallas
+from repro.kernels.collision.collision import (collision_paged_pallas,
+                                               collision_pallas)
 
 
 def collision_scores_kernel(ids: jax.Array, table: jax.Array,
                             block_n: int = 1024) -> jax.Array:
     """Batched collision scores. ids (..., n, B), table (..., B, C) → (..., n).
 
-    Padding rows score against bucket 0 and are sliced off.
+    Tail padding to the block multiple happens inside collision_pallas.
     """
     lead = ids.shape[:-2]
     n, B = ids.shape[-2], ids.shape[-1]
-    pad = (-n) % block_n
-    if pad:
-        ids = jnp.concatenate(
-            [ids, jnp.zeros(lead + (pad, B), ids.dtype)], axis=-2)
-    flat_ids = ids.reshape((-1, n + pad, B))
+    flat_ids = ids.reshape((-1, n, B))
     flat_tbl = jnp.broadcast_to(table, lead + table.shape[-2:]).reshape(
         (-1,) + table.shape[-2:])
-    fn = lambda i, t: collision_pallas(i, t, block_n=block_n,
-                                       interpret=INTERPRET)
+    fn = lambda i, t: collision_pallas(i, t, block_n=block_n)
     out = jax.vmap(fn)(flat_ids, flat_tbl)
-    return out[:, :n].reshape(lead + (n,))
+    return out.reshape(lead + (n,))
+
+
+def collision_scores_paged_kernel(pool_ids: jax.Array,
+                                  block_tables: jax.Array,
+                                  tables: jax.Array, enc_end: jax.Array,
+                                  sink_size: int) -> jax.Array:
+    """Batched block-table-indirect Stage-I scores, masked to the valid
+    retrieval region — the kernel twin of
+    ``core.retrieval.collision_scores_paged``.
+
+    pool_ids:     (num_blocks, G, block_size, B) uint8 (shared pool)
+    block_tables: (b, nblk) int32 (entries < 0 = unallocated → clipped;
+                  their positions are masked by ``enc_end``)
+    tables:       (b, G, Hg, B, C) int32 tier-weight tables
+    enc_end:      (b,) int32 retrieval-region end per row
+    → (b, G, Hg, nblk · block_size) int32 scores, -1 outside
+    [sink_size, enc_end).
+    """
+    nb, _, bs, _ = pool_ids.shape
+    b, nblk = block_tables.shape
+    safe_bt = jnp.clip(block_tables, 0, nb - 1).astype(jnp.int32)
+    fn = lambda bt, t: collision_paged_pallas(bt, pool_ids, t)
+    scores = jax.vmap(fn)(safe_bt, tables)            # (b, G, Hg, n)
+    pos = jnp.arange(nblk * bs)
+    valid = (pos[None] >= sink_size) & (pos[None] < enc_end[:, None])
+    return jnp.where(valid[:, None, None, :], scores, -1)

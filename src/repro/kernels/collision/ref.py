@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the collision kernel."""
+"""Pure-jnp oracles for the collision kernels (contiguous and paged)."""
 import jax.numpy as jnp
 
 
@@ -7,3 +7,19 @@ def collision_scores_ref(ids, table):
     ids = ids.astype(jnp.int32)
     per_sub = jnp.take_along_axis(table, ids.T, axis=-1)  # (B, n)
     return per_sub.sum(0).astype(jnp.int32)
+
+
+def collision_scores_paged_ref(pool_ids, block_table, table):
+    """Oracle for the block-table-indirect kernel: materialize the logical
+    id view, then score it. pool_ids (num_blocks, G, bs, B),
+    block_table (nblk,), table (G, Hg, B, C) → (G, Hg, nblk·bs) int32."""
+    nb, G, bs, B = pool_ids.shape
+    nblk = block_table.shape[0]
+    view = pool_ids[jnp.clip(block_table, 0, nb - 1)]     # (nblk, G, bs, B)
+    view = jnp.moveaxis(view, 1, 0).reshape(G, nblk * bs, B)
+    Hg = table.shape[1]
+    out = []
+    for g in range(G):
+        out.append(jnp.stack([collision_scores_ref(view[g], table[g, h])
+                              for h in range(Hg)]))
+    return jnp.stack(out)

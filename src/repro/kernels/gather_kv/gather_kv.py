@@ -16,15 +16,25 @@ import jax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(idx_ref, rows_ref, out_ref):
     out_ref[...] = rows_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows_pallas(store: jax.Array, idx: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
-    """store (n, d), idx (k,) int32 → (k, d). One DMA per selected row."""
+                       interpret=None) -> jax.Array:
+    """store (n, d), idx (k,) int32 → (k, d). One DMA per selected row.
+
+    Interpret-mode resolves outside the jitted body (env override honored
+    per call, not frozen into the first trace)."""
+    return _gather_rows_pallas(store, idx,
+                               interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows_pallas(store, idx, *, interpret: bool):
     n, d = store.shape
     k = idx.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -45,10 +55,9 @@ def _paged_kernel(idx_ref, bt_ref, rows_ref, out_ref):
     out_ref[...] = rows_ref[0]          # (1, 1, d) block → (1, d) out row
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows_paged_pallas(pool: jax.Array, block_table: jax.Array,
                              idx: jax.Array, *,
-                             interpret: bool = True) -> jax.Array:
+                             interpret=None) -> jax.Array:
     """Block-table-indirect fetch from a paged pool.
 
     pool (num_blocks, block_size, d), block_table (nblk,) int32 mapping a
@@ -58,6 +67,12 @@ def gather_rows_paged_pallas(pool: jax.Array, block_table: jax.Array,
     ``block_table[idx[i] // block_size]`` so each grid step DMAs exactly
     one (1, 1, d) physical row HBM→VMEM — the paged UVA fetch.
     """
+    return _gather_rows_paged_pallas(pool, block_table, idx,
+                                     interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows_paged_pallas(pool, block_table, idx, *, interpret: bool):
     num_blocks, block_size, d = pool.shape
     k = idx.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(

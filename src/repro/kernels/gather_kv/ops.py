@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import INTERPRET
 from repro.kernels.gather_kv.gather_kv import (gather_rows_paged_pallas,
                                                gather_rows_pallas)
 
@@ -19,7 +18,7 @@ def gather_kv_kernel(store: jax.Array, idx: jax.Array) -> jax.Array:
         jnp.int32)
 
     def fn(s, i):
-        return gather_rows_pallas(s, i, interpret=INTERPRET)
+        return gather_rows_pallas(s, i)
 
     out = jax.vmap(fn)(flat_store, flat_idx)
     return out.reshape(lead + (k, d))
@@ -39,7 +38,7 @@ def gather_kv_paged_kernel(pool: jax.Array, block_tables: jax.Array,
         jnp.int32)
 
     def fn(bt, i):
-        return gather_rows_paged_pallas(pool, bt, i, interpret=INTERPRET)
+        return gather_rows_paged_pallas(pool, bt, i)
 
     out = jax.vmap(fn)(flat_bt, flat_idx)
     return out.reshape(lead + (k, d))

@@ -1,2 +1,3 @@
-from repro.kernels.rerank.ops import rerank_kernel  # noqa: F401
+from repro.kernels.rerank.ops import (  # noqa: F401
+    rerank_kernel, rerank_paged_kernel)
 from repro.kernels.rerank import ref  # noqa: F401

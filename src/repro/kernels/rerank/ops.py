@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantizer
-from repro.kernels import INTERPRET
 from repro.kernels.rerank.rerank import rerank_pallas
 
 
@@ -26,5 +25,43 @@ def rerank_kernel(codes: jax.Array, weights: jax.Array, cand_idx: jax.Array,
     g_w = weights[idx]
     out = rerank_pallas(g_codes, g_w, q_sub, q_norm, m=m, bits=bits,
                         levels=tuple(float(x) for x in levels),
-                        block_c=block_c, interpret=INTERPRET)
+                        block_c=block_c)
     return out[:Cn]
+
+
+def rerank_paged_kernel(pool_codes: jax.Array, pool_w: jax.Array,
+                        phys_rows: jax.Array, q_sub: jax.Array,
+                        q_norm: jax.Array, m: int = 8, bits: int = 3,
+                        block_c: int = 512) -> jax.Array:
+    """Paged Stage-II: gather ≤C candidates' codes/weights from the pool by
+    *physical row id* (never the full logical view), then the fused
+    unpack/score kernel.
+
+    pool_codes: (num_blocks, G, block_size, B) uint32 (pool layout)
+    pool_w:     (num_blocks, G, block_size, B) float32
+    phys_rows:  (G, C) int32 flat pool row ids (block · block_size + offset)
+                per kv head — core.retrieval.retrieve_paged_fused addressing
+    q_sub:      (G, B, m) rotated query subspaces; q_norm (G,)
+    → (G, C) float32 RSQ-IP estimates.
+    """
+    _, levels = quantizer.lloyd_max_levels(m, bits)
+    nb, G, bs, B = pool_codes.shape
+    Cn = phys_rows.shape[-1]
+    pad = (-Cn) % block_c
+    idx = phys_rows.astype(jnp.int32)
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros(idx.shape[:-1] + (pad,), jnp.int32)], axis=-1)
+    flat_codes = jnp.moveaxis(pool_codes, 2, 1).reshape(nb * bs, G, B)
+    flat_w = jnp.moveaxis(pool_w, 2, 1).reshape(nb * bs, G, B)
+
+    def one(idx_g, g):
+        g_codes = flat_codes[idx_g, g]                     # (C+pad, B)
+        g_w = flat_w[idx_g, g]
+        return rerank_pallas(g_codes, g_w, q_sub[g], q_norm[g], m=m,
+                             bits=bits,
+                             levels=tuple(float(x) for x in levels),
+                             block_c=block_c)
+
+    out = jnp.stack([one(idx[g], g) for g in range(G)])
+    return out[:, :Cn]

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(codes_ref, w_ref, qsub_ref, out_ref, *, m: int, bits: int,
             levels: tuple, q_norm_static: float):
@@ -54,12 +56,22 @@ def _kernel(codes_ref, w_ref, qsub_ref, out_ref, *, m: int, bits: int,
     out_ref[...] = q_norm_static * acc
 
 
-@functools.partial(jax.jit, static_argnames=("m", "bits", "levels", "block_c",
-                                             "interpret"))
 def rerank_pallas(codes: jax.Array, weights: jax.Array, q_sub: jax.Array,
                   q_norm: jax.Array, *, m: int, bits: int, levels: tuple,
-                  block_c: int = 512, interpret: bool = True) -> jax.Array:
-    """codes/weights (C, B), q_sub (B, m), q_norm scalar → est (C,) f32."""
+                  block_c: int = 512, interpret=None) -> jax.Array:
+    """codes/weights (C, B), q_sub (B, m), q_norm scalar → est (C,) f32.
+
+    Interpret-mode resolves outside the jitted body (env override honored
+    per call, not frozen into the first trace)."""
+    return _rerank_pallas(codes, weights, q_sub, q_norm, m=m, bits=bits,
+                          levels=levels, block_c=block_c,
+                          interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "bits", "levels", "block_c",
+                                             "interpret"))
+def _rerank_pallas(codes, weights, q_sub, q_norm, *, m: int, bits: int,
+                   levels: tuple, block_c: int, interpret: bool):
     Cn, B = codes.shape
     assert Cn % block_c == 0
     grid = (Cn // block_c,)

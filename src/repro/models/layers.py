@@ -337,6 +337,50 @@ def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
               layer_cache.meta_codes, layer_cache.meta_w, pos_b, enc_b)
 
 
+def attn_decode_pariskv_paged_fused(p: dict, x_t: jax.Array,
+                                    pool: C.PagedLayerKVCache,
+                                    hist: jax.Array,
+                                    block_tables: jax.Array,
+                                    regions: C.CacheRegions, spec: AttnSpec,
+                                    pcfg: ParisKVConfig, signs: jax.Array,
+                                    num_candidates: int
+                                    ) -> Tuple[jax.Array,
+                                               C.PagedLayerKVCache]:
+    """Fused paged ParisKV decode — the default paged path (ISSUE 4).
+
+    Token-identical to ``attn_decode_pariskv_paged`` but **never
+    materializes the logical metadata view**: Stage I scores the pool's
+    uint8 centroid ids through the block table against tier weights built
+    from the incrementally maintained bucket histogram ``hist``
+    (b, G, B, 2^m) — cache state, updated at admission/promotion — and
+    Stage II gathers only the ≤C candidates' codes/weights by physical
+    row. ``hist`` is read-only here (appends don't encode metadata); the
+    caller updates it at promotion via ``paged_promote_rows_hist``.
+    """
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
+    pool = C.paged_decode_append(pool, block_tables, k_t, v_t, pos)
+
+    q_grp = q.reshape(b, G, H // G, hd)
+    qt = E.encode_query(q_grp, pcfg, signs)
+    enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
+    res = R.retrieve_paged_fused(pool, block_tables, qt, hist, enc_b, pcfg,
+                                 num_candidates, pcfg.top_k)
+    k_ret = C.gather_heads_physical(pool.k, res.phys_rows)
+    v_ret = C.gather_heads_physical(pool.v, res.phys_rows)
+
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+    out = A.sparse_decode_attention_paged(
+        q, pool.k, pool.v, block_tables, res.indices, ws, pos,
+        regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        k_ret=k_ret, v_ret=v_ret)
+    return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], pool
+
+
 def attn_decode_pariskv_paged(p: dict, x_t: jax.Array,
                               pool: C.PagedLayerKVCache,
                               block_tables: jax.Array,
@@ -344,13 +388,16 @@ def attn_decode_pariskv_paged(p: dict, x_t: jax.Array,
                               pcfg: ParisKVConfig, signs: jax.Array,
                               num_candidates: int
                               ) -> Tuple[jax.Array, C.PagedLayerKVCache]:
-    """ParisKV decode over a paged block pool (vLLM-style block tables).
+    """ParisKV decode over a paged block pool (vLLM-style block tables) —
+    the **meta-view fallback** path (``PagedServingEngine(fused=False)``).
 
     Identical math to ``attn_decode_pariskv`` — the token is appended
     through the block table, two-stage retrieval runs over the logical
     metadata view (candidates come back block-relative), and the three
     attention segments are gathered from the pool — so for the same cache
     contents the outputs are token-identical to the contiguous layout.
+    The default paged path is ``attn_decode_pariskv_paged_fused``, which
+    skips the per-step ``paged_meta_view`` materialization entirely.
     """
     b, _ = x_t.shape
     H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim

@@ -130,7 +130,14 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
     over the stage repeat). Bounded-size state — sliding-window ring
     buffers, SSM recurrent state, media K/V — stays slot-local (batch,
     ...) because it neither fragments nor grows with context. MLA latent
-    caches are not paged yet (ROADMAP)."""
+    caches are not paged yet (ROADMAP).
+
+    Every paged ParisKV layer also carries ``hist``: the slot-local
+    (batch, G, B, 2^m) int32 incremental bucket histogram the fused
+    retrieval path reads instead of recomputing an O(n) scatter-add per
+    step (batch · G · B · 2^m · 4 bytes per layer of extra state). It is
+    maintained even when the engine falls back to the meta-view path, so
+    the flag can toggle freely."""
     pcfg = cfg.pariskv
     dt = _dtype(cfg)
 
@@ -142,6 +149,13 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
         return CC.init_paged_cache(num_blocks, block_size, cfg.num_kv_heads,
                                    cfg.head_dim, pcfg, dt)
 
+    def hist():
+        shape = (batch, cfg.num_kv_heads, pcfg.num_subspaces(cfg.head_dim),
+                 pcfg.num_centroids())
+        if as_spec:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        return jnp.zeros(shape, jnp.int32)
+
     caches = []
     for stage in layer_plan(cfg):
         stage_cache = {}
@@ -151,7 +165,7 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
                     "paged serving does not page MLA latent caches yet")
             entry = _layer_cache_spec(cfg, ld, batch, n_max, as_spec)
             if ld.mixer in ("attn", "hybrid") and ld.use_pariskv:
-                entry = {**entry, "kv": paged_kv()}
+                entry = {**entry, "kv": paged_kv(), "hist": hist()}
             stage_cache[f"l{i}"] = _stack_spec(entry, stage.repeat, as_spec)
         caches.append(stage_cache)
     return caches
@@ -308,14 +322,22 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
 # --------------------------------------------------------------- decode ----
 def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                   signs, num_candidates: int, will_promote, media=None,
-                  dist=None, block_tables=None):
+                  dist=None, block_tables=None, paged_fused: bool = True):
     """One layer of one decode step.
 
     ``regions`` fields and ``will_promote`` are per-row (b,) vectors: each
     row promotes its own block when *its* window fills; the block encode is
     guarded by a single any-row lax.cond so quiet steps stay cheap.
     ``block_tables`` (b, nblk) routes ParisKV layers through the paged
-    block pool (the cache leaf is then a PagedLayerKVCache)."""
+    block pool (the cache leaf is then a PagedLayerKVCache); paged layers
+    take the fused retrieval path (no per-step meta-view gather, Stage-I
+    histogram from the ``hist`` cache entry) unless ``paged_fused`` is
+    False. ``hist`` is maintained at promotion on *both* paged paths, so
+    the flag can flip between runs without invalidating state. (The
+    REPRO_NO_PROMOTE bisection knob skips that maintenance along with the
+    promotion itself — with it set, fused and meta-view scores diverge
+    once enc_end outruns the stale histogram, which is exactly the stale-
+    metadata regime the knob exists to measure.)"""
     pcfg = cfg.pariskv
     b = x_t.shape[0]
     h = L.rms_norm(x_t[:, None], p["norm_attn"], cfg.norm_eps)[:, 0]
@@ -323,21 +345,26 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
     promote_mask = jnp.broadcast_to(jnp.asarray(will_promote), (b,))
 
     def maybe_promote_rows(c):
-        if isinstance(c, CC.PagedLayerKVCache):
-            return jax.lax.cond(
-                jnp.any(promote_mask),
-                lambda cc: CC.paged_promote_rows(
-                    cc, block_tables, regions.enc_end, promote_mask,
-                    pcfg, signs),
-                lambda cc: cc, c)
         return jax.lax.cond(
             jnp.any(promote_mask),
             lambda cc: CC.promote_rows(cc, regions.enc_end, promote_mask,
                                        pcfg, signs),
             lambda cc: cc, c)
 
+    def maybe_promote_paged(c, hist):
+        return jax.lax.cond(
+            jnp.any(promote_mask),
+            lambda ch: CC.paged_promote_rows_hist(
+                ch[0], ch[1], block_tables, regions.enc_end, promote_mask,
+                pcfg, signs),
+            lambda ch: ch, (c, hist))
+
     def pariskv_decode(kv):
         if isinstance(kv, CC.PagedLayerKVCache):
+            if paged_fused:
+                return L.attn_decode_pariskv_paged_fused(
+                    p["attn"], h, kv, cache["hist"], block_tables, regions,
+                    ld.attn, pcfg, signs, num_candidates)
             return L.attn_decode_pariskv_paged(
                 p["attn"], h, kv, block_tables, regions, ld.attn, pcfg,
                 signs, num_candidates)
@@ -345,12 +372,20 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
             p["attn"], h, kv, regions, ld.attn, pcfg, signs,
             num_candidates, dist=dist)
 
+    def promote_and_store(kvc):
+        """Post-attention promotion, paged (kv + hist) or contiguous."""
+        if isinstance(kvc, CC.PagedLayerKVCache):
+            kvc, hist = maybe_promote_paged(kvc, cache["hist"])
+            return {"kv": kvc, "hist": hist}
+        return {"kv": maybe_promote_rows(kvc)}
+
     if ld.mixer == "attn":
         if ld.use_pariskv:
             y, kvc = pariskv_decode(cache["kv"])
             if os.environ.get("REPRO_NO_PROMOTE") != "1":  # cost bisection
-                kvc = maybe_promote_rows(kvc)
-            cache = {**cache, "kv": kvc}
+                cache = {**cache, **promote_and_store(kvc)}
+            else:
+                cache = {**cache, "kv": kvc}
         elif isinstance(cache["kv"], CC.LayerKVCache):
             # baseline full-attention decode over the ParisKV store
             y, kv = L.attn_decode_dense(
@@ -383,10 +418,9 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         cache = {**cache, "ssm": sc}
     elif ld.mixer == "hybrid":
         ya, kvc = pariskv_decode(cache["kv"])
-        kvc = maybe_promote_rows(kvc)
         ys, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
         y = 0.5 * (ya + ys)
-        cache = {**cache, "kv": kvc, "ssm": sc}
+        cache = {**cache, **promote_and_store(kvc), "ssm": sc}
     x_t = x_t + y.astype(x_t.dtype)
     if ld.cross:
         h = L.rms_norm(x_t[:, None], p["norm_cross"], cfg.norm_eps)[:, 0]
@@ -409,7 +443,8 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
                 use_pariskv: bool = True, dist=None, active=None,
-                block_tables=None) -> Tuple[jax.Array, ServeState]:
+                block_tables=None, paged_fused: bool = True
+                ) -> Tuple[jax.Array, ServeState]:
     """One decode step: token (b,) int32 → (logits (b, v), new state).
 
     Rows advance independently (per-row regions). ``active`` (b,) bool
@@ -425,7 +460,9 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
 
     block_tables: (b, nblk) int32 — paged mode (caches built by
     make_paged_caches); ParisKV reads/writes go through the block table
-    and the logical capacity is nblk · block_size per row."""
+    and the logical capacity is nblk · block_size per row.
+    ``paged_fused=False`` falls back to the per-step meta-view gather
+    (token-identical; the fused default skips that materialization)."""
     pcfg = cfg.pariskv
     b = token.shape[0]
     signs = rotation_signs(cfg)
@@ -456,7 +493,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
                 x_t, new_c[f"l{i}"] = _layer_decode(
                     p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
                     regions, signs, num_candidates, will_promote, dist=dist,
-                    block_tables=block_tables)
+                    block_tables=block_tables, paged_fused=paged_fused)
             return x_t, new_c
 
         x_t, filled = jax.lax.scan(body, x_t, (sp, sc))
@@ -508,7 +545,8 @@ def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
 
 def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
                  use_pariskv: bool = True, eos_id: Optional[int] = None,
-                 dist=None, block_tables=None) -> Tuple[jax.Array, SlotState]:
+                 dist=None, block_tables=None, paged_fused: bool = True
+                 ) -> Tuple[jax.Array, SlotState]:
     """Run ``num_steps`` decode steps fully on-device (lax.scan): greedy
     argmax sampling, per-slot active masking, one host sync per chunk.
 
@@ -526,7 +564,8 @@ def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
         logits, new = decode_step(params, cfg, st.cur_tok,
                                   ServeState(st.caches, st.regions),
                                   use_pariskv=use_pariskv, dist=dist,
-                                  active=active, block_tables=block_tables)
+                                  active=active, block_tables=block_tables,
+                                  paged_fused=paged_fused)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         emit = jnp.where(active, nxt, -1)
         rem = st.remaining - active.astype(jnp.int32)
@@ -568,14 +607,17 @@ def _pool_block_size(caches) -> int:
 
 
 def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
-                tok0, rem) -> SlotState:
+                tok0, rem, pcfg=None) -> SlotState:
     """Install a solo (batch=1) prefill result into a paged slot state.
 
     Pool leaves scatter whole blocks to the physical ids in ``phys_blocks``
     (n_max // block_size entries; unallocated → out-of-range sentinel,
     dropped); slot-local leaves (ring/SSM/media) scatter into batch row
-    ``slot`` exactly like the contiguous engine. Jit this with the state
-    donated — it is the paged twin of ServingEngine._admit_impl.
+    ``slot`` exactly like the contiguous engine. ``hist`` entries (absent
+    from the contiguous solo-prefill result) are *computed* here — one
+    amortized histogram over the admitted row's metadata, the base the
+    O(U) promotion updates build on — which needs ``pcfg``. Jit this with
+    the state donated — it is the paged twin of ServingEngine._admit_impl.
     """
     def merge(pool_entry, new_entry):
         if isinstance(pool_entry, CC.PagedLayerKVCache):
@@ -586,8 +628,15 @@ def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
                 big, small, slot, axis=1),
             pool_entry, new_entry)
 
+    def admit_hist(hist_entry, kv1):
+        h1 = CC.bucket_hist_from_meta(kv1.meta_ids, regions1, pcfg)
+        return jax.lax.dynamic_update_slice_in_dim(
+            hist_entry, h1.astype(hist_entry.dtype), slot, axis=1)
+
     caches = [
-        {lname: {key: merge(lcache[key], caches1[si][lname][key])
+        {lname: {key: (admit_hist(lcache[key], caches1[si][lname]["kv"])
+                       if key == "hist"
+                       else merge(lcache[key], caches1[si][lname][key]))
                  for key in lcache}
          for lname, lcache in stage_cache.items()}
         for si, stage_cache in enumerate(state.caches)]

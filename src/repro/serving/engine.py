@@ -38,6 +38,20 @@ reuse. Short requests no longer strand ``n_max``-sized regions, so a
 fixed pool admits far more concurrent mixed-length requests
 (``benchmarks/bench_continuous_batching.py`` measures the ratio).
 
+Paged decoding defaults to the **fused retrieval path** (``fused=True``):
+Stage I scores the pool's centroid ids through the block table against
+tier weights built from an *incrementally maintained* per-slot bucket
+histogram (computed once at admission, O(U)-updated at promotion, zeroed
+at eviction — ``batch × G × B × 2^m`` int32 of extra state per layer),
+and Stage II gathers only the ≤C candidates' codes/weights by physical
+row. The per-step ``paged_meta_view`` materialization (9·B bytes/key,
+every decode step) is gone; ``fused=False`` brings it back — kept for
+A/B and bisection; ``benchmarks/bench_kernels.py`` measures the gap.
+The two are token-identical whenever ``pariskv.hist_sample == 0`` (the
+default): with ``hist_sample > 0`` the meta-view path estimates tier
+boundaries from a key subsample while the fused path's incremental
+histogram is exact, so their candidate sets may differ.
+
 ``WaveServingEngine`` preserves the previous lockstep wave scheduler
 (padded-batch prefill, whole-wave decode) as a baseline for
 ``benchmarks/bench_continuous_batching.py``. Its timing is wave-level by
@@ -260,7 +274,7 @@ class PagedServingEngine:
                  max_batch: int = 8, block_size: int = CC.PAGED_DEFAULT_BLOCK,
                  num_blocks: Optional[int] = None, greedy: bool = True,
                  use_pariskv: bool = True, chunk_size: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, fused: bool = True):
         assert greedy, "sampling is on-device argmax; greedy only for now"
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
@@ -276,15 +290,24 @@ class PagedServingEngine:
                            else num_blocks)
         self.chunk_size = chunk_size
         self.eos_id = eos_id
+        # fused=True (default): Stage-I/II run directly over the pool with
+        # the incremental bucket histogram — no per-step paged_meta_view
+        # copy. fused=False falls back to the materialized-view path
+        # (token-identical at hist_sample=0; kept for A/B and bisection).
+        self.fused = fused
         self._prefill = jax.jit(
             lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
                                              lengths=lens))
         self._chunk = jax.jit(
             lambda p, st, bt: SV.decode_chunk(p, cfg, st, chunk_size,
                                               eos_id=eos_id,
-                                              block_tables=bt),
+                                              block_tables=bt,
+                                              paged_fused=fused),
             donate_argnums=(1,))
-        self._admit_fn = jax.jit(SV.admit_paged, donate_argnums=(0,))
+        self._admit_fn = jax.jit(
+            lambda st, slot, pb, c1, r1, t0, rem: SV.admit_paged(
+                st, slot, pb, c1, r1, t0, rem, pcfg=cfg.pariskv),
+            donate_argnums=(0,))
         self._evict_fn = jax.jit(self._evict_impl, donate_argnums=(0,))
         self.queue: List[Request] = []
         self.peak_concurrency = 0
@@ -307,15 +330,21 @@ class PagedServingEngine:
         return len(self._free) - sum(self._resv.values())
 
     @staticmethod
-    def _evict_impl(state: SV.SlotState, phys_blocks):
+    def _evict_impl(state: SV.SlotState, phys_blocks, slot):
         """Zero a reclaimed slot's pool blocks (hygiene: masks already stop
-        stale reads, but reclaimed blocks shouldn't leak tenant K/V)."""
-        def clear(entry):
+        stale reads, but reclaimed blocks shouldn't leak tenant K/V) and
+        its incremental bucket histogram (so a freed slot's hist is
+        all-zero until the next admission recomputes it)."""
+        def clear(key, entry):
             if isinstance(entry, CC.PagedLayerKVCache):
                 return CC.paged_clear_blocks(entry, phys_blocks)
+            if key == "hist":
+                zero = jnp.zeros_like(entry[:, :1])
+                return jax.lax.dynamic_update_slice_in_dim(
+                    entry, zero, slot, axis=1)
             return entry
         caches = [
-            {ln: {key: clear(lc[key]) for key in lc}
+            {ln: {key: clear(key, lc[key]) for key in lc}
              for ln, lc in stage.items()}
             for stage in state.caches]
         return SV.SlotState(caches, state.regions, state.cur_tok,
@@ -379,7 +408,7 @@ class PagedServingEngine:
 
     def _release(self, state, slot: int):
         """Eviction: zero + reclaim the slot's blocks, clear its table."""
-        state = self._evict_fn(state, self._phys_row(slot))
+        state = self._evict_fn(state, self._phys_row(slot), jnp.int32(slot))
         self._release_host(slot)
         return state
 

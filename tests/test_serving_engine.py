@@ -285,7 +285,8 @@ def test_decode_chunk_eos_mid_chunk_scripted_real_ids(monkeypatch):
          [3838, 1558, 419, 653, 30, 11, 1112, 0]], jnp.int32)
 
     def scripted_decode_step(params, cfg_, token, state, use_pariskv=True,
-                             dist=None, active=None, block_tables=None):
+                             dist=None, active=None, block_tables=None,
+                             paged_fused=True):
         pos = state.regions.pos
         step = jnp.clip(pos - (S - 1), 0, N - 1)
         tok = jnp.take_along_axis(script, step[:, None], axis=1)[:, 0]
