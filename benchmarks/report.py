@@ -61,6 +61,30 @@ def render_bench_trajectory(paths: list) -> None:
                       f"| {f'{cap:.2f}x' if cap is not None else '-'} "
                       f"| {'ok' if par else '✗' if par is not None else '-'} |")
 
+    mode_rows = [(os.path.basename(p), rec)
+                 for _, p, payload in records
+                 for rec in payload.get("results", [])
+                 if rec.get("modes")]
+    if mode_rows:
+        print("\n### Chunked-prefill trajectory (mixed workload: solo vs "
+              "chunked; stalls lower is better)\n")
+        print("| file | benchmark | mode | tok/s | TTFT p50 ms | "
+              "TTFT p99 ms | stall p50 ms | stall p99 ms | "
+              "stall ratio | agreement |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for name, rec in mode_rows:
+            ratio = rec.get("stall_p99_ratio_solo_over_chunked")
+            agree = rec.get("token_agreement_chunked_vs_solo")
+            for mode, m in sorted(rec.get("modes", {}).items()):
+                print(f"| {name} | {rec['benchmark']} | {mode} "
+                      f"| {m.get('tok_per_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('ttft_p50_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('ttft_p99_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('stall_p50_s', float('nan')):.1f} "
+                      f"| {1e3 * m.get('stall_p99_s', float('nan')):.1f} "
+                      f"| {f'{ratio:.2f}x' if ratio is not None else '-'} "
+                      f"| {f'{agree:.2%}' if agree is not None else '-'} |")
+
     path_rows = [(os.path.basename(p), rec)
                  for _, p, payload in records
                  for rec in payload.get("results", [])

@@ -67,7 +67,8 @@ def _smoke_payload(only: str | None) -> dict:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
             if hasattr(mod, "run_smoke"):
-                results.append(mod.run_smoke())
+                rec = mod.run_smoke()
+                results.extend(rec if isinstance(rec, list) else [rec])
         except Exception:
             errors.append(mod_name)
             traceback.print_exc()
@@ -115,9 +116,47 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
         if rec.get("identical_indices") is False:
             failures.append(f"{rec['benchmark']}: fused retrieval index "
                             f"sets diverged from the meta-view path")
+        # chunked-prefill acceptance gate (ISSUE 5), also baseline-free:
+        # the mixed workload must show chunked prefill cutting the solo
+        # path's decode-stall p99 (or TTFT p99) by ≥2× — the whole point
+        # of fusing prefill into the decode chunk.
+        if rec.get("modes"):
+            ratios = {k: rec.get(k) for k in
+                      ("stall_p99_ratio_solo_over_chunked",
+                       "ttft_p99_ratio_solo_over_chunked")}
+            vals = [v for v in ratios.values() if v is not None]
+            if vals and max(vals) < 2.0:
+                failures.append(
+                    f"{rec['benchmark']}: chunked prefill no longer cuts "
+                    f"the solo path's decode stall or TTFT p99 by ≥2× "
+                    f"({ratios})")
         base = base_by_name.get(rec["benchmark"])
         if base is None:
             continue
+        # chunked-prefill tokens/s regress like engines: absolute on the
+        # same host, normalized by the record's own solo mode across hosts
+        modes, base_modes = rec.get("modes", {}), base.get("modes", {})
+        for mode in modes:
+            def mnorm(ms, m):
+                t = ms.get(m, {}).get("tok_per_s")
+                if t is None:
+                    return None
+                if same_host:
+                    return t
+                ref_m = ms.get("slots_solo", {}).get("tok_per_s")
+                return t / ref_m if ref_m else None
+
+            if mode == "slots_solo" and not same_host:
+                continue                  # solo is the normalizer
+            got, ref = mnorm(modes, mode), mnorm(base_modes, mode)
+            if got is None or ref is None:
+                continue
+            floor = (1.0 - tol) * ref
+            if got < floor:
+                unit_m = "tok/s" if same_host else "×slots_solo"
+                failures.append(
+                    f"{rec['benchmark']}/{mode}: {got:.2f} {unit_m} "
+                    f"< {floor:.2f} (baseline {ref:.2f}, tol {tol:.0%})")
         engines = rec.get("engines", {})
         base_engines = base.get("engines", {})
 

@@ -10,6 +10,14 @@ model) prompt, and a continuous-batching engine. Reports TTFT / TPOT and
 verifies the ParisKV outputs track full attention (greedy tokens mostly
 agree when retrieval covers the heavy keys).
 
+``--prefill-budget N`` (both engines) switches admission from blocking
+solo prefill to **chunked prefill fused into the decode loop**: the
+prompt is copied to a device buffer and consumed N tokens per mixed
+prefill+decode step, so running requests keep emitting tokens while a
+long prompt fills (the first token comes out of the scan the step its
+fill completes). 0 (default) keeps the solo path — the two are
+token-identical; attention-only architectures support budgets > 0.
+
 ``--engine paged`` serves from the global block pool instead of
 contiguous per-slot regions. Its two knobs:
 
@@ -61,6 +69,9 @@ def main():
     ap.add_argument("--no-fused", action="store_true",
                     help="paged: fall back to the per-step meta-view "
                          "retrieval instead of the fused pool path")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens consumed per mixed prefill+decode "
+                         "step (0 = blocking solo prefill)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch)
@@ -77,9 +88,11 @@ def main():
             return PagedServingEngine(
                 cfg, params, n_max=1024, max_batch=args.requests,
                 block_size=args.block_size, num_blocks=args.num_blocks,
-                fused=not args.no_fused)
+                fused=not args.no_fused,
+                prefill_budget=args.prefill_budget)
         return ServingEngine(cfg, params, n_max=1024,
-                             max_batch=args.requests, use_pariskv=use_pk)
+                             max_batch=args.requests, use_pariskv=use_pk,
+                             prefill_budget=args.prefill_budget)
 
     prompts = [stream.sequence(args.prompt_len) for _ in range(args.requests)]
     results = {}

@@ -279,6 +279,56 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
     ).reshape(b, H, hd)
 
 
+def chunk_fill_attention(q: jax.Array, k_pref: jax.Array, v_pref: jax.Array,
+                         pref_pos: jax.Array, k_new: jax.Array,
+                         v_new: jax.Array, q_pos: jax.Array,
+                         new_pos: jax.Array, *, sm_scale: float,
+                         softcap: float = 0.0,
+                         sliding_window: int = 0) -> jax.Array:
+    """Prefill-chunk attention for the mixed prefill+decode step: P prompt
+    tokens of one filling slot attend to that slot's already-cached prefix
+    plus the chunk itself under one joint softmax.
+
+    Masking is purely positional, so the prefix may come from any cache
+    layout (contiguous row, ring buffer, paged gather) as long as the
+    caller supplies each prefix key's logical position:
+
+    q:             (b, P, H, hd) — the chunk's queries
+    k_pref/v_pref: (b, n, G, hd) — cached prefix view
+    pref_pos:      (b, n) int32  — logical position per prefix key,
+                   < 0 = invalid (unwritten / stale / evicted-from-ring)
+    k_new/v_new:   (b, P, G, hd) — the chunk's own keys/values
+    q_pos:         (b, P) int32  — query positions
+    new_pos:       (b, P) int32  — chunk key positions, < 0 = invalid
+                   (the final partial chunk's pad tail)
+
+    Chunk-causal: key j (prefix or chunk) is visible to query t iff
+    0 ≤ pos_j ≤ q_pos_t (and within ``sliding_window`` when set). The
+    same key set a solo prefill's causal attention sees — token-identical
+    up to float summation order.
+    """
+    b, P, H, hd = q.shape
+    G = k_pref.shape[2]
+    qg = q.reshape(b, P, G, H // G, hd).astype(jnp.float32)
+
+    def seg(k, v, pos):
+        s = jnp.einsum("bpghd,bngd->bghpn", qg, k.astype(jnp.float32))
+        ok = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[:, :, None])
+        if sliding_window:
+            ok &= (q_pos[:, :, None] - pos[:, None, :]) < sliding_window
+        return jnp.where(ok[:, None, None], s, NEG_INF), v.astype(jnp.float32)
+
+    s_pref, vp = seg(k_pref, v_pref, pref_pos)
+    s_self, vs = seg(k_new, v_new, new_pos)
+    scores = jnp.concatenate([s_pref, s_self], axis=-1) * sm_scale
+    scores = _softcap(scores, softcap)
+    p = jax.nn.softmax(scores, axis=-1)
+    p_pref, p_self = jnp.split(p, [k_pref.shape[1]], axis=-1)
+    out = jnp.einsum("bghpn,bngd->bpghd", p_pref, vp)
+    out += jnp.einsum("bghpt,btgd->bpghd", p_self, vs)
+    return out.reshape(b, P, H, hd)
+
+
 def dense_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                            pos: jax.Array, *, sm_scale: float,
                            softcap: float = 0.0,

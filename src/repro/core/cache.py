@@ -207,6 +207,118 @@ def promote_rows(cache: LayerKVCache, starts: jax.Array, mask: jax.Array,
     )
 
 
+# ----------------------------------------------------------------------
+# Chunked prefill (ISSUE 5): append a prompt chunk into a slot's region
+# ----------------------------------------------------------------------
+#
+# The serving engines no longer have to prefill a prompt in one blocking
+# forward pass: models.serve.decode_chunk can consume ``prefill_budget``
+# prompt tokens per step for one "filling" slot while every other slot
+# decodes. The helpers below are the cache side of that mixed step: they
+# scatter one chunk's K/V (+ metadata) into the filling row — contiguous
+# or through a block table — dropping the final partial chunk's pad tail
+# instead of writing garbage (rings in particular must never hold
+# positions that were not really produced).
+
+
+def fill_enc_end(fill_pos: jax.Array, cfg: ParisKVConfig) -> jax.Array:
+    """Retrieval-region end for a partially filled prompt whose first
+    ``fill_pos`` tokens are written — ``initial_regions``' boundary as a
+    function of fill progress, so a completed fill lands on exactly the
+    regions a solo prefill of the same prompt would produce."""
+    f = jnp.asarray(fill_pos, jnp.int32)
+    return jnp.maximum(jnp.minimum(cfg.sink_size, f), f - cfg.local_size)
+
+
+def fill_chunk_write(cache: LayerKVCache, row: jax.Array, start: jax.Array,
+                     k_chunk: jax.Array, v_chunk: jax.Array,
+                     valid: jax.Array, meta=None) -> LayerKVCache:
+    """Scatter one prompt chunk into batch row ``row`` at positions
+    [start, start+P): k_chunk/v_chunk (P, G, hd), ``valid`` (P,) bool
+    (False → the write is dropped; the final partial chunk's tail),
+    ``meta`` optional KeyMetadata arrays of shape (G, P, B)."""
+    n = cache.k.shape[1]
+    P = k_chunk.shape[0]
+    posn = jnp.where(valid, start + jnp.arange(P), n)    # OOB → dropped
+    rows = jnp.full((P,), row, jnp.int32)
+    out = cache._replace(
+        k=cache.k.at[rows, posn].set(k_chunk.astype(cache.k.dtype),
+                                     mode="drop"),
+        v=cache.v.at[rows, posn].set(v_chunk.astype(cache.v.dtype),
+                                     mode="drop"))
+    if meta is not None:
+        def upd(dst, new):                               # new: (G, P, B)
+            return dst.at[rows, :, posn].set(jnp.moveaxis(new, 0, 1),
+                                             mode="drop")
+        out = out._replace(
+            meta_ids=upd(out.meta_ids, meta.centroid_ids),
+            meta_codes=upd(out.meta_codes, meta.codes),
+            meta_w=upd(out.meta_w, meta.weights))
+    return out
+
+
+def paged_fill_chunk_write(pool: PagedLayerKVCache, bt_row: jax.Array,
+                           start: jax.Array, k_chunk: jax.Array,
+                           v_chunk: jax.Array, valid: jax.Array,
+                           meta=None) -> PagedLayerKVCache:
+    """Paged twin of :func:`fill_chunk_write`: one slot's chunk goes
+    through its block-table row ``bt_row`` (nblk,) — writes into
+    unallocated (< 0) blocks or past the table are dropped."""
+    bs = paged_block_size(pool)
+    nb = paged_num_blocks(pool)
+    nblk = bt_row.shape[0]
+    P = k_chunk.shape[0]
+    lidx = start + jnp.arange(P)
+    blk = lidx // bs
+    off = lidx % bs
+    pb = bt_row[jnp.clip(blk, 0, nblk - 1)]
+    pb = jnp.where(valid & (blk < nblk) & (pb >= 0), pb, nb)  # OOB → drop
+    out = pool._replace(
+        k=pool.k.at[pb, off].set(k_chunk.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[pb, off].set(v_chunk.astype(pool.v.dtype), mode="drop"))
+    if meta is not None:
+        def upd(dst, new):                               # new: (G, P, B)
+            return dst.at[pb, :, off].set(jnp.moveaxis(new, 0, 1),
+                                          mode="drop")
+        out = out._replace(
+            meta_ids=upd(out.meta_ids, meta.centroid_ids),
+            meta_codes=upd(out.meta_codes, meta.codes),
+            meta_w=upd(out.meta_w, meta.weights))
+    return out
+
+
+def paged_fill_hist_update(pool: PagedLayerKVCache, hist_row: jax.Array,
+                           bt_row: jax.Array, f0: jax.Array, f1: jax.Array,
+                           cfg: ParisKVConfig, span: int) -> jax.Array:
+    """Advance the filling slot's incremental bucket histogram for the
+    retrieval-region growth [enc(f0), enc(f1)) caused by moving the fill
+    frontier f0 → f1 (``span`` is a static bound ≥ f1 − f0 ≥ e1 − e0; the
+    region boundary grows at most one position per written token).
+
+    Must run *after* the chunk's metadata is written: the newly counted
+    positions can live in this very chunk. hist_row: (G, B, 2^m) int32 →
+    updated copy. Keeps the fused-path invariant
+    ``hist == histogram(ids, [sink, enc_end))`` true at every mixed step
+    of a fill, not just at its completion."""
+    from repro.core import retrieval as R
+    bs = paged_block_size(pool)
+    nb = paged_num_blocks(pool)
+    nblk = bt_row.shape[0]
+    e0 = fill_enc_end(f0, cfg)
+    e1 = fill_enc_end(f1, cfg)
+    lidx = e0 + jnp.arange(span)
+    blk = lidx // bs
+    pb = bt_row[jnp.clip(blk, 0, nblk - 1)]
+    phys = jnp.clip(pb, 0, nb - 1) * bs + (lidx % bs)
+    G, B = pool.meta_ids.shape[1], pool.meta_ids.shape[-1]
+    flat_ids = jnp.moveaxis(pool.meta_ids, 2, 1).reshape(nb * bs, G, B)
+    new_ids = jnp.moveaxis(flat_ids[phys], 1, 0)         # (G, span, B)
+    inc = ((lidx >= cfg.sink_size) & (lidx < e1) & (blk < nblk)
+           & (pb >= 0))                                  # (span,)
+    return hist_row + R.bucket_histogram(new_ids, inc[None],
+                                         cfg.num_centroids())
+
+
 def promote_trigger(regions: CacheRegions, cfg: ParisKVConfig) -> jax.Array:
     """Per-row bool: True where the Local+Buffer window is full and a block
     must promote. Shape follows ``regions`` (scalar in → scalar out)."""

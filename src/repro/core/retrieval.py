@@ -387,10 +387,35 @@ def _block_relative(idx: jax.Array, block_tables: jax.Array, block_size: int
     return safe_blk, off, safe_blk * block_size + off
 
 
+def _rerank_paged_kernel_batched(pool, phys_rows: jax.Array,
+                                 cand_idx: jax.Array, qt: QueryTransform,
+                                 enc_end: jax.Array,
+                                 cfg: ParisKVConfig) -> jax.Array:
+    """Stage II via the Pallas kernel (kernels.rerank.rerank_paged_kernel),
+    vmapped over batch rows and query heads onto the kernel's per-(G, C)
+    contract; the invalid-candidate mask matches ``rerank_paged``."""
+    from repro.kernels.rerank import rerank_paged_kernel
+
+    def one(phys_g, qsub, qnorm):
+        return rerank_paged_kernel(pool.meta_codes, pool.meta_w, phys_g,
+                                   qsub, qnorm, m=cfg.m,
+                                   bits=cfg.magnitude_bits)
+
+    fn = jax.vmap(jax.vmap(one))                     # leading (b, Hg)
+    est = fn(jnp.moveaxis(phys_rows, 2, 1),          # (b, Hg, G, C)
+             jnp.moveaxis(qt.q_sub, 2, 1),           # (b, Hg, G, B, m)
+             jnp.moveaxis(qt.q_norm, 2, 1))          # (b, Hg, G)
+    est = jnp.moveaxis(est, 1, 2)                    # (b, G, Hg, C)
+    cand_valid = ((cand_idx >= cfg.sink_size)
+                  & (cand_idx < enc_end[:, None, None, None]))
+    return jnp.where(cand_valid, est, NEG_INF)
+
+
 def retrieve_paged_fused(pool, block_tables: jax.Array, qt: QueryTransform,
                          counts: jax.Array, enc_end: jax.Array,
                          cfg: ParisKVConfig, num_candidates: int, top_k: int,
-                         bucket_select: bool = True) -> PagedRetrievalResult:
+                         bucket_select: bool = True,
+                         use_kernels: bool = None) -> PagedRetrievalResult:
     """Fused two-stage retrieval directly over a paged pool — no
     ``paged_meta_view`` materialization anywhere.
 
@@ -403,21 +428,45 @@ def retrieve_paged_fused(pool, block_tables: jax.Array, qt: QueryTransform,
     ``hist_sample == 0`` (the incremental histogram *is* exact, so the
     fused path has no sampled-histogram variant — it gets the exact
     boundaries for free).
+
+    ``use_kernels`` picks the Pallas kernels (``collision_paged_pallas``
+    for Stage I, ``rerank_paged_kernel`` for Stage II) over their pure-jnp
+    twins. Default None → compiled kernels whenever the platform compiles
+    them (TPU) and the twins elsewhere; ``REPRO_PALLAS_INTERPRET=1``
+    forces the twins back even on TPU (kernels.resolve_interpret) — the
+    serving path never silently runs the python kernel emulator.
     """
     bs = pool.meta_ids.shape[2]
     B = pool.meta_ids.shape[-1]
     b = block_tables.shape[0]
     enc_end = jnp.broadcast_to(jnp.asarray(enc_end, jnp.int32), (b,))
-    coarse = collision_scores_paged(pool.meta_ids, block_tables, qt.q_sub,
-                                    counts, enc_end, cfg)
+    if use_kernels is None:
+        from repro.kernels import resolve_interpret
+        use_kernels = not resolve_interpret(None)
+    if use_kernels:
+        from repro.kernels.collision import collision_scores_paged_kernel
+        cs = centroids.centroid_scores(qt.q_sub, cfg.m)
+        n_valid = jnp.maximum(enc_end - cfg.sink_size, 0)
+        table = tier_weight_table(cs, counts[:, :, None],
+                                  n_valid[:, None, None], cfg)
+        coarse = collision_scores_paged_kernel(pool.meta_ids, block_tables,
+                                               table, enc_end,
+                                               cfg.sink_size)
+    else:
+        coarse = collision_scores_paged(pool.meta_ids, block_tables,
+                                        qt.q_sub, counts, enc_end, cfg)
     if bucket_select:
         cand = select_candidates_bucket(coarse, num_candidates,
                                         score_range=max(cfg.tier_weights) * B)
     else:
         cand = select_candidates(coarse, num_candidates)
     _, _, cand_phys = _block_relative(cand, block_tables, bs)
-    est = rerank_paged(pool.meta_codes, pool.meta_w, cand_phys, cand, qt,
-                       enc_end, cfg)
+    if use_kernels:
+        est = _rerank_paged_kernel_batched(pool, cand_phys, cand, qt,
+                                           enc_end, cfg)
+    else:
+        est = rerank_paged(pool.meta_codes, pool.meta_w, cand_phys, cand, qt,
+                           enc_end, cfg)
     top_est, top_pos = jax.lax.top_k(est, top_k)
     top_idx = jnp.take_along_axis(cand, top_pos, axis=-1)
     safe_blk, off, phys_rows = _block_relative(top_idx, block_tables, bs)

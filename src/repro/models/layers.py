@@ -218,6 +218,25 @@ def _decode_qkv(p: dict, x_t: jax.Array, spec: AttnSpec, pos: jax.Array):
     return q[:, 0], k[:, 0], v[:, 0]
 
 
+def attn_fill_chunk(p: dict, x: jax.Array, spec: AttnSpec, q_pos: jax.Array,
+                    k_pref: jax.Array, v_pref: jax.Array,
+                    pref_pos: jax.Array, new_pos: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer of one prefill chunk (mixed prefill+decode step): project
+    the chunk's qkv at its true per-token positions ``q_pos`` (b, P) —
+    rope is per-row, so the chunk shares a batched step with single-token
+    decode rows at entirely different positions — and attend chunk-causally
+    to the cached prefix + the chunk itself. Returns (y, k, v): the caller
+    writes k/v (and ParisKV metadata) into the filling slot's cache."""
+    b, P, _ = x.shape
+    q, k, v = _project_qkv(p, x, spec, q_pos)
+    out = A.chunk_fill_attention(
+        q, k_pref, v_pref, pref_pos, k, v, q_pos, new_pos,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        sliding_window=spec.sliding_window)
+    return out.reshape(b, P, -1) @ p["wo"], k, v
+
+
 def attn_decode_dense(p: dict, x_t: jax.Array, kv: Tuple[jax.Array, jax.Array],
                       pos: jax.Array, spec: AttnSpec
                       ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:

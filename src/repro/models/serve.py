@@ -23,6 +23,16 @@ regions; pad positions beyond a row's length are never attended and are
 overwritten as the row decodes. ``decode_chunk`` scans ``decode_step`` N
 steps on-device (argmax sampling + per-slot active mask) so a serving host
 syncs once per chunk instead of once per token.
+
+With ``prefill_budget > 0`` the chunk scans **mixed prefill+decode
+steps** (ISSUE 5): prompts are not prefilled solo at admission but copied
+to a device buffer (``SlotState.prompt``) and consumed ``prefill_budget``
+tokens per step for the at-most-one *filling* slot
+(``fill_pos < fill_len``), chunk-causally attending to the already-written
+prefix, inside the same stage scans as the decode rows — ending prefill
+head-of-line blocking. The first token is emitted the step a fill
+completes; the solo path survives as ``prefill_budget=0`` and is
+token-identical (tests/test_chunked_prefill.py).
 """
 from __future__ import annotations
 
@@ -441,6 +451,159 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
     return x_t, cache
 
 
+class FillCtx(NamedTuple):
+    """Static-shape description of one prefill chunk of the (single)
+    filling slot inside a mixed prefill+decode step (ISSUE 5).
+
+    slot/start/valid_n are traced scalars: which slot fills, its frontier
+    before the step, and how many of the chunk's P token positions are
+    real prompt tokens (the rest are dropped pad tail)."""
+    slot: jax.Array      # () int32 — the filling slot's batch row
+    start: jax.Array     # () int32 — fill frontier (tokens already written)
+    q_pos: jax.Array     # (1, P) int32 — the chunk's token positions
+    valid: jax.Array     # (1, P) bool — t < valid_n
+    valid_n: jax.Array   # () int32 — real tokens in this chunk
+    bt_row: Any = None   # (nblk,) int32 — paged mode: the slot's table row
+
+
+def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
+                signs):
+    """One layer of one prefill chunk for the filling slot.
+
+    Mirrors ``_layer_prefill``'s math chunk-by-chunk: qkv at the chunk's
+    true positions, chunk-causal attention against the already-written
+    prefix (gathered from whatever layout the cache uses: contiguous row,
+    ring buffer, or block pool), K/V + ParisKV metadata scattered into the
+    filling row, and — on the paged path — the slot's incremental bucket
+    histogram advanced so it stays exact *mid-fill*, not just at
+    completion. Only attention mixers support chunked fill
+    (``fill_supported``); SSM/MLA/cross prompts still prefill solo."""
+    if ld.mixer != "attn":
+        raise NotImplementedError(
+            f"chunked prefill supports attention mixers only, got "
+            f"{ld.mixer!r} (use prefill_budget=0)")
+    pcfg = cfg.pariskv
+    P = fctx.q_pos.shape[1]
+    h = L.rms_norm(x_f, p["norm_attn"], cfg.norm_eps)
+    new_pos = jnp.where(fctx.valid, fctx.q_pos, -1)
+
+    def row1(a):
+        return jax.lax.dynamic_slice_in_dim(a, fctx.slot, 1, axis=0)
+
+    kv = cache["kv"]
+    if isinstance(kv, CC.PagedLayerKVCache):
+        bs = CC.paged_block_size(kv)
+        idx = jnp.arange(fctx.bt_row.shape[0] * bs)[None]
+        k_pref = CC.paged_gather_rows(kv.k, fctx.bt_row[None], idx)
+        v_pref = CC.paged_gather_rows(kv.v, fctx.bt_row[None], idx)
+        pref_pos = jnp.where(idx < fctx.start, idx, -1)
+    elif isinstance(kv, CC.LayerKVCache):
+        k_pref, v_pref = row1(kv.k), row1(kv.v)
+        idx = jnp.arange(k_pref.shape[1])[None]
+        pref_pos = jnp.where(idx < fctx.start, idx, -1)
+    else:                                    # sliding-window ring buffer
+        k_pref, v_pref = row1(kv[0]), row1(kv[1])
+        w = k_pref.shape[1]
+        last = fctx.start - 1
+        p_s = last - (last - jnp.arange(w)) % w  # latest pos < start ≡ s
+        pref_pos = jnp.where(p_s >= 0, p_s, -1)[None]
+
+    y, k_new, v_new = L.attn_fill_chunk(p["attn"], h, ld.attn, fctx.q_pos,
+                                        k_pref, v_pref, pref_pos, new_pos)
+
+    if isinstance(kv, (CC.PagedLayerKVCache, CC.LayerKVCache)):
+        meta = None
+        if ld.use_pariskv:
+            meta = jax.tree.map(lambda a: a[0],
+                                CC._encode_block(k_new, pcfg, signs))
+        if isinstance(kv, CC.PagedLayerKVCache):
+            kvc = CC.paged_fill_chunk_write(
+                kv, fctx.bt_row, fctx.start, k_new[0], v_new[0],
+                fctx.valid[0], meta)
+            cache = {**cache, "kv": kvc}
+            if ld.use_pariskv and "hist" in cache:
+                hrow = CC.paged_fill_hist_update(
+                    kvc, cache["hist"][fctx.slot], fctx.bt_row, fctx.start,
+                    fctx.start + fctx.valid_n, pcfg, P)
+                cache = {**cache, "hist": cache["hist"].at[fctx.slot].set(
+                    hrow.astype(cache["hist"].dtype))}
+        else:
+            cache = {**cache, "kv": CC.fill_chunk_write(
+                kv, fctx.slot, fctx.start, k_new[0], v_new[0],
+                fctx.valid[0], meta)}
+    else:
+        w = kv[0].shape[1]
+        # a chunk can wrap the ring: keep only the last write per slot
+        keep = fctx.valid[0] & (jnp.arange(P) + w >= fctx.valid_n)
+        slot_idx = jnp.where(keep, (fctx.start + jnp.arange(P)) % w, w)
+        rows = jnp.full((P,), fctx.slot, jnp.int32)
+        cache = {**cache, "kv": (
+            kv[0].at[rows, slot_idx].set(k_new[0].astype(kv[0].dtype),
+                                         mode="drop"),
+            kv[1].at[rows, slot_idx].set(v_new[0].astype(kv[1].dtype),
+                                         mode="drop"))}
+
+    x_f = x_f + y.astype(x_f.dtype)
+    if ld.ffn != "none":
+        h = L.rms_norm(x_f, p["norm_mlp"], cfg.norm_eps)
+        if ld.ffn == "moe":
+            y, _ = MOE.moe_fwd(p["moe"], h, cfg.experts_per_token)
+        else:
+            y = L.mlp_fwd(p["mlp"], h)
+        x_f = x_f + y.astype(x_f.dtype)
+    return x_f, cache
+
+
+def fill_supported(cfg: ModelConfig) -> bool:
+    """Whether chunked prefill can serve this architecture: every mixer is
+    plain attention (ParisKV or sliding-window) with no cross sublayer.
+    SSM/hybrid recurrences, MLA latent caches, and media cross-attention
+    still prefill solo (ROADMAP)."""
+    if cfg.family in ("vlm", "audio"):
+        return False
+    for stage in layer_plan(cfg):
+        for ld in stage.layers:
+            if ld.mixer != "attn" or ld.cross:
+                return False
+    return True
+
+
+def _stage_pass(params, cfg: ModelConfig, x_t, caches, regions, signs,
+                num_candidates, will_promote, use_pariskv, dist,
+                block_tables, paged_fused, x_f=None, fctx=None,
+                any_fill=None):
+    """Run one step's layer stack: every stage's repeat-scan advances the
+    decode token for all rows and — when ``x_f`` is given — one prefill
+    chunk for the filling slot under an any-fill ``lax.cond``, inside the
+    *same* scan body, so a mixed step reads each layer's weights once."""
+    new_caches = []
+    for stage, sp, sc in zip(layer_plan(cfg), params["stages"], caches):
+
+        def body(carry, slices):
+            x_t, x_f = carry
+            p_slice, c_slice = slices
+            new_c = {}
+            for i, ld in enumerate(stage.layers):
+                ld_eff = ld if use_pariskv else dataclasses_replace_nopk(ld)
+                x_t, c = _layer_decode(
+                    p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
+                    regions, signs, num_candidates, will_promote, dist=dist,
+                    block_tables=block_tables, paged_fused=paged_fused)
+                if x_f is not None:
+                    x_f, c = jax.lax.cond(
+                        any_fill,
+                        lambda op, p_l=p_slice[f"l{i}"], ld_l=ld_eff:
+                            _layer_fill(p_l, op[0], ld_l, cfg, op[1], fctx,
+                                        signs),
+                        lambda op: op, (x_f, c))
+                new_c[f"l{i}"] = c
+            return (x_t, x_f), new_c
+
+        (x_t, x_f), filled = jax.lax.scan(body, (x_t, x_f), (sp, sc))
+        new_caches.append(filled)
+    return x_t, x_f, new_caches
+
+
 def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
                 use_pariskv: bool = True, dist=None, active=None,
                 block_tables=None, paged_fused: bool = True
@@ -482,22 +645,9 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
         n_max = _cache_n_max(cfg, state.caches)
     num_candidates = pcfg.candidate_count(n_max)
 
-    new_caches = []
-    for stage, sp, sc in zip(layer_plan(cfg), params["stages"], state.caches):
-
-        def body(x_t, slices):
-            p_slice, c_slice = slices
-            new_c = {}
-            for i, ld in enumerate(stage.layers):
-                ld_eff = ld if use_pariskv else dataclasses_replace_nopk(ld)
-                x_t, new_c[f"l{i}"] = _layer_decode(
-                    p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
-                    regions, signs, num_candidates, will_promote, dist=dist,
-                    block_tables=block_tables, paged_fused=paged_fused)
-            return x_t, new_c
-
-        x_t, filled = jax.lax.scan(body, x_t, (sp, sc))
-        new_caches.append(filled)
+    x_t, _, new_caches = _stage_pass(
+        params, cfg, x_t, state.caches, regions, signs, num_candidates,
+        will_promote, use_pariskv, dist, block_tables, paged_fused)
 
     x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
     logits = _unembed(params, cfg, x_t)
@@ -507,6 +657,71 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
     return logits, ServeState(new_caches, new_regions)
 
 
+def decode_fill_step(params, cfg: ModelConfig, token: jax.Array,
+                     state: ServeState, fill_tokens: jax.Array,
+                     fctx: FillCtx, any_fill: jax.Array,
+                     use_pariskv: bool = True, dist=None, active=None,
+                     block_tables=None, paged_fused: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, ServeState]:
+    """One mixed prefill+decode step (ISSUE 5): ``decode_step``'s math for
+    every active row *plus* one ``P``-token prompt chunk for the filling
+    slot, fused into the same stage scans (the fill side is guarded by an
+    any-fill ``lax.cond``, so pure-decode steps pay nothing).
+
+    Returns (decode logits (b, v), fill logits (1, v) — the filling
+    slot's last-valid-token logits, garbage when nothing fills —, state).
+    The caller owns the fill bookkeeping (frontier advance, per-slot
+    regions, first-token emission on completion)."""
+    pcfg = cfg.pariskv
+    b = token.shape[0]
+    signs = rotation_signs(cfg)
+    x_t = _embed(params, cfg, token[:, None])[:, 0]
+    # the fill-side embed only runs when something fills — steady-state
+    # pure-decode steps (all fills complete) skip it along with the
+    # per-layer fill branches and the fill-logits head below
+    emb_sds = jax.eval_shape(lambda t: _embed(params, cfg, t), fill_tokens)
+    x_f = jax.lax.cond(
+        any_fill, lambda t: _embed(params, cfg, t),
+        lambda t: jnp.zeros(emb_sds.shape, emb_sds.dtype), fill_tokens)
+    pos_b = jnp.broadcast_to(jnp.asarray(state.regions.pos, jnp.int32), (b,))
+    enc_b = jnp.broadcast_to(jnp.asarray(state.regions.enc_end, jnp.int32),
+                             (b,))
+    regions = CC.CacheRegions(pos=pos_b, enc_end=enc_b)
+    act = (jnp.ones((b,), bool) if active is None
+           else jnp.broadcast_to(active, (b,)))
+    will_promote = CC.promote_trigger(regions, pcfg) & act
+    if block_tables is not None:
+        assert dist is None, "paged decode + distributed retrieval: TODO"
+        assert use_pariskv, "paged decode serves the ParisKV path only"
+        n_max = block_tables.shape[1] * _pool_block_size(state.caches)
+    else:
+        n_max = _cache_n_max(cfg, state.caches)
+    num_candidates = pcfg.candidate_count(n_max)
+
+    x_t, x_f, new_caches = _stage_pass(
+        params, cfg, x_t, state.caches, regions, signs, num_candidates,
+        will_promote, use_pariskv, dist, block_tables, paged_fused,
+        x_f=x_f, fctx=fctx, any_fill=any_fill)
+
+    x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+    logits = _unembed(params, cfg, x_t)
+
+    def fill_head(xf):
+        x_fn = L.rms_norm(xf, params["final_norm"], cfg.norm_eps)
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x_fn, jnp.maximum(fctx.valid_n - 1, 0), 1, axis=1)[:, 0]
+        return _unembed(params, cfg, x_last)
+
+    fl_sds = jax.eval_shape(fill_head, x_f)
+    fill_logits = jax.lax.cond(
+        any_fill, fill_head,
+        lambda xf: jnp.zeros(fl_sds.shape, fl_sds.dtype), x_f)
+    new_regions = CC.CacheRegions(
+        pos=jnp.where(act, pos_b + 1, pos_b),
+        enc_end=jnp.where(will_promote, enc_b + pcfg.update_interval, enc_b))
+    return logits, fill_logits, ServeState(new_caches, new_regions)
+
+
 # ---------------------------------------------------- chunked decode --------
 class SlotState(NamedTuple):
     """Device-resident state of a slot-based continuous-batching engine.
@@ -514,23 +729,46 @@ class SlotState(NamedTuple):
     caches/regions span ``max_batch`` cache slots; ``cur_tok`` is the last
     emitted token per slot and ``remaining`` the number of tokens each slot
     still has to emit (0 ⇒ slot idle/free).
+
+    The last three fields exist only under chunked prefill
+    (``prefill_budget > 0``; None otherwise): ``prompt`` holds each slot's
+    raw prompt tokens on-device and ``fill_pos``/``fill_len`` track the
+    fill frontier — a slot with ``fill_pos < fill_len`` is *filling*: it
+    consumes ``prefill_budget`` prompt tokens per mixed step instead of
+    decoding, and emits its first token the step its fill completes.
     """
     caches: Any
     regions: CC.CacheRegions
     cur_tok: jax.Array    # (b,) int32
     remaining: jax.Array  # (b,) int32
+    fill_pos: Any = None  # (b,) int32 — prompt tokens already written
+    fill_len: Any = None  # (b,) int32 — total prompt length (0 ⇒ no fill)
+    prompt: Any = None    # (b, n_max + P) int32 — device prompt buffer
 
 
-def init_slot_state(cfg: ModelConfig, batch: int, n_max: int) -> SlotState:
+def _fill_state(batch: int, n_max: int, prefill_budget: int):
+    if prefill_budget <= 0:
+        return dict(fill_pos=None, fill_len=None, prompt=None)
+    return dict(
+        fill_pos=jnp.zeros((batch,), jnp.int32),
+        fill_len=jnp.zeros((batch,), jnp.int32),
+        # width n_max + P so the last chunk's dynamic_slice never clamps
+        prompt=jnp.zeros((batch, n_max + prefill_budget), jnp.int32))
+
+
+def init_slot_state(cfg: ModelConfig, batch: int, n_max: int,
+                    prefill_budget: int = 0) -> SlotState:
     return SlotState(
         caches=make_caches(cfg, batch, n_max),
         regions=regions_spec(batch),
         cur_tok=jnp.zeros((batch,), jnp.int32),
-        remaining=jnp.zeros((batch,), jnp.int32))
+        remaining=jnp.zeros((batch,), jnp.int32),
+        **_fill_state(batch, n_max, prefill_budget))
 
 
 def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
-                          block_size: int, n_max: int) -> SlotState:
+                          block_size: int, n_max: int,
+                          prefill_budget: int = 0) -> SlotState:
     """Slot state over a shared block pool: same per-slot scalar vectors,
     but ParisKV cache leaves are PagedLayerKVCache pools (no batch dim).
     The matching block tables are host-managed (serving engine) and passed
@@ -540,39 +778,108 @@ def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
         caches=make_paged_caches(cfg, batch, num_blocks, block_size, n_max),
         regions=regions_spec(batch),
         cur_tok=jnp.zeros((batch,), jnp.int32),
-        remaining=jnp.zeros((batch,), jnp.int32))
+        remaining=jnp.zeros((batch,), jnp.int32),
+        **_fill_state(batch, n_max, prefill_budget))
 
 
 def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
                  use_pariskv: bool = True, eos_id: Optional[int] = None,
-                 dist=None, block_tables=None, paged_fused: bool = True
-                 ) -> Tuple[jax.Array, SlotState]:
+                 dist=None, block_tables=None, paged_fused: bool = True,
+                 prefill_budget: int = 0) -> Tuple[jax.Array, SlotState]:
     """Run ``num_steps`` decode steps fully on-device (lax.scan): greedy
     argmax sampling, per-slot active masking, one host sync per chunk.
 
     Returns (tokens (b, num_steps) int32 with -1 at inactive steps, state).
-    Valid tokens form a prefix per row: the host recovers each slot's
-    emissions by scanning for the first -1 sentinel (argmax emits only
-    non-negative token ids, so the sentinel is unambiguous).
+    Argmax emits only non-negative ids, so -1 is an unambiguous sentinel;
+    with ``prefill_budget == 0`` the valid tokens form a prefix per row,
+    with chunked prefill a filling slot's row can *lead* with -1s (steps
+    spent filling) before its first token appears.
 
     ``block_tables`` (paged mode) is constant across the chunk — the
     serving engine pre-allocates every block the chunk's appends can
     reach before launching it (lazy allocation at chunk granularity).
-    """
+
+    ``prefill_budget`` > 0 turns the scan into **mixed prefill+decode
+    steps** (ISSUE 5): each step additionally consumes up to that many
+    prompt tokens for the (at most one) slot whose ``fill_pos <
+    fill_len``, writing K/V + metadata through the same caches/tables,
+    and emits the slot's first token the step its fill completes —
+    admitted prompts no longer stall every decoding slot for a full solo
+    prefill. 0 keeps the pure-decode step (the solo-prefill A/B path)."""
+    if prefill_budget <= 0:
+        def step(st, _):
+            active = st.remaining > 0
+            logits, new = decode_step(params, cfg, st.cur_tok,
+                                      ServeState(st.caches, st.regions),
+                                      use_pariskv=use_pariskv, dist=dist,
+                                      active=active,
+                                      block_tables=block_tables,
+                                      paged_fused=paged_fused)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            emit = jnp.where(active, nxt, -1)
+            rem = st.remaining - active.astype(jnp.int32)
+            if eos_id is not None:
+                rem = jnp.where(active & (nxt == eos_id), 0, rem)
+            cur = jnp.where(active, nxt, st.cur_tok)
+            return st._replace(caches=new.caches, regions=new.regions,
+                               cur_tok=cur, remaining=rem), emit
+
+        final, emitted = jax.lax.scan(step, state, None, length=num_steps)
+        return jnp.moveaxis(emitted, 0, 1), final
+
+    P = int(prefill_budget)
+    assert state.prompt is not None, \
+        "prefill_budget > 0 needs a state built with the same budget"
+    pcfg = cfg.pariskv
+
     def step(st, _):
-        active = st.remaining > 0
-        logits, new = decode_step(params, cfg, st.cur_tok,
-                                  ServeState(st.caches, st.regions),
-                                  use_pariskv=use_pariskv, dist=dist,
-                                  active=active, block_tables=block_tables,
-                                  paged_fused=paged_fused)
+        filling = (st.fill_len > 0) & (st.fill_pos < st.fill_len)
+        any_fill = jnp.any(filling)
+        fslot = jnp.argmax(filling).astype(jnp.int32)
+        active = (st.remaining > 0) & ~filling
+        start = st.fill_pos[fslot]
+        flen = st.fill_len[fslot]
+        valid_n = jnp.clip(flen - start, 0, P)
+        q_pos = (start + jnp.arange(P))[None]
+        valid = (jnp.arange(P) < valid_n)[None]
+        fill_toks = jax.lax.dynamic_slice(st.prompt, (fslot, start), (1, P))
+        bt_row = None if block_tables is None else block_tables[fslot]
+        fctx = FillCtx(slot=fslot, start=start, q_pos=q_pos, valid=valid,
+                       valid_n=valid_n, bt_row=bt_row)
+        logits, fill_logits, new = decode_fill_step(
+            params, cfg, st.cur_tok, ServeState(st.caches, st.regions),
+            fill_toks, fctx, any_fill, use_pariskv=use_pariskv, dist=dist,
+            active=active, block_tables=block_tables,
+            paged_fused=paged_fused)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         emit = jnp.where(active, nxt, -1)
         rem = st.remaining - active.astype(jnp.int32)
         if eos_id is not None:
             rem = jnp.where(active & (nxt == eos_id), 0, rem)
         cur = jnp.where(active, nxt, st.cur_tok)
-        return SlotState(new.caches, new.regions, cur, rem), emit
+
+        # --- fill bookkeeping: advance the frontier; on the completing
+        # step the last prompt token's logits emit the first new token
+        f1 = start + valid_n
+        completed = any_fill & (f1 >= flen)
+        ftok = jnp.argmax(fill_logits[0], -1).astype(jnp.int32)
+        fill_pos = jnp.where(any_fill, st.fill_pos.at[fslot].set(f1),
+                             st.fill_pos)
+        pos2 = jnp.where(any_fill, new.regions.pos.at[fslot].set(f1 - 1),
+                         new.regions.pos)
+        enc2 = jnp.where(
+            any_fill,
+            new.regions.enc_end.at[fslot].set(CC.fill_enc_end(f1, pcfg)),
+            new.regions.enc_end)
+        emit = jnp.where(completed, emit.at[fslot].set(ftok), emit)
+        cur = jnp.where(completed, cur.at[fslot].set(ftok), cur)
+        rem_f = rem[fslot] - 1
+        if eos_id is not None:
+            rem_f = jnp.where(ftok == eos_id, 0, rem_f)
+        rem = jnp.where(completed, rem.at[fslot].set(rem_f), rem)
+        return SlotState(new.caches,
+                         CC.CacheRegions(pos=pos2, enc_end=enc2),
+                         cur, rem, fill_pos, st.fill_len, st.prompt), emit
 
     final, emitted = jax.lax.scan(step, state, None, length=num_steps)
     return jnp.moveaxis(emitted, 0, 1), final
@@ -604,6 +911,51 @@ def _pool_block_size(caches) -> int:
             if "kv" in lc and isinstance(lc["kv"], CC.PagedLayerKVCache):
                 return lc["kv"].k.shape[2]
     raise ValueError("no PagedLayerKVCache leaf in caches")
+
+
+def admit_fill(state: SlotState, slot, prompt_row, length, max_new
+               ) -> SlotState:
+    """Admit a request for **chunked prefill**: copy its prompt into the
+    slot's device buffer and arm the fill state — no forward pass happens
+    here; decode_chunk's mixed steps consume the prompt ``prefill_budget``
+    tokens at a time. One compiled shape serves every prompt length, so
+    admission costs one token copy instead of a bucketed prefill compile.
+
+    ``prompt_row`` is the prompt padded to the buffer width. Paged layers'
+    incremental histograms are zeroed (a re-admitted slot starts counting
+    from an empty retrieval region; eviction already zeroes, this keeps
+    the invariant independent of the previous tenant's exit path). Jit
+    with the state donated — the fill twin of ``_admit_impl``."""
+    caches = [
+        {ln: {key: (val.at[:, slot].set(0) if key == "hist" else val)
+              for key, val in lc.items()}
+         for ln, lc in stage_cache.items()}
+        for stage_cache in state.caches]
+    return SlotState(
+        caches=caches,
+        regions=CC.CacheRegions(
+            pos=state.regions.pos.at[slot].set(-1),
+            enc_end=state.regions.enc_end.at[slot].set(0)),
+        cur_tok=state.cur_tok.at[slot].set(0),
+        remaining=state.remaining.at[slot].set(max_new),
+        fill_pos=state.fill_pos.at[slot].set(0),
+        fill_len=state.fill_len.at[slot].set(length),
+        prompt=jax.lax.dynamic_update_slice(
+            state.prompt, prompt_row[None].astype(jnp.int32), (slot, 0)))
+
+
+def cancel_slot(state: SlotState, slot) -> SlotState:
+    """Deactivate ``slot`` on-device (mid-flight — possibly mid-*fill* —
+    eviction): no more decode steps, no more fill chunks. Cache rows are
+    left as-is for the caller (the paged engine zeroes the slot's blocks
+    and histogram through its evict path)."""
+    fill_pos, fill_len = state.fill_pos, state.fill_len
+    if fill_len is not None:
+        fill_pos = fill_pos.at[slot].set(0)
+        fill_len = fill_len.at[slot].set(0)
+    return state._replace(
+        remaining=state.remaining.at[slot].set(0),
+        fill_pos=fill_pos, fill_len=fill_len)
 
 
 def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
@@ -646,4 +998,6 @@ def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
             pos=state.regions.pos.at[slot].set(regions1.pos[0]),
             enc_end=state.regions.enc_end.at[slot].set(regions1.enc_end[0])),
         cur_tok=state.cur_tok.at[slot].set(tok0),
-        remaining=state.remaining.at[slot].set(rem))
+        remaining=state.remaining.at[slot].set(rem),
+        fill_pos=state.fill_pos, fill_len=state.fill_len,
+        prompt=state.prompt)

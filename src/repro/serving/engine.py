@@ -9,21 +9,33 @@ state):
   ``pos`` / ``enc_end`` / ``cur_tok`` / ``remaining`` vectors. Rows are
   fully independent — per-row CacheRegions, per-row sliding-window
   promotion — so slots never run in lockstep.
-* Admission happens at any chunk boundary: a queued request is prefilled
-  solo (batch=1, prompt LEFT-aligned and padded to a power-of-two length
-  bucket to bound compilations) and its cache rows are scattered into a
-  free slot (``dynamic_update_slice`` on every cache leaf). Finished
-  sequences are evicted at chunk boundaries and their slots reused
-  mid-flight — no wave barriers.
+* Admission happens at any chunk boundary. With the default
+  ``prefill_budget=0`` a queued request is prefilled **solo** (batch=1,
+  prompt LEFT-aligned and padded to a power-of-two length bucket to
+  bound compilations) and its cache rows are scattered into a free slot —
+  every decoding slot stalls for that full prompt-length forward pass.
+  With ``prefill_budget=P > 0`` admission merely **copies the prompt to a
+  device buffer** (one compiled shape for every prompt length) and the
+  prompt is prefilled *inside the decode chunk*: each mixed step
+  processes P prompt tokens for the (at most one) filling slot plus one
+  decode token for every active slot, sharing the batched layer pass —
+  Sarathi-style chunked prefill, ending prefill head-of-line blocking.
+  The filling slot emits its first token the step its fill completes.
 * Decoding runs as a **multi-token inner loop**: ``decode_chunk`` scans
   ``chunk_size`` steps on-device (greedy argmax sampling + per-slot active
   mask), so the host syncs once per chunk instead of once per token.
+* ``cancel(uid)`` evicts a request at the next chunk boundary — even
+  mid-fill — reclaiming its slot (and, on the paged engine, its blocks
+  and histogram rows) immediately.
 
 Timing is honest and per-request: ``ttft_s`` is measured from the moment
 the request is admitted (popped from the queue) to its first token being
 ready on the host; ``decode_s`` is the wall time from first token to the
 end of the chunk in which the request finished (chunk-boundary
-granularity, ± chunk_size·TPOT).
+granularity, ± chunk_size·TPOT). ``token_times`` records when each output
+token became host-visible (chunk granularity) — the decode-stall metric
+(max inter-token gap) in ``benchmarks/bench_continuous_batching.py`` is
+computed from it.
 
 ``PagedServingEngine`` replaces the per-slot contiguous ``n_max`` regions
 with a **paged KV cache**: one global pool of fixed-size token blocks
@@ -36,36 +48,41 @@ allocated lazily at chunk boundaries as each slot's appends approach
 them, and eviction reclaims (and zeroes) a slot's blocks for immediate
 reuse. Short requests no longer strand ``n_max``-sized regions, so a
 fixed pool admits far more concurrent mixed-length requests
-(``benchmarks/bench_continuous_batching.py`` measures the ratio).
+(``benchmarks/bench_continuous_batching.py`` measures the ratio). It
+takes the same ``prefill_budget`` knob: chunked fills append K/V and
+metadata through the block table and keep the slot's incremental bucket
+histogram exact at every mixed step.
 
 Paged decoding defaults to the **fused retrieval path** (``fused=True``):
 Stage I scores the pool's centroid ids through the block table against
 tier weights built from an *incrementally maintained* per-slot bucket
-histogram (computed once at admission, O(U)-updated at promotion, zeroed
-at eviction — ``batch × G × B × 2^m`` int32 of extra state per layer),
-and Stage II gathers only the ≤C candidates' codes/weights by physical
-row. The per-step ``paged_meta_view`` materialization (9·B bytes/key,
-every decode step) is gone; ``fused=False`` brings it back — kept for
-A/B and bisection; ``benchmarks/bench_kernels.py`` measures the gap.
-The two are token-identical whenever ``pariskv.hist_sample == 0`` (the
-default): with ``hist_sample > 0`` the meta-view path estimates tier
-boundaries from a key subsample while the fused path's incremental
-histogram is exact, so their candidate sets may differ.
+histogram (computed at admission, O(U)-updated at promotion — and O(P)
+per chunked-fill step — zeroed at eviction; ``batch × G × B × 2^m``
+int32 of extra state per layer), and Stage II gathers only the ≤C
+candidates' codes/weights by physical row. On TPU the fused path runs
+the Pallas kernels (``collision_paged_pallas``, ``rerank_paged_kernel``)
+instead of their jnp twins; ``REPRO_PALLAS_INTERPRET=1`` forces the
+twins back. The per-step ``paged_meta_view`` materialization (9·B
+bytes/key, every decode step) is gone; ``fused=False`` brings it back —
+kept for A/B and bisection; ``benchmarks/bench_kernels.py`` measures the
+gap. The two are token-identical whenever ``pariskv.hist_sample == 0``
+(the default).
 
 ``WaveServingEngine`` preserves the previous lockstep wave scheduler
 (padded-batch prefill, whole-wave decode) as a baseline for
 ``benchmarks/bench_continuous_batching.py``. Its timing is wave-level by
 construction and documented as such.
 
-Deferred (ROADMAP · Open items): async/overlapped prefill (prefill
-currently blocks the decode loop), paged MLA latent caches, and
-non-greedy sampling.
+Deferred (ROADMAP · Open items): chunked prefill for SSM/MLA/cross
+mixers (attention-only architectures today), paged MLA latent caches,
+and non-greedy sampling.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,17 +103,25 @@ class Request:
     output: Optional[np.ndarray] = None
     ttft_s: float = 0.0             # admission → first token (per request)
     decode_s: float = 0.0           # first token → completion (per request)
+    cancelled: bool = False
+    token_times: Optional[list] = None   # host-visibility time per token
     # engine-internal:
     _tokens: Optional[list] = None
+    _t_admit: float = 0.0
     _t_first: float = 0.0
 
 
-def _bucket(n: int, floor: int = 8) -> int:
-    """Smallest power of two ≥ max(n, floor) — bounds prefill recompiles."""
-    b = floor
+def _bucket(n: int, floor: int = 8, cap: Optional[int] = None) -> int:
+    """Smallest power of two ≥ max(n, floor), clamped to ``cap``.
+
+    The clamp applies *before* the doubling loop: an oversized floor (or
+    a cap below the floor) can never make the loop overshoot the cap."""
+    if cap is not None and n >= cap:
+        return cap
+    b = floor if cap is None else min(floor, cap)
     while b < n:
         b *= 2
-    return b
+    return b if cap is None else min(b, cap)
 
 
 def _solo_prefill(prefill_fn, params, req: Request, n_max: int):
@@ -104,7 +129,7 @@ def _solo_prefill(prefill_fn, params, req: Request, n_max: int):
     padded to a power-of-two bucket (capped at n_max: submit() already
     guarantees prompt + gen ≤ n_max). Returns (state1, tok0) — shared by
     the contiguous and paged engines."""
-    s = min(_bucket(len(req.prompt)), n_max)
+    s = _bucket(len(req.prompt), cap=n_max)
     toks = np.zeros((1, s), np.int32)
     toks[0, :len(req.prompt)] = req.prompt
     lens = jnp.asarray([len(req.prompt)], jnp.int32)
@@ -116,15 +141,25 @@ def _solo_prefill(prefill_fn, params, req: Request, n_max: int):
     return state1, tok0
 
 
-def _collect_chunk_row(req: Request, row: np.ndarray) -> int:
+def _collect_chunk_row(req: Request, row: np.ndarray, t_now: float) -> int:
     """Append a slot's valid chunk emissions to the request.
 
-    Valid emissions are the non-negative prefix (-1 marks inactive
-    steps); with eos_id, remaining jumps to 0 so rem_before - rem_after
-    would over-count — the sentinel scan is the reliable source. Returns
-    the number of tokens emitted this chunk."""
-    n_emit = int(np.argmax(row < 0)) if (row < 0).any() else len(row)
-    req._tokens.extend(row[:n_emit].tolist())
+    -1 marks steps the slot did not emit: inactive/finished steps at the
+    *tail* and — under chunked prefill — fill steps at the *head* (the
+    first token appears mid-chunk, the step the fill completes). Valid
+    emissions are therefore the contiguous non-negative run; with eos_id,
+    remaining jumps to 0 so rem_before - rem_after would over-count — the
+    sentinel scan is the reliable source. Stamps each collected token
+    with ``t_now`` (chunk-boundary granularity) for the stall metric.
+    Returns the number of tokens emitted this chunk."""
+    nonneg = np.flatnonzero(row >= 0)
+    if nonneg.size == 0:
+        return 0
+    tail = row[nonneg[0]:]
+    n_emit = int(np.argmax(tail < 0)) if (tail < 0).any() else len(tail)
+    req._tokens.extend(tail[:n_emit].tolist())
+    if req.token_times is not None:
+        req.token_times.extend([t_now] * n_emit)
     return n_emit
 
 
@@ -136,16 +171,32 @@ def _finalize_output(req: Request, eos_id: Optional[int],
     if eos_id is not None and eos_id in out:
         out = out[:int(np.argmax(out == eos_id)) + 1]
     req.output = out
+    if req.token_times is not None:
+        req.token_times = req.token_times[:len(out)]
     req.decode_s = t_now - req._t_first
 
 
 class ServingEngine:
-    """Slot-based continuous-batching engine (see module docstring)."""
+    """Slot-based continuous-batching engine (see module docstring).
+
+    ``prefill_budget=0`` (default): solo blocking prefill at admission.
+    ``prefill_budget=P``: chunked prefill fused into the decode chunk —
+    admission only copies the prompt to the device; the scan consumes P
+    prompt tokens per mixed step. Token-identical to the solo path
+    (tests/test_chunked_prefill.py); attention-mixer architectures only
+    (``models.serve.fill_supported``).
+    """
 
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
                  max_batch: int = 8, greedy: bool = True, use_pariskv=True,
-                 chunk_size: int = 8, eos_id: Optional[int] = None):
+                 chunk_size: int = 8, eos_id: Optional[int] = None,
+                 prefill_budget: int = 0):
         assert greedy, "sampling is on-device argmax; greedy only for now"
+        if prefill_budget and not SV.fill_supported(cfg):
+            raise ValueError(
+                f"chunked prefill (prefill_budget={prefill_budget}) needs an "
+                f"attention-only architecture; {cfg.name} has other mixers — "
+                f"use prefill_budget=0")
         self.cfg = cfg
         self.params = params
         self.n_max = n_max
@@ -153,17 +204,27 @@ class ServingEngine:
         self.use_pariskv = use_pariskv
         self.chunk_size = chunk_size
         self.eos_id = eos_id
+        self.prefill_budget = prefill_budget
         self._prefill = jax.jit(
             lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
                                              lengths=lens))
         self._chunk = jax.jit(
             lambda p, st: SV.decode_chunk(p, cfg, st, chunk_size,
                                           use_pariskv=use_pariskv,
-                                          eos_id=eos_id),
+                                          eos_id=eos_id,
+                                          prefill_budget=prefill_budget),
             donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._admit_fill_fn = jax.jit(SV.admit_fill, donate_argnums=(0,))
+        self._cancel_fn = jax.jit(SV.cancel_slot, donate_argnums=(0,))
         self.queue: List[Request] = []
         self.peak_concurrency = 0   # max slots simultaneously decoding
+        # serving-loop state (start()/step_serve())
+        self._state = None
+        self._slots: List[Optional[Request]] = []
+        self._done: List[Request] = []
+        self._filling: Optional[int] = None   # slot currently chunk-filling
+        self._cancelled: set = set()
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.n_max:
@@ -171,6 +232,11 @@ class ServingEngine:
                 f"request {req.uid}: prompt {len(req.prompt)} + "
                 f"{req.max_new_tokens} new tokens exceeds n_max={self.n_max}")
         self.queue.append(req)
+
+    def cancel(self, uid: int) -> None:
+        """Evict request ``uid`` at the next chunk boundary (queued → drop;
+        in-flight or mid-fill → slot/cache reclaimed, partial output)."""
+        self._cancelled.add(uid)
 
     # ------------------------------------------------------ device helpers --
     @staticmethod
@@ -184,7 +250,7 @@ class ServingEngine:
             lambda big, small: jax.lax.dynamic_update_slice_in_dim(
                 big, small, slot, axis=1),
             state.caches, caches1)
-        return SV.SlotState(
+        return state._replace(
             caches=caches,
             regions=CC.CacheRegions(
                 pos=state.regions.pos.at[slot].set(regions1.pos[0]),
@@ -198,58 +264,178 @@ class ServingEngine:
         return _solo_prefill(self._prefill, self.params, req, self.n_max)
 
     # ------------------------------------------------------------- serving --
+    def _init_state(self) -> SV.SlotState:
+        return SV.init_slot_state(self.cfg, self.max_batch, self.n_max,
+                                  prefill_budget=self.prefill_budget)
+
+    def start(self) -> None:
+        """(Re)initialize the serving loop state; pair with step_serve()."""
+        self._state = self._init_state()
+        self._slots = [None] * self.max_batch
+        self._done = []
+        self._filling = None
+        # uids are per-run: drop cancels left over from a previous run
+        # (a finished uid must not ambush a later request reusing it),
+        # but keep cancel-before-run requests aimed at the current queue
+        self._cancelled &= {r.uid for r in self.queue}
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self._slots)
+
+    # -- loop phases (shared shape with the paged engine) --------------------
+    def _finish_request(self, req: Request, t_now: float) -> None:
+        _finalize_output(req, self.eos_id, t_now)
+        self._done.append(req)
+
+    def _evict_device(self, slot: int) -> None:
+        """Deactivate a slot on-device (cancel path)."""
+        self._state = self._cancel_fn(self._state, jnp.int32(slot))
+
+    def _process_cancellations(self) -> None:
+        if not self._cancelled:
+            return
+        t_now = time.perf_counter()
+        for req in [r for r in self.queue if r.uid in self._cancelled]:
+            self.queue.remove(req)
+            req.cancelled = True
+            req._tokens, req.token_times = [], []
+            req._t_first = req._t_admit = t_now
+            self._finish_request(req, t_now)
+            self._cancelled.discard(req.uid)
+        for slot, req in enumerate(self._slots):
+            if req is None or req.uid not in self._cancelled:
+                continue
+            req.cancelled = True
+            self._evict_device(slot)
+            if not req._t_first:
+                req._t_first = t_now
+            self._finish_request(req, t_now)
+            self._slots[slot] = None
+            if self._filling == slot:
+                self._filling = None
+            self._cancelled.discard(req.uid)
+        # leftovers match nothing in the queue or the slots: the request
+        # already finished (or was never submitted) — a stale uid must not
+        # ambush a later request that happens to reuse it
+        self._cancelled.clear()
+
+    # -- admission hooks (paged engine overrides) ----------------------------
+    def _can_admit(self) -> bool:
+        """Backpressure gate for the request at the head of the queue."""
+        return True
+
+    def _pre_admit(self, slot: int, req: Request) -> None:
+        """Reserve engine resources for an admission (paged: blocks)."""
+
+    def _abort_admit(self, slot: int) -> None:
+        """Undo _pre_admit for a request that finished at prefill."""
+
+    def _install_solo(self, slot: int, req: Request, state1, tok0) -> None:
+        """Scatter a solo-prefill result into the device slot."""
+        self._state = self._admit_fn(
+            self._state, jnp.int32(slot), state1.caches, state1.regions,
+            jnp.int32(tok0), jnp.int32(req.max_new_tokens - 1))
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self._slots[slot] is not None or not self.queue:
+                continue
+            if not self._can_admit():
+                break                        # backpressure: head waits
+            if self.prefill_budget:
+                if self._filling is not None:
+                    break                    # at most one filling slot
+                req = self.queue.pop(0)
+                self._pre_admit(slot, req)
+                self._admit_chunked(slot, req)
+                continue
+            req = self.queue.pop(0)
+            t_admit = time.perf_counter()
+            self._pre_admit(slot, req)
+            state1, tok0 = self._prefill_request(req)
+            t_first = time.perf_counter()
+            req.ttft_s = t_first - t_admit
+            req._t_first = t_first
+            req._tokens = [tok0]
+            req.token_times = [t_first]
+            if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+                req.output = np.asarray(req._tokens, np.int32)
+                req.decode_s = 0.0
+                self._done.append(req)
+                self._abort_admit(slot)
+                continue
+            self._install_solo(slot, req, state1, tok0)
+            self._slots[slot] = req
+
+    def _admit_chunked(self, slot: int, req: Request) -> None:
+        """Chunked-prefill admission: copy the prompt to the device buffer
+        and arm the slot's fill state — the decode chunk does the work."""
+        req._t_admit = time.perf_counter()
+        req._tokens, req.token_times = [], []
+        prow = np.zeros((self.n_max + self.prefill_budget,), np.int32)
+        prow[:len(req.prompt)] = req.prompt
+        self._state = self._admit_fill_fn(
+            self._state, jnp.int32(slot), jnp.asarray(prow),
+            jnp.int32(len(req.prompt)), jnp.int32(req.max_new_tokens))
+        self._slots[slot] = req
+        self._filling = slot
+
+    def _pre_chunk(self) -> None:
+        """Hook: per-chunk device bookkeeping (paged: lazy allocation)."""
+
+    def _run_chunk(self):
+        tokens, self._state = self._chunk(self.params, self._state)
+        return np.asarray(tokens), np.asarray(self._state.remaining)
+
+    def _release_slot(self, slot: int) -> None:
+        """Hook: reclaim a finished slot's resources (paged: blocks)."""
+
+    def _collect(self, tokens: np.ndarray, rem_after: np.ndarray) -> None:
+        t_now = time.perf_counter()
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            had = len(req._tokens)
+            n_emit = _collect_chunk_row(req, tokens[slot], t_now)
+            if had == 0 and n_emit > 0:      # chunked fill completed
+                req.ttft_s = t_now - req._t_admit
+                req._t_first = t_now
+                if self._filling == slot:
+                    self._filling = None
+            self._after_collect(slot, req)
+            if rem_after[slot] <= 0:
+                self._finish_request(req, t_now)
+                self._slots[slot] = None
+                self._release_slot(slot)
+                if self._filling == slot:    # safety: eos on first token
+                    self._filling = None
+
+    def _after_collect(self, slot: int, req: Request) -> None:
+        """Hook: host-side position tracking (paged allocator)."""
+
+    def step_serve(self) -> None:
+        """One serving round: cancellations → admission → one decode chunk
+        (a single host sync) → collection/eviction."""
+        self._process_cancellations()
+        self._admit()
+        self.peak_concurrency = max(
+            self.peak_concurrency,
+            sum(r is not None for r in self._slots))
+        if all(r is None for r in self._slots):
+            return      # everything finished at prefill; maybe more queued
+        self._pre_chunk()
+        tokens, rem_after = self._run_chunk()
+        self._collect(tokens, rem_after)
+
     def run(self) -> List[Request]:
         """Serve everything in the queue; returns completed requests."""
-        done: List[Request] = []
-        state = SV.init_slot_state(self.cfg, self.max_batch, self.n_max)
-        slots: List[Optional[Request]] = [None] * self.max_batch
-
-        while self.queue or any(r is not None for r in slots):
-            # --- admission: fill free slots from the queue -----------------
-            for slot in range(self.max_batch):
-                if slots[slot] is not None or not self.queue:
-                    continue
-                req = self.queue.pop(0)
-                t_admit = time.perf_counter()
-                state1, tok0 = self._prefill_request(req)
-                t_first = time.perf_counter()
-                req.ttft_s = t_first - t_admit
-                req._t_first = t_first
-                req._tokens = [tok0]
-                if req.max_new_tokens <= 1 or tok0 == self.eos_id:
-                    req.output = np.asarray(req._tokens, np.int32)
-                    req.decode_s = 0.0
-                    done.append(req)
-                    continue
-                state = self._admit_fn(
-                    state, jnp.int32(slot), state1.caches, state1.regions,
-                    jnp.int32(tok0), jnp.int32(req.max_new_tokens - 1))
-                slots[slot] = req
-            self.peak_concurrency = max(
-                self.peak_concurrency,
-                sum(r is not None for r in slots))
-            if all(r is None for r in slots):
-                continue    # everything finished at prefill; maybe more queued
-
-            # --- one decode chunk: a single host sync ----------------------
-            tokens, state = self._chunk(self.params, state)
-            tokens = np.asarray(tokens)                  # sync point
-            rem_after = np.asarray(state.remaining)
-            t_now = time.perf_counter()
-
-            # --- collection: evict finished slots for reuse ----------------
-            for slot, req in enumerate(slots):
-                if req is None:
-                    continue
-                _collect_chunk_row(req, tokens[slot])
-                if rem_after[slot] <= 0:
-                    _finalize_output(req, self.eos_id, t_now)
-                    done.append(req)
-                    slots[slot] = None
-        return done
+        self.start()
+        while self.pending():
+            self.step_serve()
+        return self._done
 
 
-class PagedServingEngine:
+class PagedServingEngine(ServingEngine):
     """Continuous batching over a paged KV cache (see module docstring).
 
     Memory knobs:
@@ -260,60 +446,62 @@ class PagedServingEngine:
         engine's footprint; the interesting regime is *smaller* pools
         with *more* slots, where admission is block-bound, not slot-bound.
 
-    Scheduling is the slot engine's (solo bucket prefill, chunked decode,
-    mid-flight eviction) with three paging twists:
+    Scheduling is the slot engine's (solo bucket prefill — or chunked
+    prefill with ``prefill_budget > 0`` — chunked decode, mid-flight
+    eviction) with three paging twists:
       * admission requires ``⌈(prompt+gen)/block_size⌉`` unreserved blocks
         (FIFO honest backpressure — the head of the queue waits rather
         than being skipped);
       * physical blocks are handed to a slot lazily, right before the
-        chunk whose appends will reach them;
-      * eviction returns the slot's blocks to the free list (zeroed).
+        chunk whose appends will reach them (a chunk-filling slot gets
+        its prompt blocks at admission — the fill writes through the
+        block table from the first mixed step);
+      * eviction returns the slot's blocks to the free list (zeroed),
+        along with its incremental-histogram rows — including mid-fill
+        eviction via ``cancel()``.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
                  max_batch: int = 8, block_size: int = CC.PAGED_DEFAULT_BLOCK,
                  num_blocks: Optional[int] = None, greedy: bool = True,
                  use_pariskv: bool = True, chunk_size: int = 8,
-                 eos_id: Optional[int] = None, fused: bool = True):
-        assert greedy, "sampling is on-device argmax; greedy only for now"
+                 eos_id: Optional[int] = None, fused: bool = True,
+                 prefill_budget: int = 0):
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
             raise ValueError(f"n_max={n_max} must be a multiple of "
                              f"block_size={block_size}")
-        self.cfg = cfg
-        self.params = params
-        self.n_max = n_max
-        self.max_batch = max_batch
+        super().__init__(cfg, params, n_max=n_max, max_batch=max_batch,
+                         greedy=greedy, use_pariskv=True,
+                         chunk_size=chunk_size, eos_id=eos_id,
+                         prefill_budget=prefill_budget)
         self.block_size = block_size
         self.nblk = n_max // block_size
         self.num_blocks = (max_batch * self.nblk if num_blocks is None
                            else num_blocks)
-        self.chunk_size = chunk_size
-        self.eos_id = eos_id
         # fused=True (default): Stage-I/II run directly over the pool with
         # the incremental bucket histogram — no per-step paged_meta_view
-        # copy. fused=False falls back to the materialized-view path
-        # (token-identical at hist_sample=0; kept for A/B and bisection).
+        # copy (Pallas kernels on TPU, jnp twins elsewhere /
+        # REPRO_PALLAS_INTERPRET=1). fused=False falls back to the
+        # materialized-view path (token-identical at hist_sample=0; kept
+        # for A/B and bisection).
         self.fused = fused
-        self._prefill = jax.jit(
-            lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
-                                             lengths=lens))
         self._chunk = jax.jit(
             lambda p, st, bt: SV.decode_chunk(p, cfg, st, chunk_size,
                                               eos_id=eos_id,
                                               block_tables=bt,
-                                              paged_fused=fused),
+                                              paged_fused=fused,
+                                              prefill_budget=prefill_budget),
             donate_argnums=(1,))
         self._admit_fn = jax.jit(
             lambda st, slot, pb, c1, r1, t0, rem: SV.admit_paged(
                 st, slot, pb, c1, r1, t0, rem, pcfg=cfg.pariskv),
             donate_argnums=(0,))
         self._evict_fn = jax.jit(self._evict_impl, donate_argnums=(0,))
-        self.queue: List[Request] = []
-        self.peak_concurrency = 0
 
-        # host-side allocator state
-        self._free: List[int] = list(range(self.num_blocks))
+        # host-side allocator state (deque: _take_block pops the head —
+        # O(1), unlike list.pop(0)'s O(n) shuffle)
+        self._free: Deque[int] = collections.deque(range(self.num_blocks))
         self._alloc: Dict[int, List[int]] = {}   # slot → physical blocks
         self._resv: Dict[int, int] = {}          # slot → unallocated reserve
         self._pos: Dict[int, int] = {}           # slot → host view of pos
@@ -347,8 +535,7 @@ class PagedServingEngine:
             {ln: {key: clear(key, lc[key]) for key in lc}
              for ln, lc in stage.items()}
             for stage in state.caches]
-        return SV.SlotState(caches, state.regions, state.cur_tok,
-                            state.remaining)
+        return state._replace(caches=caches)
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.n_max:
@@ -362,7 +549,7 @@ class PagedServingEngine:
         self.queue.append(req)
 
     def _take_block(self, slot: int) -> None:
-        blk = self._free.pop(0)
+        blk = self._free.popleft()
         self._bt[slot, len(self._alloc[slot])] = blk
         self._alloc[slot].append(blk)
         self._resv[slot] -= 1
@@ -385,18 +572,16 @@ class PagedServingEngine:
         phys[row >= 0] = row[row >= 0]
         return jnp.asarray(phys)
 
-    def _reserve_and_prefill(self, slot: int, req: Request):
-        """Reserve the request's worst-case blocks, allocate the prompt's,
-        and run the solo prefill. Returns (state1, tok0) — the device pool
-        is untouched until the caller scatters via _admit_fn."""
-        n_prompt_blocks = -(-len(req.prompt) // self.block_size)
+    def _reserve_blocks(self, slot: int, req: Request) -> None:
+        """Worst-case block reservation + upfront allocation of the
+        prompt's blocks (both admission paths write the whole prompt —
+        solo in one scatter, chunked through the table from step one)."""
         self._alloc[slot] = []
         self._resv[slot] = self.blocks_needed(req)
         self._pos[slot] = len(req.prompt) - 1
         self._need[slot] = len(req.prompt) + req.max_new_tokens
-        for _ in range(n_prompt_blocks):
+        for _ in range(-(-len(req.prompt) // self.block_size)):
             self._take_block(slot)
-        return _solo_prefill(self._prefill, self.params, req, self.n_max)
 
     def _release_host(self, slot: int) -> None:
         """Return the slot's blocks to the free list, clear its table."""
@@ -406,74 +591,57 @@ class PagedServingEngine:
         self._need.pop(slot, None)
         self._bt[slot] = -1
 
-    def _release(self, state, slot: int):
-        """Eviction: zero + reclaim the slot's blocks, clear its table."""
-        state = self._evict_fn(state, self._phys_row(slot), jnp.int32(slot))
+    # ------------------------------------------- loop phases (overrides) ----
+    def _init_state(self) -> SV.SlotState:
+        return SV.init_paged_slot_state(
+            self.cfg, self.max_batch, self.num_blocks, self.block_size,
+            self.n_max, prefill_budget=self.prefill_budget)
+
+    def _evict_device(self, slot: int) -> None:
+        """Cancel path: freeze the slot, zero + reclaim its blocks/hist."""
+        self._state = self._cancel_fn(self._state, jnp.int32(slot))
+        self._state = self._evict_fn(self._state, self._phys_row(slot),
+                                     jnp.int32(slot))
         self._release_host(slot)
-        return state
 
-    # ------------------------------------------------------------- serving --
+    def _can_admit(self) -> bool:
+        return self.blocks_needed(self.queue[0]) <= self.free_blocks
+
+    def _pre_admit(self, slot: int, req: Request) -> None:
+        self._reserve_blocks(slot, req)
+
+    def _abort_admit(self, slot: int) -> None:
+        self._release_host(slot)  # pool untouched: host-only
+
+    def _install_solo(self, slot: int, req: Request, state1, tok0) -> None:
+        self._state = self._admit_fn(
+            self._state, jnp.int32(slot), self._phys_row(slot),
+            state1.caches, state1.regions, jnp.int32(tok0),
+            jnp.int32(req.max_new_tokens - 1))
+
+    def _pre_chunk(self) -> None:
+        for slot, req in enumerate(self._slots):
+            if req is not None:
+                self._ensure_blocks(slot)
+
+    def _run_chunk(self):
+        tokens, self._state = self._chunk(self.params, self._state,
+                                          jnp.asarray(self._bt))
+        return np.asarray(tokens), np.asarray(self._state.remaining)
+
+    def _after_collect(self, slot: int, req: Request) -> None:
+        # host view of the device pos: last prompt token + decoded tokens
+        # (during a fill: still the prompt end — its blocks are allocated)
+        self._pos[slot] = (len(req.prompt) - 1
+                           + max(0, len(req._tokens) - 1))
+
+    def _release_slot(self, slot: int) -> None:
+        self._state = self._evict_fn(self._state, self._phys_row(slot),
+                                     jnp.int32(slot))
+        self._release_host(slot)
+
     def run(self) -> List[Request]:
-        """Serve everything in the queue; returns completed requests."""
-        done: List[Request] = []
-        state = SV.init_paged_slot_state(self.cfg, self.max_batch,
-                                         self.num_blocks, self.block_size,
-                                         self.n_max)
-        slots: List[Optional[Request]] = [None] * self.max_batch
-
-        while self.queue or any(r is not None for r in slots):
-            # --- admission: FIFO, gated on slots AND unreserved blocks ----
-            for slot in range(self.max_batch):
-                if slots[slot] is not None or not self.queue:
-                    continue
-                if self.blocks_needed(self.queue[0]) > self.free_blocks:
-                    break                        # backpressure: pool is full
-                req = self.queue.pop(0)
-                t_admit = time.perf_counter()
-                state1, tok0 = self._reserve_and_prefill(slot, req)
-                t_first = time.perf_counter()
-                req.ttft_s = t_first - t_admit
-                req._t_first = t_first
-                req._tokens = [tok0]
-                if req.max_new_tokens <= 1 or tok0 == self.eos_id:
-                    req.output = np.asarray(req._tokens, np.int32)
-                    req.decode_s = 0.0
-                    done.append(req)
-                    self._release_host(slot)  # pool untouched: host-only
-                    continue
-                state = self._admit_fn(
-                    state, jnp.int32(slot), self._phys_row(slot),
-                    state1.caches, state1.regions, jnp.int32(tok0),
-                    jnp.int32(req.max_new_tokens - 1))
-                slots[slot] = req
-            self.peak_concurrency = max(
-                self.peak_concurrency,
-                sum(r is not None for r in slots))
-            if all(r is None for r in slots):
-                continue    # everything finished at prefill; maybe more queued
-
-            # --- lazy allocation for the appends this chunk can reach ------
-            for slot, req in enumerate(slots):
-                if req is not None:
-                    self._ensure_blocks(slot)
-
-            # --- one decode chunk: a single host sync ----------------------
-            tokens, state = self._chunk(self.params, state,
-                                        jnp.asarray(self._bt))
-            tokens = np.asarray(tokens)                  # sync point
-            rem_after = np.asarray(state.remaining)
-            t_now = time.perf_counter()
-
-            # --- collection: evict finished slots, reclaim their blocks ----
-            for slot, req in enumerate(slots):
-                if req is None:
-                    continue
-                self._pos[slot] += _collect_chunk_row(req, tokens[slot])
-                if rem_after[slot] <= 0:
-                    _finalize_output(req, self.eos_id, t_now)
-                    done.append(req)
-                    slots[slot] = None
-                    state = self._release(state, slot)
+        done = super().run()
         assert len(self._free) == self.num_blocks, \
             "block leak: allocator did not reclaim every block"
         return done
@@ -551,4 +719,6 @@ class WaveServingEngine:
         for i, r in enumerate(wave):
             r.output = outs[i, :r.max_new_tokens]
             r.decode_s = (t2 - t1)
+            r.token_times = [t1 + (j + 1) * (t2 - t1) / max_new
+                             for j in range(len(r.output))]
         return wave
