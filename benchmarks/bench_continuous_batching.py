@@ -33,6 +33,15 @@ step's weight reads — the thing this scan fusion exists for), so the
 gate is the stall/TTFT-p99 *reduction for everyone else*, not raw
 throughput.
 
+Scenario 3 (ISSUE 6): the **tiered host-offloaded pool** under the same
+mixed workload — ``PagedServingEngine(offload=True)`` with a staging
+pool at 25% of the host block pool, against the device-resident paged
+engine at identical geometry. Reported per engine: tokens/s + token
+parity; plus the per-request fetch observability the offloaded engine
+harvests from the device-side counters — staging hits/misses (hit
+rate), fetched K+V bytes, and prefetch-prediction accuracy — surfaced
+request-by-request in the CSV rows and aggregated in the smoke record.
+
 ``run_smoke()`` returns the same numbers machine-readable — the CI
 benchmark job persists them as BENCH_ci.json and fails on >20% tokens/s
 regression vs the committed BENCH_continuous_batching.json baseline (and
@@ -139,9 +148,10 @@ def _measure() -> dict:
 
 def run_smoke() -> list:
     """Machine-readable results for CI regression tracking (BENCH_*.json):
-    the engine-comparison record plus the chunked-vs-solo mixed-workload
-    record (benchmarks.run handles the list)."""
-    return [_smoke_continuous(), run_smoke_mixed()]
+    the engine-comparison record, the chunked-vs-solo mixed-workload
+    record, and the tiered-offload serving record (benchmarks.run
+    handles the list)."""
+    return [_smoke_continuous(), run_smoke_mixed(), run_smoke_offload()]
 
 
 def _smoke_continuous() -> dict:
@@ -159,6 +169,100 @@ def _smoke_continuous() -> dict:
         "capacity_ratio_paged_over_slots":
             m["res"]["paged"]["peak"] / max(m["res"]["slots"]["peak"], 1),
         "token_parity_paged_vs_slots": bool(m["parity"]),
+    }
+
+
+# --------------------------------------------- tiered offloaded pool (ISSUE 6)
+# Offload geometry: small blocks so the staging pool (25% of the host
+# pool) genuinely cycles — the per-slot pin set (sink + local window +
+# append frontier) must fit but the retrieval working set must not.
+OFF_N_MAX = 512
+OFF_BLOCK = 16
+OFF_BATCH = 4
+OFF_BLOCKS = 128                               # 2048-token host pool
+OFF_DEVICE = 32                                # 25% staging
+
+
+def _offload_engines(cfg, params):
+    geom = dict(n_max=OFF_N_MAX, max_batch=OFF_BATCH, block_size=OFF_BLOCK,
+                num_blocks=OFF_BLOCKS, chunk_size=8)
+    return (
+        ("paged_resident", lambda: PagedServingEngine(cfg, params, **geom)),
+        ("paged_offload", lambda: PagedServingEngine(
+            cfg, params, **geom, offload=True,
+            num_device_blocks=OFF_DEVICE)),
+    )
+
+
+def _fetch_stats(done) -> dict:
+    """Aggregate the per-request fetch counters the offloaded engine
+    harvests (zero on the resident engine)."""
+    hits = sum(r.staging_hits for r in done)
+    misses = sum(r.staging_misses for r in done)
+    pf = sum(r.prefetched_blocks for r in done)
+    pf_hits = sum(r.prefetch_hits for r in done)
+    toks = sum(len(r.output) for r in done)
+    fetched = sum(r.fetched_bytes for r in done)
+    return {
+        "staging_hits": hits, "staging_misses": misses,
+        "staging_hit_rate": round(hits / max(hits + misses, 1), 4),
+        "fetched_bytes": fetched,
+        "fetched_bytes_per_token": round(fetched / max(toks, 1), 1),
+        "prefetched_blocks": pf,
+        "prefetch_accuracy": round(pf_hits / max(pf, 1), 4),
+    }
+
+
+def _measure_offload() -> dict:
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = SyntheticLMStream(cfg.vocab_size, seed=4)
+    prompts = [stream.sequence(s) for s, _ in WORKLOAD]
+
+    res = {}
+    for tag, make in _offload_engines(cfg, params):
+        engine = make()
+
+        def once():
+            for i, ((_, gen), p) in enumerate(zip(WORKLOAD, prompts)):
+                engine.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+            t0 = time.perf_counter()
+            done = engine.run()
+            return done, time.perf_counter() - t0
+
+        once()                                  # warmup/compile
+        done, wall = once()
+        toks = sum(len(r.output) for r in done)
+        res[tag] = dict(
+            wall=wall, tok_per_s=toks / wall,
+            fetch=_fetch_stats(done),
+            requests={r.uid: {"hits": r.staging_hits,
+                              "misses": r.staging_misses,
+                              "bytes": r.fetched_bytes,
+                              "prefetched": r.prefetched_blocks,
+                              "prefetch_hits": r.prefetch_hits}
+                      for r in done},
+            outputs={r.uid: np.asarray(r.output) for r in done})
+    parity = all(
+        np.array_equal(res["paged_resident"]["outputs"][uid],
+                       res["paged_offload"]["outputs"][uid])
+        for uid in range(len(WORKLOAD)))
+    return dict(res=res, parity=parity, arch=cfg.name)
+
+
+def run_smoke_offload() -> dict:
+    m = _measure_offload()
+    off = m["res"]["paged_offload"]
+    return {
+        "benchmark": "offload_serving",
+        "arch": m["arch"],
+        "num_blocks": OFF_BLOCKS,
+        "num_device_blocks": OFF_DEVICE,
+        "engines": {
+            tag: {"tok_per_s": round(r["tok_per_s"], 2)}
+            for tag, r in m["res"].items()},
+        "offload": off["fetch"],
+        "token_parity_offload_vs_resident": bool(m["parity"]),
     }
 
 
@@ -291,4 +395,23 @@ def run() -> list:
         "continuous_batching/mixed_stall_reduction", 0.0,
         f"solo_over_chunked={sr:.2f}x;prefill_budget={MIXED_BUDGET};"
         f"token_agreement={mm['agree']:.2%}"))
+
+    mo = _measure_offload()
+    for tag, r in mo["res"].items():
+        rows.append(csv_row(
+            f"continuous_batching/offload_{tag}", r["wall"] * 1e6,
+            f"tok_per_s={r['tok_per_s']:.1f}"))
+    f = mo["res"]["paged_offload"]["fetch"]
+    rows.append(csv_row(
+        "continuous_batching/offload_fetch", 0.0,
+        f"hit_rate={f['staging_hit_rate']:.3f};"
+        f"fetched_bytes_per_token={f['fetched_bytes_per_token']:.0f};"
+        f"prefetch_accuracy={f['prefetch_accuracy']:.3f};"
+        f"token_parity={'ok' if mo['parity'] else 'MISMATCH'}"))
+    for uid, s in sorted(mo["res"]["paged_offload"]["requests"].items()):
+        rows.append(csv_row(
+            f"continuous_batching/offload_req{uid}", 0.0,
+            f"staging_hits={s['hits']};staging_misses={s['misses']};"
+            f"fetched_bytes={s['bytes']};prefetched={s['prefetched']};"
+            f"prefetch_hits={s['prefetch_hits']}"))
     return rows

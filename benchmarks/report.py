@@ -85,6 +85,38 @@ def render_bench_trajectory(paths: list) -> None:
                       f"| {f'{ratio:.2f}x' if ratio is not None else '-'} "
                       f"| {f'{agree:.2%}' if agree is not None else '-'} |")
 
+    off_rows = [(os.path.basename(p), rec)
+                for _, p, payload in records
+                for rec in payload.get("results", [])
+                if rec.get("offload")]
+    if off_rows:
+        print("\n### Tiered-offload trajectory (staging hit-rate higher / "
+              "fetched bytes lower is better)\n")
+        print("| file | benchmark | n / blocks | staging (dev/host) | "
+              "hit rate | fetched bytes | p50 us | prefetch acc | "
+              "parity | admits 256k |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for name, rec in off_rows:
+            o = rec["offload"]
+            par = rec.get("token_parity_offload_vs_resident")
+            adm = rec.get("offload_admits")
+            fb = o.get("fetched_bytes_per_step",
+                       o.get("fetched_bytes_per_token"))
+            fb_unit = ("/step" if "fetched_bytes_per_step" in o
+                       else "/tok")
+            nd = o.get("num_device_blocks",
+                       rec.get("num_device_blocks", "-"))
+            nb = o.get("num_blocks", rec.get("num_blocks", "-"))
+            print(f"| {name} | {rec['benchmark']} "
+                  f"| {o.get('n_logical', '-')} "
+                  f"| {nd}/{nb} "
+                  f"| {o.get('staging_hit_rate', float('nan')):.3f} "
+                  f"| {fb if fb is not None else '-'}{fb_unit} "
+                  f"| {o.get('us_p50', '-')} "
+                  f"| {o.get('prefetch_accuracy', '-')} "
+                  f"| {'ok' if par else '✗' if par is not None else '-'} "
+                  f"| {'ok' if adm else '✗' if adm is not None else '-'} |")
+
     path_rows = [(os.path.basename(p), rec)
                  for _, p, payload in records
                  for rec in payload.get("results", [])

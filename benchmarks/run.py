@@ -44,6 +44,13 @@ MODULES = [
 ]
 
 
+def _selected(mod_name: str, only) -> bool:
+    """--only is a comma-separated list of module-name substrings."""
+    if not only:
+        return True
+    return any(tok and tok in mod_name for tok in only.split(","))
+
+
 def _host_fingerprint() -> str:
     """Identify the machine for baseline comparability. platform.node()
     alone is too generic (every sandboxed checkout reports e.g. 'runsc'),
@@ -62,7 +69,7 @@ def _smoke_payload(only: str | None) -> dict:
     results = []
     errors = []
     for mod_name in MODULES:
-        if only and only not in mod_name:
+        if not _selected(mod_name, only):
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
@@ -107,6 +114,15 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     cancels; the fused path slipping relative to the materialized view it
     replaces still fails). A run whose paths stop agreeing on index sets
     fails unconditionally.
+
+    Records with ``offload`` (the tiered host-offloaded pool, ISSUE 6)
+    carry counter-derived numbers that are deterministic at fixed seeds
+    and machine-independent, so they gate across hosts too: the staging
+    hit-rate may not drop more than ``tol`` and the fetched bytes
+    (per step or per token) may not grow more than ``tol`` vs the
+    baseline. Offloaded-vs-resident token parity and the ≥256k
+    admission flags (``offload_admits`` true / the device-resident pool
+    *not* fitting the same budget) are baseline-free hard gates.
     """
     same_host = baseline.get("host") == payload.get("host")
     base_by_name = {r["benchmark"]: r for r in baseline.get("results", [])}
@@ -130,9 +146,40 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
                     f"{rec['benchmark']}: chunked prefill no longer cuts "
                     f"the solo path's decode stall or TTFT p99 by ≥2× "
                     f"({ratios})")
+        # tiered-offload hard gates (ISSUE 6), baseline-free
+        if rec.get("token_parity_offload_vs_resident") is False:
+            failures.append(f"{rec['benchmark']}: offloaded engine tokens "
+                            f"diverged from the device-resident engine")
+        if rec.get("offload_admits") is False:
+            failures.append(f"{rec['benchmark']}: tiered pool failed to "
+                            f"admit the ≥256k-logical-token context")
+        if rec.get("resident_admits_at_budget") is True:
+            failures.append(
+                f"{rec['benchmark']}: device-resident pool now fits the "
+                f"offload budget — the admission comparison is vacuous "
+                f"(shrink the budget or grow the context)")
         base = base_by_name.get(rec["benchmark"])
         if base is None:
             continue
+        # offload counters: deterministic + machine-independent → gate
+        # across hosts with the same tolerance
+        off, base_off = rec.get("offload"), base.get("offload")
+        if off and base_off:
+            hr, bhr = off.get("staging_hit_rate"), \
+                base_off.get("staging_hit_rate")
+            if hr is not None and bhr is not None and hr < (1 - tol) * bhr:
+                failures.append(
+                    f"{rec['benchmark']}: staging hit-rate {hr:.3f} < "
+                    f"{(1 - tol) * bhr:.3f} (baseline {bhr:.3f}, "
+                    f"tol {tol:.0%})")
+            for key in ("fetched_bytes_per_step", "fetched_bytes_per_token"):
+                fb, bfb = off.get(key), base_off.get(key)
+                if fb is not None and bfb is not None \
+                        and fb > (1 + tol) * bfb:
+                    failures.append(
+                        f"{rec['benchmark']}: {key} {fb:.0f} > "
+                        f"{(1 + tol) * bfb:.0f} (baseline {bfb:.0f}, "
+                        f"tol {tol:.0%})")
         # chunked-prefill tokens/s regress like engines: absolute on the
         # same host, normalized by the record's own solo mode across hosts
         modes, base_modes = rec.get("modes", {}), base.get("modes", {})
@@ -261,7 +308,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = []
     for mod_name in MODULES:
-        if args.only and args.only not in mod_name:
+        if not _selected(mod_name, args.only):
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")

@@ -37,6 +37,20 @@ contiguous per-slot regions. Its two knobs:
   approximate while fused stays exact), so this flag is an A/B knob,
   not a quality trade-off.
 
+``--offload`` (paged only) serves from the **tiered host-offloaded
+pool** (million-token contexts, ISSUE 6): the full K/V block pool moves
+to host memory while the device keeps all retrieval metadata plus a
+staging pool of ``--num-device-blocks`` hot K/V blocks (default: a
+quarter of the pool). Each decode step resolves retrieval winners
+against the residency map — staged blocks are read on-device, the rest
+are fetched from host on demand — so device K/V stays O(staging pool)
+while the logical context is bounded only by host memory. The fetch
+path is correctness-neutral: tokens are bit-identical to the resident
+engine, and ``--no-prefetch`` (or a custom predictor) only shifts
+fetched bytes between the prefetch and the demand path. Per-request
+fetch stats (staging hits/misses, fetched bytes, prefetch accuracy)
+print after the run.
+
 Kernel interpret mode autodetects the platform (compile on TPU,
 interpret elsewhere); override with REPRO_PALLAS_INTERPRET=0|1.
 
@@ -72,6 +86,15 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=0,
                     help="prompt tokens consumed per mixed prefill+decode "
                          "step (0 = blocking solo prefill)")
+    ap.add_argument("--offload", action="store_true",
+                    help="paged: tiered pool — K/V blocks in host memory, "
+                         "device keeps metadata + a staging pool")
+    ap.add_argument("--num-device-blocks", type=int, default=None,
+                    help="offload: staging pool size in blocks (default: "
+                         "num_blocks // 4)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="offload: disable chunk-boundary prefetch (all "
+                         "host reads go through the demand-fetch path)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch)
@@ -85,11 +108,16 @@ def main():
 
     def make_engine(use_pk: bool):
         if args.engine == "paged":
+            kw = {}
+            if args.offload:
+                kw = dict(offload=True,
+                          num_device_blocks=args.num_device_blocks,
+                          prefetch=not args.no_prefetch)
             return PagedServingEngine(
                 cfg, params, n_max=1024, max_batch=args.requests,
                 block_size=args.block_size, num_blocks=args.num_blocks,
                 fused=not args.no_fused,
-                prefill_budget=args.prefill_budget)
+                prefill_budget=args.prefill_budget, **kw)
         return ServingEngine(cfg, params, n_max=1024,
                              max_batch=args.requests, use_pariskv=use_pk,
                              prefill_budget=args.prefill_budget)
@@ -116,6 +144,16 @@ def main():
                      f"  pool {engine.num_blocks}x{engine.block_size}")
         print(f"[{tag}] mean ttft {ttft:.0f}ms  mean tpot "
               f"{tpot:.1f}ms/tok{extra}")
+        if args.offload and args.engine == "paged":
+            hits = sum(r.staging_hits for r in done)
+            miss = sum(r.staging_misses for r in done)
+            pf = sum(r.prefetched_blocks for r in done)
+            pfh = sum(r.prefetch_hits for r in done)
+            print(f"[{tag}] offload: staging {engine.num_device_blocks}/"
+                  f"{engine.num_blocks} blocks  hit-rate "
+                  f"{hits / max(hits + miss, 1):.1%}  fetched "
+                  f"{sum(r.fetched_bytes for r in done)} B  prefetch "
+                  f"{pfh}/{pf} useful")
 
     if "full-attn" in results:
         agree = []

@@ -279,6 +279,38 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
     ).reshape(b, H, hd)
 
 
+def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
+                                   pool_v: jax.Array,
+                                   block_tables: jax.Array,
+                                   dev_map: jax.Array,
+                                   top_idx: jax.Array,
+                                   window_start: jax.Array,
+                                   pos: jax.Array, enc_end: jax.Array, *,
+                                   sink_size: int, window_size: int,
+                                   sm_scale: float, softcap: float = 0.0,
+                                   k_ret: Optional[jax.Array] = None,
+                                   v_ret: Optional[jax.Array] = None
+                                   ) -> jax.Array:
+    """Tiered twin of ``sparse_decode_attention_paged`` (ISSUE 6): the
+    dense sink/window gathers are indirected through the **staging map**
+    instead of the raw pool — ``pool_k``/``pool_v`` are the bounded
+    staging leaves and the host block tables are composed with
+    ``dev_map`` (host block → staging block) before any K/V read. The
+    engine pins sink + window blocks staging-resident, so these gathers
+    always hit; the retrieved segment must arrive pre-fetched via
+    ``k_ret``/``v_ret`` (hit/miss-blended by the caller — winners may
+    live on either tier)."""
+    from repro.core import cache as CC
+
+    assert k_ret is not None and v_ret is not None, \
+        "tiered attention needs the hit/miss-blended retrieved rows"
+    bt_dev = CC.tiered_kv_tables(block_tables, dev_map)
+    return sparse_decode_attention_paged(
+        q, pool_k, pool_v, bt_dev, top_idx, window_start, pos, enc_end,
+        sink_size=sink_size, window_size=window_size, sm_scale=sm_scale,
+        softcap=softcap, k_ret=k_ret, v_ret=v_ret)
+
+
 def chunk_fill_attention(q: jax.Array, k_pref: jax.Array, v_pref: jax.Array,
                          pref_pos: jax.Array, k_new: jax.Array,
                          v_new: jax.Array, q_pos: jax.Array,

@@ -302,7 +302,7 @@ def paged_fill_hist_update(pool: PagedLayerKVCache, hist_row: jax.Array,
     of a fill, not just at its completion."""
     from repro.core import retrieval as R
     bs = paged_block_size(pool)
-    nb = paged_num_blocks(pool)
+    nb = paged_meta_blocks(pool)
     nblk = bt_row.shape[0]
     e0 = fill_enc_end(f0, cfg)
     e1 = fill_enc_end(f1, cfg)
@@ -431,6 +431,14 @@ def paged_num_blocks(pool: PagedLayerKVCache) -> int:
     return pool.k.shape[-4]
 
 
+def paged_meta_blocks(pool: PagedLayerKVCache) -> int:
+    """Block count of the *metadata* tier. Equal to ``paged_num_blocks``
+    for a uniform pool; larger for a tiered pool whose K/V leaves are a
+    bounded staging subset (ISSUE 6) — metadata addressing must always
+    derive its block count and OOB sentinels from the meta leaves."""
+    return pool.meta_ids.shape[-4]
+
+
 def paged_lookup_blocks(block_tables: jax.Array, lidx: jax.Array,
                         block_size: int) -> Tuple[jax.Array, jax.Array]:
     """Per-row block-table lookup: logical positions → (phys_block, offset).
@@ -486,7 +494,7 @@ def paged_meta_view(pool: PagedLayerKVCache, block_tables: jax.Array
     → (meta_ids, meta_codes, meta_w), each (b, G, n_logical, B). Values at
     unallocated positions are arbitrary pool contents; the retrieval valid
     mask (bounded by enc_end) never admits them."""
-    nb = paged_num_blocks(pool)
+    nb = paged_meta_blocks(pool)
     bs = paged_block_size(pool)
     b, nblk = block_tables.shape
     safe = jnp.clip(block_tables, 0, nb - 1)
@@ -544,7 +552,8 @@ def paged_gather_heads(pool_kv: jax.Array, block_tables: jax.Array,
 
 def paged_promote_rows(pool: PagedLayerKVCache, block_tables: jax.Array,
                        starts: jax.Array, mask: jax.Array,
-                       cfg: ParisKVConfig, signs: jax.Array
+                       cfg: ParisKVConfig, signs: jax.Array,
+                       kv_tables: Optional[jax.Array] = None
                        ) -> PagedLayerKVCache:
     """Per-row block promotion through the block table: for each row ``i``
     with ``mask[i]``, encode metadata for the keys at logical positions
@@ -552,14 +561,20 @@ def paged_promote_rows(pool: PagedLayerKVCache, block_tables: jax.Array,
     physical blocks (a promotion span may straddle two blocks).
 
     Rows with ``mask[i] == False`` (and spans through unallocated table
-    entries) are dropped via an out-of-bounds sentinel block id."""
+    entries) are dropped via an out-of-bounds sentinel block id.
+
+    ``kv_tables`` (default: ``block_tables``) addresses the K gather —
+    a tiered pool passes its composed staging tables here while the meta
+    scatter keeps the host tables (the promoted span sits inside the
+    pinned local window, so its blocks are always staging-resident)."""
     U = cfg.update_interval
     b = block_tables.shape[0]
-    nb = paged_num_blocks(pool)
+    nb = paged_meta_blocks(pool)
     bs = paged_block_size(pool)
     starts = _as_batch(starts, b)
     lidx = starts[:, None] + jnp.arange(U)[None]             # (b, U)
-    rows = paged_gather_rows(pool.k, block_tables, lidx)     # (b, U, G, hd)
+    kvt = block_tables if kv_tables is None else kv_tables
+    rows = paged_gather_rows(pool.k, kvt, lidx)              # (b, U, G, hd)
     meta = _encode_block(rows, cfg, signs)                   # (b, G, U, B)
 
     pb, off = paged_lookup_blocks(block_tables, lidx, bs)
@@ -641,7 +656,8 @@ def bucket_hist_from_meta(meta_ids: jax.Array, regions: CacheRegions,
 def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
                             block_tables: jax.Array, starts: jax.Array,
                             mask: jax.Array, cfg: ParisKVConfig,
-                            signs: jax.Array
+                            signs: jax.Array,
+                            kv_tables: Optional[jax.Array] = None
                             ) -> Tuple[PagedLayerKVCache, jax.Array]:
     """``paged_promote_rows`` + exact O(U) histogram maintenance.
 
@@ -658,7 +674,7 @@ def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
     from repro.core import retrieval as R
     U = cfg.update_interval
     b = block_tables.shape[0]
-    nb = paged_num_blocks(pool)
+    nb = paged_meta_blocks(pool)
     bs = paged_block_size(pool)
     nc = cfg.num_centroids()
     starts = _as_batch(starts, b)
@@ -667,7 +683,7 @@ def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
     phys = jnp.clip(pb, 0, nb - 1) * bs + off
 
     new_pool = paged_promote_rows(pool, block_tables, starts, mask, cfg,
-                                  signs)
+                                  signs, kv_tables=kv_tables)
     flat_ids = jnp.moveaxis(new_pool.meta_ids, 2, 1).reshape(
         nb * bs, pool.meta_ids.shape[1], pool.meta_ids.shape[-1])
     new_ids = jnp.moveaxis(flat_ids[phys], 2, 1)             # (b, G, U, B)
@@ -678,7 +694,8 @@ def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
 
 def paged_maybe_promote_hist(pool: PagedLayerKVCache, hist: jax.Array,
                              block_tables: jax.Array, regions: CacheRegions,
-                             cfg: ParisKVConfig, signs: jax.Array
+                             cfg: ParisKVConfig, signs: jax.Array,
+                             kv_tables: Optional[jax.Array] = None
                              ) -> Tuple[PagedLayerKVCache, jax.Array,
                                         CacheRegions]:
     """``paged_maybe_promote`` twin that also maintains the histogram."""
@@ -690,7 +707,8 @@ def paged_maybe_promote_hist(pool: PagedLayerKVCache, hist: jax.Array,
     pool, hist = jax.lax.cond(
         jnp.any(trigger),
         lambda ph: paged_promote_rows_hist(ph[0], ph[1], block_tables,
-                                           enc_end, trigger, cfg, signs),
+                                           enc_end, trigger, cfg, signs,
+                                           kv_tables=kv_tables),
         lambda ph: ph, (pool, hist))
     new_enc = jnp.where(trigger, enc_end + cfg.update_interval, enc_end)
     return pool, hist, CacheRegions(pos=pos, enc_end=new_enc)
@@ -739,3 +757,169 @@ def paged_clear_blocks(pool: PagedLayerKVCache,
                              meta_ids=z(pool.meta_ids),
                              meta_codes=z(pool.meta_codes),
                              meta_w=z(pool.meta_w))
+
+
+# ======================================================================
+# Tiered pool: device metadata + bounded KV staging, host KV (ISSUE 6)
+# ======================================================================
+#
+# The paged pool above must fit entirely in HBM. The tiered layout keeps
+# the *retrieval metadata* (ids + codes + weights — the only thing Stage
+# I/II ever touch, and tiny) fully device-resident, but shrinks the K/V
+# leaves to a bounded **staging pool** of ``num_device_blocks`` hot
+# blocks; the full K/V block pool lives in host memory
+# (serving.offload.HostKVPool). The same ``PagedLayerKVCache`` tuple is
+# reused — a tiered pool is simply one whose K/V leaves have fewer
+# blocks than its meta leaves (``paged_meta_blocks`` > ``paged_num_blocks``).
+#
+# Addressing splits in two:
+#   * metadata reads/writes go through the per-slot **host block tables**
+#     (bt), exactly as before — Stage I/II are unchanged;
+#   * K/V reads/writes go through **composed tables**
+#     ``tiered_kv_tables(bt, dev_map)``: logical block → host block →
+#     staging block, where ``dev_map`` (num_blocks,) int32 is the
+#     device-residency map (-1 = not staged). Non-resident winners are
+#     fetched from the host pool on demand (layers.attn_decode_pariskv_
+#     tiered); everything a step *writes* (sink + local window + fill
+#     frontier) is pinned resident by the engine, so appends, promotion
+#     gathers, and window/sink attention reads always hit staging.
+
+
+def init_tiered_cache(num_blocks: int, num_device_blocks: int,
+                      block_size: int, num_kv_heads: int, head_dim: int,
+                      cfg: ParisKVConfig, dtype=jnp.bfloat16
+                      ) -> PagedLayerKVCache:
+    """Tiered pool: meta leaves sized ``num_blocks``, K/V staging leaves
+    sized ``num_device_blocks``."""
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    return PagedLayerKVCache(
+        k=jnp.zeros((num_device_blocks, block_size, g, head_dim), dtype),
+        v=jnp.zeros((num_device_blocks, block_size, g, head_dim), dtype),
+        meta_ids=jnp.zeros((num_blocks, g, block_size, B), jnp.uint8),
+        meta_codes=jnp.zeros((num_blocks, g, block_size, B), jnp.uint32),
+        meta_w=jnp.zeros((num_blocks, g, block_size, B), jnp.float32),
+    )
+
+
+def tiered_cache_spec(num_blocks: int, num_device_blocks: int,
+                      block_size: int, num_kv_heads: int, head_dim: int,
+                      cfg: ParisKVConfig, dtype=jnp.bfloat16
+                      ) -> PagedLayerKVCache:
+    B = cfg.num_subspaces(head_dim)
+    g = num_kv_heads
+    sds = jax.ShapeDtypeStruct
+    return PagedLayerKVCache(
+        k=sds((num_device_blocks, block_size, g, head_dim), dtype),
+        v=sds((num_device_blocks, block_size, g, head_dim), dtype),
+        meta_ids=sds((num_blocks, g, block_size, B), jnp.uint8),
+        meta_codes=sds((num_blocks, g, block_size, B), jnp.uint32),
+        meta_w=sds((num_blocks, g, block_size, B), jnp.float32),
+    )
+
+
+def tiered_kv_tables(block_tables: jax.Array, dev_map: jax.Array
+                     ) -> jax.Array:
+    """Compose per-slot host block tables with the residency map.
+
+    block_tables (b, nblk) logical → host block (< 0 unallocated);
+    dev_map (num_blocks,) host block → staging block (-1 not staged).
+    → (b, nblk) logical → staging block, where both "unallocated" and
+    "allocated but not staged" come out < 0 (so existing clip/sentinel
+    handling drops writes and masks reads exactly as for unallocated
+    entries)."""
+    nb = dev_map.shape[0]
+    mapped = dev_map[jnp.clip(block_tables, 0, nb - 1)]
+    return jnp.where(block_tables >= 0, mapped, -1)
+
+
+def tiered_scatter_prefill_meta(pool: PagedLayerKVCache,
+                                cache1: LayerKVCache,
+                                phys_blocks: jax.Array) -> PagedLayerKVCache:
+    """Meta-only half of :func:`paged_scatter_prefill` for solo admission
+    into a tiered pool: the prompt's K/V goes to the host tier (engine-
+    side numpy write) and into staging via the residency installer — only
+    the metadata lands here."""
+    bs = paged_block_size(pool)
+    nblk = phys_blocks.shape[0]
+
+    def meta(dst, src):                     # src (R, 1, G, n, B)
+        r, _, g, n, B = src.shape
+        view = jnp.moveaxis(src.reshape(r, g, nblk, bs, B), 1, 2)
+        return dst.at[:, phys_blocks].set(view.astype(dst.dtype),
+                                          mode="drop")
+
+    return pool._replace(
+        meta_ids=meta(pool.meta_ids, cache1.meta_ids),
+        meta_codes=meta(pool.meta_codes, cache1.meta_codes),
+        meta_w=meta(pool.meta_w, cache1.meta_w),
+    )
+
+
+def tiered_fill_chunk_write(pool: PagedLayerKVCache, bt_row: jax.Array,
+                            dev_row: jax.Array, start: jax.Array,
+                            k_chunk: jax.Array, v_chunk: jax.Array,
+                            valid: jax.Array, meta=None
+                            ) -> PagedLayerKVCache:
+    """Tiered twin of :func:`paged_fill_chunk_write`: K/V goes through the
+    composed staging row ``dev_row`` (the fill frontier is pinned
+    resident), metadata through the host row ``bt_row``. Each side drops
+    through its own OOB sentinel sized to its own tier."""
+    bs = paged_block_size(pool)
+    nd = paged_num_blocks(pool)
+    nm = paged_meta_blocks(pool)
+    nblk = bt_row.shape[0]
+    P = k_chunk.shape[0]
+    lidx = start + jnp.arange(P)
+    blk = lidx // bs
+    off = lidx % bs
+    inb = valid & (blk < nblk)
+    safe = jnp.clip(blk, 0, nblk - 1)
+    pb_kv = dev_row[safe]
+    pb_kv = jnp.where(inb & (pb_kv >= 0), pb_kv, nd)         # OOB → drop
+    out = pool._replace(
+        k=pool.k.at[pb_kv, off].set(k_chunk.astype(pool.k.dtype),
+                                    mode="drop"),
+        v=pool.v.at[pb_kv, off].set(v_chunk.astype(pool.v.dtype),
+                                    mode="drop"))
+    if meta is not None:
+        pb_m = bt_row[safe]
+        pb_m = jnp.where(inb & (pb_m >= 0), pb_m, nm)
+
+        def upd(dst, new):                                   # new: (G, P, B)
+            return dst.at[pb_m, :, off].set(jnp.moveaxis(new, 0, 1),
+                                            mode="drop")
+        out = out._replace(
+            meta_ids=upd(out.meta_ids, meta.centroid_ids),
+            meta_codes=upd(out.meta_codes, meta.codes),
+            meta_w=upd(out.meta_w, meta.weights))
+    return out
+
+
+def tiered_stage_blocks(pool: PagedLayerKVCache, stag_blocks: jax.Array,
+                        k_payload: jax.Array, v_payload: jax.Array
+                        ) -> PagedLayerKVCache:
+    """Install host-fetched K/V block payloads into staging slots.
+
+    stag_blocks (n,) staging block ids (out-of-range = pad slot, write
+    dropped); k/v_payload (R, n, block_size, G, hd) — the leading stage-
+    repeat axis matches the stacked pool leaves."""
+    return pool._replace(
+        k=pool.k.at[:, stag_blocks].set(k_payload.astype(pool.k.dtype),
+                                        mode="drop"),
+        v=pool.v.at[:, stag_blocks].set(v_payload.astype(pool.v.dtype),
+                                        mode="drop"))
+
+
+def tiered_clear_blocks(pool: PagedLayerKVCache, meta_blocks: jax.Array,
+                        stag_blocks: jax.Array) -> PagedLayerKVCache:
+    """Eviction hygiene for a tiered pool: zero the slot's *host* blocks
+    on the meta leaves and its *staging* blocks on the K/V leaves (the
+    two id spaces differ, unlike :func:`paged_clear_blocks`)."""
+    def z(a, ids):
+        return a.at[:, ids].set(0, mode="drop")
+    return pool._replace(
+        k=z(pool.k, stag_blocks), v=z(pool.v, stag_blocks),
+        meta_ids=z(pool.meta_ids, meta_blocks),
+        meta_codes=z(pool.meta_codes, meta_blocks),
+        meta_w=z(pool.meta_w, meta_blocks))

@@ -476,6 +476,23 @@ def retrieve_paged_fused(pool, block_tables: jax.Array, qt: QueryTransform,
         cand_indices=cand, coarse_scores=coarse)
 
 
+def tiered_winner_rows(phys_rows: jax.Array, dev_map: jax.Array,
+                       block_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Winner → staging-row translation for a tiered pool (ISSUE 6).
+
+    Stage II's ``phys_rows`` address the *host* block space (they come
+    from the host block tables). The K/V staging pool only holds the
+    blocks in ``dev_map`` (num_blocks,) int32 (host block → staging
+    block, -1 = not staged). → (resident, stag_rows): ``resident``
+    (same shape) marks winners whose block is staged; ``stag_rows``
+    gives their flat staging-pool row (garbage where not resident —
+    callers must route those through the host fetch path instead)."""
+    host_blk = phys_rows // block_size
+    off = phys_rows % block_size
+    stag = dev_map[jnp.clip(host_blk, 0, dev_map.shape[0] - 1)]
+    return stag >= 0, jnp.maximum(stag, 0) * block_size + off
+
+
 def exact_topk(keys: jax.Array, q: jax.Array, valid: jax.Array, top_k: int):
     """Oracle: exact inner-product Top-k over full-precision keys."""
     ip = jnp.einsum("...nd,...d->...n", keys.astype(jnp.float32),

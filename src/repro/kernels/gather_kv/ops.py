@@ -24,6 +24,25 @@ def gather_kv_kernel(store: jax.Array, idx: jax.Array) -> jax.Array:
     return out.reshape(lead + (k, d))
 
 
+def gather_kv_tiered_kernel(staging: jax.Array, block_tables: jax.Array,
+                            dev_map: jax.Array, idx: jax.Array) -> jax.Array:
+    """Staging-map-indirect fetch for the tiered pool (ISSUE 6): the host
+    block tables are composed with ``dev_map`` (num_blocks,) int32 (host
+    block → staging block, -1 = not staged) and the result rides the
+    same scalar-prefetch paged gather — each grid step DMAs one staging
+    row, never touching host-tier blocks. Non-resident/unallocated
+    entries are clipped to staging block 0 (mirroring
+    ``cache.paged_physical_rows``): callers must mask such positions,
+    exactly as the jnp twins do.
+
+    staging (num_device_blocks, block_size, d), block_tables (..., nblk)
+    host tables, idx (..., k) logical positions → (..., k, d)."""
+    nb = dev_map.shape[0]
+    mapped = dev_map[jnp.clip(block_tables, 0, nb - 1)]
+    bt_dev = jnp.where(block_tables >= 0, mapped, -1)
+    return gather_kv_paged_kernel(staging, jnp.maximum(bt_dev, 0), idx)
+
+
 def gather_kv_paged_kernel(pool: jax.Array, block_tables: jax.Array,
                            idx: jax.Array) -> jax.Array:
     """Paged fetch: pool (num_blocks, block_size, d) shared across the

@@ -451,6 +451,93 @@ def attn_decode_pariskv_paged(p: dict, x_t: jax.Array,
     return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], pool
 
 
+def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
+                               pool: C.PagedLayerKVCache, hist: jax.Array,
+                               block_tables: jax.Array, dev_map: jax.Array,
+                               fetch, rep: jax.Array,
+                               regions: C.CacheRegions, spec: AttnSpec,
+                               pcfg: ParisKVConfig, signs: jax.Array,
+                               num_candidates: int, fused: bool = True
+                               ) -> Tuple[jax.Array, C.PagedLayerKVCache,
+                                          dict]:
+    """ParisKV decode over a **tiered** pool (ISSUE 6): metadata and
+    Stage I/II exactly as the paged paths (host block tables), K/V
+    through the staging pool.
+
+    The append and the dense sink/window gathers go through the composed
+    tables ``tiered_kv_tables(bt, dev_map)`` — those blocks are pinned
+    staging-resident by the engine, so they always hit. Stage-II winners
+    are resolved against ``dev_map``: resident rows gather from staging,
+    misses fetch from the host pool via ``fetch.heads`` (a
+    ``pure_callback`` into serving.offload.HostKVPool; ``rep`` is the
+    stage-repeat index selecting the host arrays' leading axis). The
+    hit/miss blend is exact — a winner's K/V is bit-identical whichever
+    tier serves it — so staging policy and prefetch quality affect bytes
+    moved, never tokens.
+
+    → (y, pool, fetch-stat increments {"touched": (num_blocks,) winner
+    references per host block — the prefetch predictor's signal;
+    "rows": (b, 3) [winner rows, staging hits, host fetches]}).
+    """
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
+    bt_dev = C.tiered_kv_tables(block_tables, dev_map)
+    pool = C.paged_decode_append(pool, bt_dev, k_t, v_t, pos)
+
+    bs = C.paged_block_size(pool)
+    q_grp = q.reshape(b, G, H // G, hd)
+    qt = E.encode_query(q_grp, pcfg, signs)
+    enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
+    if fused:
+        res = R.retrieve_paged_fused(pool, block_tables, qt, hist, enc_b,
+                                     pcfg, num_candidates, pcfg.top_k)
+    else:
+        n_log = block_tables.shape[1] * bs
+        ids, codes, w = C.paged_meta_view(pool, block_tables)
+        meta = E.KeyMetadata(ids, codes, w)
+        valid = C.retrieval_valid_mask(n_log, regions, pcfg)
+        if valid.ndim == 1:
+            valid = valid[None]
+        valid = jnp.broadcast_to(valid[:, None, None, :], (b, G, 1, n_log))
+        meta_b = jax.tree.map(lambda a: a[:, :, None], meta)
+        res = R.retrieve_paged(meta_b, qt, valid, pcfg, num_candidates,
+                               pcfg.top_k, block_tables, bs,
+                               hist_sample=pcfg.hist_sample)
+
+    resident, stag_rows = R.tiered_winner_rows(res.phys_rows, dev_map, bs)
+    ret_valid = ((res.indices >= pcfg.sink_size)
+                 & (res.indices < enc_b[:, None, None, None]))
+    hit = ret_valid & resident
+    miss = ret_valid & ~resident
+    k_hit = C.gather_heads_physical(pool.k, stag_rows)
+    v_hit = C.gather_heads_physical(pool.v, stag_rows)
+    miss_rows = jnp.where(miss, res.phys_rows, -1).astype(jnp.int32)
+    k_miss, v_miss = fetch.heads(miss_rows, rep)
+    sel = resident[..., None]
+    k_ret = jnp.where(sel, k_hit, k_miss.astype(k_hit.dtype))
+    v_ret = jnp.where(sel, v_hit, v_miss.astype(v_hit.dtype))
+
+    nb = dev_map.shape[0]
+    host_blk = res.phys_rows // bs
+    touched = jnp.zeros((nb,), jnp.int32).at[
+        jnp.where(ret_valid, host_blk, nb)].add(1, mode="drop")
+    rows = jnp.stack([ret_valid.sum(axis=(1, 2, 3)).astype(jnp.int32),
+                      hit.sum(axis=(1, 2, 3)).astype(jnp.int32),
+                      miss.sum(axis=(1, 2, 3)).astype(jnp.int32)], axis=-1)
+
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+    out = A.sparse_decode_attention_tiered(
+        q, pool.k, pool.v, block_tables, dev_map, res.indices, ws, pos,
+        regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        k_ret=k_ret, v_ret=v_ret)
+    y = out.reshape(b, -1).astype(x_t.dtype) @ p["wo"]
+    return y, pool, {"touched": touched, "rows": rows}
+
+
 def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,
                         regions: C.CacheRegions, spec: AttnSpec,
                         pcfg: ParisKVConfig, signs: jax.Array,

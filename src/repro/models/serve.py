@@ -133,25 +133,62 @@ def make_caches(cfg: ModelConfig, batch: int, n_max: int,
     return caches
 
 
+class UnsupportedPagedConfig(NotImplementedError):
+    """A config whose cache structure the paged/offloaded pool cannot
+    serve. Carries the config name and the offending (stage, layer,
+    mixer) so callers and logs can point at the exact config key rather
+    than a bare "not implemented"."""
+
+    def __init__(self, cfg: ModelConfig, stage: int, layer: int,
+                 mixer: str, hint: str):
+        self.config_name = getattr(cfg, "name", cfg.family)
+        self.stage = stage
+        self.layer = layer
+        self.mixer = mixer
+        super().__init__(
+            f"config {self.config_name!r}: stage {stage} layer {layer} "
+            f"uses mixer={mixer!r}, which the paged block pool does not "
+            f"serve — {hint}")
+
+
 def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
-                      block_size: int, n_max: int, as_spec: bool = False):
+                      block_size: int, n_max: int, as_spec: bool = False,
+                      num_device_blocks: Optional[int] = None):
     """Build the decode cache with ParisKV KV stores replaced by a shared
     block pool (one PagedLayerKVCache per attn/hybrid-attn layer, stacked
     over the stage repeat). Bounded-size state — sliding-window ring
     buffers, SSM recurrent state, media K/V — stays slot-local (batch,
     ...) because it neither fragments nor grows with context. MLA latent
-    caches are not paged yet (ROADMAP).
+    caches are not paged yet (ROADMAP; raises UnsupportedPagedConfig).
 
     Every paged ParisKV layer also carries ``hist``: the slot-local
     (batch, G, B, 2^m) int32 incremental bucket histogram the fused
     retrieval path reads instead of recomputing an O(n) scatter-add per
     step (batch · G · B · 2^m · 4 bytes per layer of extra state). It is
     maintained even when the engine falls back to the meta-view path, so
-    the flag can toggle freely."""
+    the flag can toggle freely.
+
+    ``num_device_blocks`` (ISSUE 6) switches the pool to the **tiered**
+    layout: metadata leaves keep all ``num_blocks`` blocks on device but
+    the K/V leaves shrink to a ``num_device_blocks``-block staging pool
+    (the full K/V pool lives host-side, serving.offload.HostKVPool).
+    Tiered ParisKV layers additionally carry ``fetch`` stats leaves —
+    ``touched`` (num_blocks,) winner references per host block (the
+    prefetch predictor's input) and ``rows`` (batch, 4) int32
+    [winner rows, staging hits, host fetches, fill-prefix fetches] —
+    zeroed at each decode_chunk entry and read back by the engine."""
     pcfg = cfg.pariskv
     dt = _dtype(cfg)
 
     def paged_kv():
+        if num_device_blocks is not None:
+            if as_spec:
+                return CC.tiered_cache_spec(num_blocks, num_device_blocks,
+                                            block_size, cfg.num_kv_heads,
+                                            cfg.head_dim, pcfg, dt)
+            return CC.init_tiered_cache(num_blocks, num_device_blocks,
+                                        block_size, cfg.num_kv_heads,
+                                        cfg.head_dim, pcfg, dt)
         if as_spec:
             return CC.paged_cache_spec(num_blocks, block_size,
                                        cfg.num_kv_heads, cfg.head_dim,
@@ -166,16 +203,28 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
             return jax.ShapeDtypeStruct(shape, jnp.int32)
         return jnp.zeros(shape, jnp.int32)
 
+    def fetch_stats():
+        shapes = {"touched": (num_blocks,), "rows": (batch, 4)}
+        if as_spec:
+            return {k: jax.ShapeDtypeStruct(s, jnp.int32)
+                    for k, s in shapes.items()}
+        return {k: jnp.zeros(s, jnp.int32) for k, s in shapes.items()}
+
     caches = []
-    for stage in layer_plan(cfg):
+    for si, stage in enumerate(layer_plan(cfg)):
         stage_cache = {}
         for i, ld in enumerate(stage.layers):
             if ld.mixer == "mla":
-                raise NotImplementedError(
-                    "paged serving does not page MLA latent caches yet")
+                raise UnsupportedPagedConfig(
+                    cfg, si, i, ld.mixer,
+                    "MLA latent caches stay contiguous (ROADMAP); serve "
+                    "this config with the slot engine (ServingEngine) or "
+                    "an attention-mixer config")
             entry = _layer_cache_spec(cfg, ld, batch, n_max, as_spec)
             if ld.mixer in ("attn", "hybrid") and ld.use_pariskv:
                 entry = {**entry, "kv": paged_kv(), "hist": hist()}
+                if num_device_blocks is not None:
+                    entry["fetch"] = fetch_stats()
             stage_cache[f"l{i}"] = _stack_spec(entry, stage.repeat, as_spec)
         caches.append(stage_cache)
     return caches
@@ -332,7 +381,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, n_max: int,
 # --------------------------------------------------------------- decode ----
 def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                   signs, num_candidates: int, will_promote, media=None,
-                  dist=None, block_tables=None, paged_fused: bool = True):
+                  dist=None, block_tables=None, paged_fused: bool = True,
+                  dev_map=None, fetch=None, rep=None):
     """One layer of one decode step.
 
     ``regions`` fields and ``will_promote`` are per-row (b,) vectors: each
@@ -347,7 +397,14 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
     REPRO_NO_PROMOTE bisection knob skips that maintenance along with the
     promotion itself — with it set, fused and meta-view scores diverge
     once enc_end outruns the stale histogram, which is exactly the stale-
-    metadata regime the knob exists to measure.)"""
+    metadata regime the knob exists to measure.)
+
+    ``dev_map`` switches paged ParisKV layers to the **tiered** pool
+    (ISSUE 6): retrieval runs unchanged over the device-resident
+    metadata, winner K/V rows come from the staging pool when resident
+    and from the host tier (``fetch`` — an offload.EntryFetch) when not,
+    and promotion gathers K through the composed staging tables. The
+    per-step fetch stats land in the ``fetch`` cache leaves."""
     pcfg = cfg.pariskv
     b = x_t.shape[0]
     h = L.rms_norm(x_t[:, None], p["norm_attn"], cfg.norm_eps)[:, 0]
@@ -362,15 +419,26 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
             lambda cc: cc, c)
 
     def maybe_promote_paged(c, hist):
+        kvt = (None if dev_map is None
+               else CC.tiered_kv_tables(block_tables, dev_map))
         return jax.lax.cond(
             jnp.any(promote_mask),
             lambda ch: CC.paged_promote_rows_hist(
                 ch[0], ch[1], block_tables, regions.enc_end, promote_mask,
-                pcfg, signs),
+                pcfg, signs, kv_tables=kvt),
             lambda ch: ch, (c, hist))
 
+    fetch_delta = None
+
     def pariskv_decode(kv):
+        nonlocal fetch_delta
         if isinstance(kv, CC.PagedLayerKVCache):
+            if dev_map is not None:
+                y, kvc, fetch_delta = L.attn_decode_pariskv_tiered(
+                    p["attn"], h, kv, cache["hist"], block_tables, dev_map,
+                    fetch, rep, regions, ld.attn, pcfg, signs,
+                    num_candidates, fused=paged_fused)
+                return y, kvc
             if paged_fused:
                 return L.attn_decode_pariskv_paged_fused(
                     p["attn"], h, kv, cache["hist"], block_tables, regions,
@@ -389,6 +457,16 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
             return {"kv": kvc, "hist": hist}
         return {"kv": maybe_promote_rows(kvc)}
 
+    def merge_fetch_stats(cache):
+        """Accumulate the tiered step's fetch counters into the entry's
+        ``fetch`` leaves (rows cols 0..2; col 3 belongs to fill)."""
+        if fetch_delta is None or "fetch" not in cache:
+            return cache
+        f = cache["fetch"]
+        return {**cache, "fetch": {
+            "touched": f["touched"] + fetch_delta["touched"],
+            "rows": f["rows"].at[:, :3].add(fetch_delta["rows"])}}
+
     if ld.mixer == "attn":
         if ld.use_pariskv:
             y, kvc = pariskv_decode(cache["kv"])
@@ -396,6 +474,7 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                 cache = {**cache, **promote_and_store(kvc)}
             else:
                 cache = {**cache, "kv": kvc}
+            cache = merge_fetch_stats(cache)
         elif isinstance(cache["kv"], CC.LayerKVCache):
             # baseline full-attention decode over the ParisKV store
             y, kv = L.attn_decode_dense(
@@ -430,7 +509,8 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         ya, kvc = pariskv_decode(cache["kv"])
         ys, sc = SSM.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
         y = 0.5 * (ya + ys)
-        cache = {**cache, **promote_and_store(kvc), "ssm": sc}
+        cache = merge_fetch_stats({**cache, **promote_and_store(kvc),
+                                   "ssm": sc})
     x_t = x_t + y.astype(x_t.dtype)
     if ld.cross:
         h = L.rms_norm(x_t[:, None], p["norm_cross"], cfg.norm_eps)[:, 0]
@@ -464,10 +544,11 @@ class FillCtx(NamedTuple):
     valid: jax.Array     # (1, P) bool — t < valid_n
     valid_n: jax.Array   # () int32 — real tokens in this chunk
     bt_row: Any = None   # (nblk,) int32 — paged mode: the slot's table row
+    dev_row: Any = None  # (nblk,) int32 — tiered mode: composed staging row
 
 
 def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
-                signs):
+                signs, fetch=None, rep=None):
     """One layer of one prefill chunk for the filling slot.
 
     Mirrors ``_layer_prefill``'s math chunk-by-chunk: qkv at the chunk's
@@ -491,11 +572,33 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
         return jax.lax.dynamic_slice_in_dim(a, fctx.slot, 1, axis=0)
 
     kv = cache["kv"]
+    fill_fetched = None
     if isinstance(kv, CC.PagedLayerKVCache):
         bs = CC.paged_block_size(kv)
-        idx = jnp.arange(fctx.bt_row.shape[0] * bs)[None]
-        k_pref = CC.paged_gather_rows(kv.k, fctx.bt_row[None], idx)
-        v_pref = CC.paged_gather_rows(kv.v, fctx.bt_row[None], idx)
+        nblk = fctx.bt_row.shape[0]
+        idx = jnp.arange(nblk * bs)[None]
+        if fctx.dev_row is not None:
+            # tiered: the chunk-causal prefix read is dense over the whole
+            # already-written prompt — staging rows where resident, host
+            # fetch (pure_callback) for the rest. Blended exactly like the
+            # decode winner path, so prefetch quality never changes tokens.
+            k_stag = CC.paged_gather_rows(kv.k, fctx.dev_row[None], idx)
+            v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None], idx)
+            blk = idx[0] // bs
+            resident = (fctx.dev_row[blk] >= 0)[None]
+            need = (idx < fctx.start) & ~resident
+            host_blk = fctx.bt_row[blk][None]
+            host_rows = jnp.where(need & (host_blk >= 0),
+                                  host_blk * bs + idx % bs,
+                                  -1).astype(jnp.int32)
+            k_host, v_host = fetch.rows(host_rows, rep)
+            sel = resident[..., None, None]
+            k_pref = jnp.where(sel, k_stag, k_host.astype(k_stag.dtype))
+            v_pref = jnp.where(sel, v_stag, v_host.astype(v_stag.dtype))
+            fill_fetched = (host_rows >= 0).sum().astype(jnp.int32)
+        else:
+            k_pref = CC.paged_gather_rows(kv.k, fctx.bt_row[None], idx)
+            v_pref = CC.paged_gather_rows(kv.v, fctx.bt_row[None], idx)
         pref_pos = jnp.where(idx < fctx.start, idx, -1)
     elif isinstance(kv, CC.LayerKVCache):
         k_pref, v_pref = row1(kv.k), row1(kv.v)
@@ -517,9 +620,19 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
             meta = jax.tree.map(lambda a: a[0],
                                 CC._encode_block(k_new, pcfg, signs))
         if isinstance(kv, CC.PagedLayerKVCache):
-            kvc = CC.paged_fill_chunk_write(
-                kv, fctx.bt_row, fctx.start, k_new[0], v_new[0],
-                fctx.valid[0], meta)
+            if fctx.dev_row is not None:
+                kvc = CC.tiered_fill_chunk_write(
+                    kv, fctx.bt_row, fctx.dev_row, fctx.start, k_new[0],
+                    v_new[0], fctx.valid[0], meta)
+                if "fetch" in cache:
+                    cache = {**cache, "fetch": {
+                        **cache["fetch"],
+                        "rows": cache["fetch"]["rows"].at[fctx.slot, 3].add(
+                            fill_fetched)}}
+            else:
+                kvc = CC.paged_fill_chunk_write(
+                    kv, fctx.bt_row, fctx.start, k_new[0], v_new[0],
+                    fctx.valid[0], meta)
             cache = {**cache, "kv": kvc}
             if ld.use_pariskv and "hist" in cache:
                 hrow = CC.paged_fill_hist_update(
@@ -554,60 +667,110 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
     return x_f, cache
 
 
+def fill_support_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why chunked prefill canNOT serve this architecture, or None when it
+    can. Engines log the reason when they fall back to solo prefill, so a
+    silent perf cliff becomes an explained one."""
+    name = getattr(cfg, "name", cfg.family)
+    if cfg.family in ("vlm", "audio"):
+        return (f"config {name!r}: family {cfg.family!r} computes media "
+                f"K/V in one encoder pass, so prompts prefill solo")
+    for si, stage in enumerate(layer_plan(cfg)):
+        for i, ld in enumerate(stage.layers):
+            if ld.mixer != "attn":
+                return (f"config {name!r}: stage {si} layer {i} mixer "
+                        f"{ld.mixer!r} has no chunk-resumable prefill "
+                        f"(attention mixers only)")
+            if ld.cross:
+                return (f"config {name!r}: stage {si} layer {i} has a "
+                        f"cross-attention sublayer, which reads "
+                        f"encoder-pass media K/V")
+    return None
+
+
 def fill_supported(cfg: ModelConfig) -> bool:
     """Whether chunked prefill can serve this architecture: every mixer is
     plain attention (ParisKV or sliding-window) with no cross sublayer.
     SSM/hybrid recurrences, MLA latent caches, and media cross-attention
-    still prefill solo (ROADMAP)."""
-    if cfg.family in ("vlm", "audio"):
-        return False
-    for stage in layer_plan(cfg):
-        for ld in stage.layers:
-            if ld.mixer != "attn" or ld.cross:
-                return False
-    return True
+    still prefill solo (ROADMAP). See ``fill_support_reason`` for *why* a
+    config falls back."""
+    return fill_support_reason(cfg) is None
+
+
+def offload_support_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why the tiered host-offloaded pool canNOT serve this architecture,
+    or None when it can. The tiered pool pages exactly what
+    ``make_paged_caches`` pages — ParisKV attention K/V — so the only
+    extra requirement over paged serving is chunked-prefill support (the
+    offloaded engine admits prompts through the host tier, which needs
+    the chunk-resumable fill path for its prefix reads)."""
+    name = getattr(cfg, "name", cfg.family)
+    for si, stage in enumerate(layer_plan(cfg)):
+        for i, ld in enumerate(stage.layers):
+            if ld.mixer == "mla":
+                return (f"config {name!r}: stage {si} layer {i} mixer "
+                        f"'mla' keeps latent caches contiguous "
+                        f"(UnsupportedPagedConfig; ROADMAP)")
+    return None
+
+
+def offload_supported(cfg: ModelConfig) -> bool:
+    return offload_support_reason(cfg) is None
 
 
 def _stage_pass(params, cfg: ModelConfig, x_t, caches, regions, signs,
                 num_candidates, will_promote, use_pariskv, dist,
                 block_tables, paged_fused, x_f=None, fctx=None,
-                any_fill=None):
+                any_fill=None, dev_map=None, fetch=None):
     """Run one step's layer stack: every stage's repeat-scan advances the
     decode token for all rows and — when ``x_f`` is given — one prefill
     chunk for the filling slot under an any-fill ``lax.cond``, inside the
-    *same* scan body, so a mixed step reads each layer's weights once."""
-    new_caches = []
-    for stage, sp, sc in zip(layer_plan(cfg), params["stages"], caches):
+    *same* scan body, so a mixed step reads each layer's weights once.
 
-        def body(carry, slices):
+    Tiered mode (``dev_map``/``fetch`` given) additionally feeds each
+    layer its host-fetch namespace: the cache-entry name ``s{si}.l{i}``
+    is resolved against the HostKVPool *at trace time* (the stage loop
+    and layer loop are python), and the repeat index rides the scan xs so
+    the callback knows which stacked repeat's host pool to read."""
+    new_caches = []
+    for si, (stage, sp, sc) in enumerate(
+            zip(layer_plan(cfg), params["stages"], caches)):
+
+        def body(carry, slices, stage=stage, si=si):
             x_t, x_f = carry
-            p_slice, c_slice = slices
+            p_slice, c_slice, rep = slices
             new_c = {}
             for i, ld in enumerate(stage.layers):
                 ld_eff = ld if use_pariskv else dataclasses_replace_nopk(ld)
+                lc = c_slice[f"l{i}"]
+                fe = (fetch.entry(f"s{si}.l{i}")
+                      if fetch is not None and "fetch" in lc else None)
                 x_t, c = _layer_decode(
-                    p_slice[f"l{i}"], x_t, ld_eff, cfg, c_slice[f"l{i}"],
+                    p_slice[f"l{i}"], x_t, ld_eff, cfg, lc,
                     regions, signs, num_candidates, will_promote, dist=dist,
-                    block_tables=block_tables, paged_fused=paged_fused)
+                    block_tables=block_tables, paged_fused=paged_fused,
+                    dev_map=dev_map, fetch=fe, rep=rep)
                 if x_f is not None:
                     x_f, c = jax.lax.cond(
                         any_fill,
-                        lambda op, p_l=p_slice[f"l{i}"], ld_l=ld_eff:
+                        lambda op, p_l=p_slice[f"l{i}"], ld_l=ld_eff,
+                               fe_l=fe, rep_l=rep:
                             _layer_fill(p_l, op[0], ld_l, cfg, op[1], fctx,
-                                        signs),
+                                        signs, fetch=fe_l, rep=rep_l),
                         lambda op: op, (x_f, c))
                 new_c[f"l{i}"] = c
             return (x_t, x_f), new_c
 
-        (x_t, x_f), filled = jax.lax.scan(body, (x_t, x_f), (sp, sc))
+        xs = (sp, sc, jnp.arange(stage.repeat))
+        (x_t, x_f), filled = jax.lax.scan(body, (x_t, x_f), xs)
         new_caches.append(filled)
     return x_t, x_f, new_caches
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
                 use_pariskv: bool = True, dist=None, active=None,
-                block_tables=None, paged_fused: bool = True
-                ) -> Tuple[jax.Array, ServeState]:
+                block_tables=None, paged_fused: bool = True,
+                dev_map=None, fetch=None) -> Tuple[jax.Array, ServeState]:
     """One decode step: token (b,) int32 → (logits (b, v), new state).
 
     Rows advance independently (per-row regions). ``active`` (b,) bool
@@ -647,7 +810,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
 
     x_t, _, new_caches = _stage_pass(
         params, cfg, x_t, state.caches, regions, signs, num_candidates,
-        will_promote, use_pariskv, dist, block_tables, paged_fused)
+        will_promote, use_pariskv, dist, block_tables, paged_fused,
+        dev_map=dev_map, fetch=fetch)
 
     x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
     logits = _unembed(params, cfg, x_t)
@@ -661,7 +825,8 @@ def decode_fill_step(params, cfg: ModelConfig, token: jax.Array,
                      state: ServeState, fill_tokens: jax.Array,
                      fctx: FillCtx, any_fill: jax.Array,
                      use_pariskv: bool = True, dist=None, active=None,
-                     block_tables=None, paged_fused: bool = True
+                     block_tables=None, paged_fused: bool = True,
+                     dev_map=None, fetch=None
                      ) -> Tuple[jax.Array, jax.Array, ServeState]:
     """One mixed prefill+decode step (ISSUE 5): ``decode_step``'s math for
     every active row *plus* one ``P``-token prompt chunk for the filling
@@ -701,7 +866,7 @@ def decode_fill_step(params, cfg: ModelConfig, token: jax.Array,
     x_t, x_f, new_caches = _stage_pass(
         params, cfg, x_t, state.caches, regions, signs, num_candidates,
         will_promote, use_pariskv, dist, block_tables, paged_fused,
-        x_f=x_f, fctx=fctx, any_fill=any_fill)
+        x_f=x_f, fctx=fctx, any_fill=any_fill, dev_map=dev_map, fetch=fetch)
 
     x_t = L.rms_norm(x_t[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
     logits = _unembed(params, cfg, x_t)
@@ -768,24 +933,41 @@ def init_slot_state(cfg: ModelConfig, batch: int, n_max: int,
 
 def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
                           block_size: int, n_max: int,
-                          prefill_budget: int = 0) -> SlotState:
+                          prefill_budget: int = 0,
+                          num_device_blocks: Optional[int] = None
+                          ) -> SlotState:
     """Slot state over a shared block pool: same per-slot scalar vectors,
     but ParisKV cache leaves are PagedLayerKVCache pools (no batch dim).
     The matching block tables are host-managed (serving engine) and passed
     into decode_chunk per call — they change at admission/allocation/
-    eviction boundaries, never inside a chunk."""
+    eviction boundaries, never inside a chunk. ``num_device_blocks``
+    builds the tiered (host-offloaded) pool instead — K/V leaves sized to
+    the staging pool, metadata full-size, plus fetch-stat leaves."""
     return SlotState(
-        caches=make_paged_caches(cfg, batch, num_blocks, block_size, n_max),
+        caches=make_paged_caches(cfg, batch, num_blocks, block_size, n_max,
+                                 num_device_blocks=num_device_blocks),
         regions=regions_spec(batch),
         cur_tok=jnp.zeros((batch,), jnp.int32),
         remaining=jnp.zeros((batch,), jnp.int32),
         **_fill_state(batch, n_max, prefill_budget))
 
 
+def _zero_fetch_leaves(caches):
+    """Fresh fetch-stat leaves at a chunk boundary: the engine reads the
+    per-chunk deltas back after each chunk, so counters restart at 0."""
+    return [
+        {ln: {key: (jax.tree.map(jnp.zeros_like, val) if key == "fetch"
+                    else val)
+              for key, val in lc.items()}
+         for ln, lc in sc.items()}
+        for sc in caches]
+
+
 def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
                  use_pariskv: bool = True, eos_id: Optional[int] = None,
                  dist=None, block_tables=None, paged_fused: bool = True,
-                 prefill_budget: int = 0) -> Tuple[jax.Array, SlotState]:
+                 prefill_budget: int = 0, dev_map=None, fetch=None
+                 ) -> Tuple[jax.Array, SlotState]:
     """Run ``num_steps`` decode steps fully on-device (lax.scan): greedy
     argmax sampling, per-slot active masking, one host sync per chunk.
 
@@ -805,7 +987,15 @@ def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
     fill_len``, writing K/V + metadata through the same caches/tables,
     and emits the slot's first token the step its fill completes —
     admitted prompts no longer stall every decoding slot for a full solo
-    prefill. 0 keeps the pure-decode step (the solo-prefill A/B path)."""
+    prefill. 0 keeps the pure-decode step (the solo-prefill A/B path).
+
+    ``dev_map``/``fetch`` (tiered mode, ISSUE 6) route ParisKV winner
+    K/V through the staging pool + host fetch path; the map is frozen
+    for the chunk (residency changes only at chunk boundaries) and the
+    fetch-stat cache leaves are zeroed here so the engine reads clean
+    per-chunk deltas."""
+    if dev_map is not None:
+        state = state._replace(caches=_zero_fetch_leaves(state.caches))
     if prefill_budget <= 0:
         def step(st, _):
             active = st.remaining > 0
@@ -814,7 +1004,8 @@ def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
                                       use_pariskv=use_pariskv, dist=dist,
                                       active=active,
                                       block_tables=block_tables,
-                                      paged_fused=paged_fused)
+                                      paged_fused=paged_fused,
+                                      dev_map=dev_map, fetch=fetch)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
             emit = jnp.where(active, nxt, -1)
             rem = st.remaining - active.astype(jnp.int32)
@@ -844,13 +1035,15 @@ def decode_chunk(params, cfg: ModelConfig, state: SlotState, num_steps: int,
         valid = (jnp.arange(P) < valid_n)[None]
         fill_toks = jax.lax.dynamic_slice(st.prompt, (fslot, start), (1, P))
         bt_row = None if block_tables is None else block_tables[fslot]
+        dev_row = (None if (block_tables is None or dev_map is None)
+                   else CC.tiered_kv_tables(bt_row[None], dev_map)[0])
         fctx = FillCtx(slot=fslot, start=start, q_pos=q_pos, valid=valid,
-                       valid_n=valid_n, bt_row=bt_row)
+                       valid_n=valid_n, bt_row=bt_row, dev_row=dev_row)
         logits, fill_logits, new = decode_fill_step(
             params, cfg, st.cur_tok, ServeState(st.caches, st.regions),
             fill_toks, fctx, any_fill, use_pariskv=use_pariskv, dist=dist,
             active=active, block_tables=block_tables,
-            paged_fused=paged_fused)
+            paged_fused=paged_fused, dev_map=dev_map, fetch=fetch)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         emit = jnp.where(active, nxt, -1)
         rem = st.remaining - active.astype(jnp.int32)
@@ -988,6 +1181,50 @@ def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
     caches = [
         {lname: {key: (admit_hist(lcache[key], caches1[si][lname]["kv"])
                        if key == "hist"
+                       else merge(lcache[key], caches1[si][lname][key]))
+                 for key in lcache}
+         for lname, lcache in stage_cache.items()}
+        for si, stage_cache in enumerate(state.caches)]
+    return SlotState(
+        caches=caches,
+        regions=CC.CacheRegions(
+            pos=state.regions.pos.at[slot].set(regions1.pos[0]),
+            enc_end=state.regions.enc_end.at[slot].set(regions1.enc_end[0])),
+        cur_tok=state.cur_tok.at[slot].set(tok0),
+        remaining=state.remaining.at[slot].set(rem),
+        fill_pos=state.fill_pos, fill_len=state.fill_len,
+        prompt=state.prompt)
+
+
+def admit_tiered(state: SlotState, slot, phys_blocks, caches1, regions1,
+                 tok0, rem, pcfg=None) -> SlotState:
+    """``admit_paged`` for the tiered pool (ISSUE 6): the device side gets
+    **metadata + histogram + slot-local leaves only**. The prompt's K/V
+    never lands in device HBM here — the engine writes it straight into
+    the HostKVPool (numpy, between chunks) and installs whatever subset
+    the staging policy wants via ``tiered_stage_blocks``. ``phys_blocks``
+    may cover just the solo prefill's (bucketed) capacity — later logical
+    blocks get metadata exclusively through promotion, which runs before
+    any position enters the retrieval region. Fetch-stat leaves pass
+    through (they are chunk-scoped, zeroed at every chunk entry)."""
+    def merge(pool_entry, new_entry):
+        if isinstance(pool_entry, CC.PagedLayerKVCache):
+            return CC.tiered_scatter_prefill_meta(pool_entry, new_entry,
+                                                  phys_blocks)
+        return jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small, slot, axis=1),
+            pool_entry, new_entry)
+
+    def admit_hist(hist_entry, kv1):
+        h1 = CC.bucket_hist_from_meta(kv1.meta_ids, regions1, pcfg)
+        return jax.lax.dynamic_update_slice_in_dim(
+            hist_entry, h1.astype(hist_entry.dtype), slot, axis=1)
+
+    caches = [
+        {lname: {key: (admit_hist(lcache[key], caches1[si][lname]["kv"])
+                       if key == "hist"
+                       else lcache[key] if key == "fetch"
                        else merge(lcache[key], caches1[si][lname][key]))
                  for key in lcache}
          for lname, lcache in stage_cache.items()}

@@ -1,2 +1,3 @@
 from repro.serving.engine import (  # noqa: F401
-    PagedServingEngine, Request, ServingEngine, WaveServingEngine)
+    OffloadedPagedServingEngine, PagedServingEngine, Request, ServingEngine,
+    WaveServingEngine)

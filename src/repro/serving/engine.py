@@ -91,6 +91,7 @@ import numpy as np
 from repro.core import cache as CC
 from repro.core.config import ModelConfig
 from repro.models import serve as SV
+from repro.serving import offload as offload_lib
 
 
 @dataclasses.dataclass
@@ -105,6 +106,12 @@ class Request:
     decode_s: float = 0.0           # first token → completion (per request)
     cancelled: bool = False
     token_times: Optional[list] = None   # host-visibility time per token
+    # offloaded-engine fetch observability (ISSUE 6; zero elsewhere):
+    staging_hits: int = 0        # winner head-rows served from staging
+    staging_misses: int = 0      # winner head-rows fetched from the host tier
+    fetched_bytes: int = 0       # K+V bytes moved host → device on demand
+    prefetched_blocks: int = 0   # blocks speculatively staged for this req
+    prefetch_hits: int = 0       # prefetched blocks referenced next chunk
     # engine-internal:
     _tokens: Optional[list] = None
     _t_admit: float = 0.0
@@ -194,9 +201,9 @@ class ServingEngine:
         assert greedy, "sampling is on-device argmax; greedy only for now"
         if prefill_budget and not SV.fill_supported(cfg):
             raise ValueError(
-                f"chunked prefill (prefill_budget={prefill_budget}) needs an "
-                f"attention-only architecture; {cfg.name} has other mixers — "
-                f"use prefill_budget=0")
+                f"chunked prefill (prefill_budget={prefill_budget}) "
+                f"unavailable — {SV.fill_support_reason(cfg)}; use "
+                f"prefill_budget=0")
         self.cfg = cfg
         self.params = params
         self.n_max = n_max
@@ -459,14 +466,24 @@ class PagedServingEngine(ServingEngine):
       * eviction returns the slot's blocks to the free list (zeroed),
         along with its incremental-histogram rows — including mid-fill
         eviction via ``cancel()``.
+
+    ``offload=True`` (with ``num_device_blocks`` / ``prefetch`` /
+    ``prefetch_hook``) constructs an :class:`OffloadedPagedServingEngine`
+    instead: the full K/V pool moves to host memory and the device keeps
+    retrieval metadata plus a bounded staging pool (ISSUE 6).
     """
+
+    def __new__(cls, *args, **kwargs):
+        if cls is PagedServingEngine and kwargs.get("offload"):
+            return super().__new__(OffloadedPagedServingEngine)
+        return super().__new__(cls)
 
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
                  max_batch: int = 8, block_size: int = CC.PAGED_DEFAULT_BLOCK,
                  num_blocks: Optional[int] = None, greedy: bool = True,
                  use_pariskv: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, fused: bool = True,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0, offload: bool = False):
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
             raise ValueError(f"n_max={n_max} must be a multiple of "
@@ -644,6 +661,402 @@ class PagedServingEngine(ServingEngine):
         done = super().run()
         assert len(self._free) == self.num_blocks, \
             "block leak: allocator did not reclaim every block"
+        return done
+
+
+class OffloadedPagedServingEngine(PagedServingEngine):
+    """Paged serving over the **tiered host-offloaded pool** (ISSUE 6).
+
+    Device HBM holds all retrieval metadata (ids/codes/weights + per-slot
+    bucket histograms) plus a bounded staging pool of
+    ``num_device_blocks`` K/V blocks; the full K/V pool lives host-side
+    (serving.offload_lib.HostKVPool — the CPU analogue of the paper's
+    host-offloaded tier, fetched via ``pure_callback`` instead of async
+    ``device_put``). Each decode step runs Stage I/II on device exactly
+    as the resident engine; winners resolve against the residency map
+    (``dev_map``): staging hits gather on device, misses fetch from the
+    host pool mid-step. Token-identical to ``PagedServingEngine`` by
+    construction — residency decides *where* a winner's bytes come from,
+    never *which* winners attend.
+
+    Residency changes only at chunk boundaries:
+      * every block a chunk may **write or must read densely** (sink +
+        local window + append/fill frontier) is pinned staging-resident —
+        required blocks not already staged are fetched synchronously
+        (the prediction-miss fallback);
+      * ``prefetch=True`` additionally stages the previous chunk's
+        hottest winner blocks (FreeKV-style chunk-boundary prefetch;
+        ``prefetch_hook(touched, k)`` overrides the predictor — a wrong
+        hook costs bytes, not tokens);
+      * staging slots recycle by second-chance clock over unpinned
+        blocks; evicted blocks write back to the host pool first (blocks
+        are K/V-immutable once the write frontier passes, so the copy is
+        final).
+
+    Admission prefills solo at the *prompt's* bucketed capacity (not
+    ``n_max`` — device peak stays independent of logical context), writes
+    prompt K/V straight into the host pool, and scatters only metadata +
+    histogram to the device (``models.serve.admit_tiered``). Eviction and
+    ``cancel(uid)`` reclaim both tiers: host blocks zeroed, staging slots
+    freed without write-back (the data is dead).
+
+    Per-request fetch observability lands on ``Request``: staging_hits/
+    staging_misses (winner head-rows by serving tier), fetched_bytes
+    (on-demand host→device traffic), prefetched_blocks/prefetch_hits
+    (prediction accuracy).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
+                 max_batch: int = 8, block_size: int = CC.PAGED_DEFAULT_BLOCK,
+                 num_blocks: Optional[int] = None, greedy: bool = True,
+                 use_pariskv: bool = True, chunk_size: int = 8,
+                 eos_id: Optional[int] = None, fused: bool = True,
+                 prefill_budget: int = 0, offload: bool = True,
+                 num_device_blocks: Optional[int] = None,
+                 prefetch: bool = True, prefetch_hook=None):
+        reason = SV.offload_support_reason(cfg)
+        if reason is not None:
+            raise ValueError(f"offloaded paged serving unavailable — "
+                             f"{reason}")
+        super().__init__(cfg, params, n_max=n_max, max_batch=max_batch,
+                         block_size=block_size, num_blocks=num_blocks,
+                         greedy=greedy, use_pariskv=use_pariskv,
+                         chunk_size=chunk_size, eos_id=eos_id, fused=fused,
+                         prefill_budget=prefill_budget)
+        self.num_device_blocks = (max(1, self.num_blocks // 4)
+                                  if num_device_blocks is None
+                                  else num_device_blocks)
+        self.prefetch = prefetch
+        self.prefetch_hook = prefetch_hook
+        # pariskv cache-entry registry: (stage idx, layer key, host name)
+        self._entries: List[tuple] = []
+        shapes = {}
+        for si, stage in enumerate(SV.layer_plan(cfg)):
+            for i, ld in enumerate(stage.layers):
+                if ld.mixer in ("attn", "hybrid") and ld.use_pariskv:
+                    name = f"s{si}.l{i}"
+                    self._entries.append((si, f"l{i}", name))
+                    shapes[name] = (stage.repeat, cfg.num_kv_heads,
+                                    cfg.head_dim)
+        # NB: the jitted chunk closes over this exact HostKVPool object
+        # (its bound-method callbacks are the pure_callback targets) —
+        # start() zeroes it in place rather than replacing it
+        self.host = offload_lib.HostKVPool(shapes, self.num_blocks,
+                                       self.block_size, SV._dtype(cfg))
+        self.staging = offload_lib.StagingMap(self.num_blocks,
+                                          self.num_device_blocks)
+        host = self.host
+        self._chunk = jax.jit(
+            lambda p, st, bt, dm: SV.decode_chunk(
+                p, cfg, st, chunk_size, eos_id=eos_id, block_tables=bt,
+                paged_fused=fused, prefill_budget=prefill_budget,
+                dev_map=dm, fetch=host),
+            donate_argnums=(1,))
+        # solo prefill at the prompt's bucketed capacity (static arg →
+        # one compile per bucket), so admission never materializes an
+        # n_max-sized contiguous cache on device
+        self._prefill = jax.jit(
+            lambda p, t, lens, m, cap: SV.prefill(p, cfg, t, cap, m,
+                                                  lengths=lens),
+            static_argnums=(4,))
+        self._admit_fn = jax.jit(
+            lambda st, slot, pb, c1, r1, t0, rem: SV.admit_tiered(
+                st, slot, pb, c1, r1, t0, rem, pcfg=cfg.pariskv),
+            donate_argnums=(0,))
+        self._evict_fn = jax.jit(self._evict_tiered_impl,
+                                 donate_argnums=(0,))
+        self._stage_fn = jax.jit(self._stage_impl, donate_argnums=(0,))
+        self._read_staging_fn = jax.jit(self._read_staging_impl)
+        self._touched_last = np.zeros((self.num_blocks,), np.int64)
+        self._last_prefetch: List[int] = []
+
+    # ------------------------------------------------------ device helpers --
+    def _stage_impl(self, state: SV.SlotState, stag_blocks, payloads):
+        """Install host block payloads into staging slots (all entries)."""
+        caches = [dict(sc) for sc in state.caches]
+        for si, ln, name in self._entries:
+            lc = caches[si][ln]
+            k, v = payloads[name]
+            caches[si][ln] = {**lc, "kv": CC.tiered_stage_blocks(
+                lc["kv"], stag_blocks, k, v)}
+        return state._replace(caches=caches)
+
+    def _read_staging_impl(self, state: SV.SlotState, stag_blocks):
+        """Read staging blocks back for host write-back (pad ids are
+        clipped — callers slice the valid prefix)."""
+        safe = jnp.clip(stag_blocks, 0, self.num_device_blocks - 1)
+        out = {}
+        for si, ln, name in self._entries:
+            kv = state.caches[si][ln]["kv"]
+            out[name] = (kv.k[:, safe], kv.v[:, safe])
+        return out
+
+    def _evict_tiered_impl(self, state: SV.SlotState, meta_blocks,
+                           stag_blocks, slot):
+        """Tiered eviction hygiene: host-block ids zero the meta leaves,
+        staging-slot ids zero the K/V leaves, and the slot's histogram
+        row is cleared (same contract as the resident ``_evict_impl``)."""
+        def clear(key, entry):
+            if isinstance(entry, CC.PagedLayerKVCache):
+                return CC.tiered_clear_blocks(entry, meta_blocks,
+                                              stag_blocks)
+            if key == "hist":
+                zero = jnp.zeros_like(entry[:, :1])
+                return jax.lax.dynamic_update_slice_in_dim(
+                    entry, zero, slot, axis=1)
+            return entry
+        caches = [
+            {ln: {key: clear(key, lc[key]) for key in lc}
+             for ln, lc in stage.items()}
+            for stage in state.caches]
+        return state._replace(caches=caches)
+
+    # ------------------------------------------------------------ admission --
+    def _solo_cap(self, plen: int) -> int:
+        """Bucketed prefill capacity: power-of-two prompt bucket rounded
+        up to whole blocks, never above n_max."""
+        b = _bucket(plen, cap=self.n_max)
+        return min(self.n_max, -(-b // self.block_size) * self.block_size)
+
+    def _prefill_request(self, req: Request):
+        cap = self._solo_cap(len(req.prompt))
+        s = _bucket(len(req.prompt), cap=cap)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :len(req.prompt)] = req.prompt
+        lens = jnp.asarray([len(req.prompt)], jnp.int32)
+        media = None
+        if req.media is not None:
+            media = jnp.asarray(req.media)[None]
+        logits, state1 = self._prefill(self.params, jnp.asarray(toks), lens,
+                                       media, cap)
+        return state1, int(jnp.argmax(logits[0], -1))
+
+    def _install_solo(self, slot: int, req: Request, state1, tok0) -> None:
+        si0, ln0, _ = self._entries[0]
+        cap = state1.caches[si0][ln0]["kv"].k.shape[2]  # (R, 1, cap, G, hd)
+        phys = np.asarray(self._phys_row(slot))[:cap // self.block_size]
+        for si, ln, name in self._entries:
+            kv1 = state1.caches[si][ln]["kv"]
+            self.host.write_prefill(name, phys, np.asarray(kv1.k)[:, 0],
+                                    np.asarray(kv1.v)[:, 0])
+        self._state = self._admit_fn(
+            self._state, jnp.int32(slot), jnp.asarray(phys),
+            state1.caches, state1.regions, jnp.int32(tok0),
+            jnp.int32(req.max_new_tokens - 1))
+
+    # ------------------------------------------------------------- staging --
+    def _update_staging(self) -> None:
+        """Chunk-boundary residency update: pin the chunk's write/dense-
+        read set (fetching absent blocks synchronously), then prefetch
+        predicted winner blocks into whatever staging capacity remains,
+        writing evicted blocks back to the host pool first."""
+        sm = self.staging
+        sm.unpin_all()
+        pos = np.asarray(self._state.regions.pos)
+        enc = np.asarray(self._state.regions.enc_end)
+        fpos = (None if self._state.fill_pos is None
+                else np.asarray(self._state.fill_pos))
+        flen = (None if self._state.fill_len is None
+                else np.asarray(self._state.fill_len))
+        bs = self.block_size
+        W = CC.window_size(self.cfg.pariskv)
+        sink = self.cfg.pariskv.sink_size
+        P = self.prefill_budget
+        required: List[tuple] = []        # (host_block, slot), pin order
+        seen: set = set()
+
+        def want(slot, lo_blk, hi_blk):
+            row = self._bt[slot]
+            for lb in range(max(0, lo_blk), min(self.nblk, hi_blk)):
+                hb = int(row[lb])
+                if hb >= 0 and hb not in seen:
+                    seen.add(hb)
+                    required.append((hb, slot))
+
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            filling = (flen is not None and flen[slot] > 0
+                       and fpos[slot] < flen[slot])
+            if filling:
+                # fill writes [start, start + chunk·P); the window of the
+                # wherever-it-lands frontier (and post-completion decode
+                # appends) stays inside [start - W, start + chunk·(P+1))
+                start = int(fpos[slot])
+                lo = max(0, start - W)
+                hi = start + self.chunk_size * (max(P, 1) + 1)
+            else:
+                # decode appends [pos+1, pos+1+chunk); window + promotion
+                # reads reach down to min(enc_end, pos+1-W)
+                p1 = int(pos[slot]) + 1
+                lo = max(0, min(int(enc[slot]), p1 - W))
+                hi = p1 + self.chunk_size
+            if sink > 0:
+                want(slot, 0, -(-sink // bs))
+            want(slot, lo // bs, -(-(hi + 1) // bs))
+
+        writebacks: List[tuple] = []      # (evicted host block, staging slot)
+        installs: List[tuple] = []        # (host block, staging slot)
+
+        def acquire_for(hb):
+            got = sm.acquire()
+            if got is None:
+                return None
+            s, ev = got
+            if ev >= 0:
+                writebacks.append((ev, s))
+            sm.install(hb, s)
+            installs.append((hb, s))
+            return s
+
+        for hb, slot in required:
+            if sm.resident(hb):
+                sm.pin(hb)
+                continue
+            s = acquire_for(hb)
+            if s is None:
+                raise RuntimeError(
+                    f"staging pool exhausted while pinning the chunk's "
+                    f"write/dense-read set (num_device_blocks="
+                    f"{self.num_device_blocks}); grow the staging pool or "
+                    f"shrink max_batch/chunk_size/prefill_budget")
+            sm.pinned[s] = True
+
+        self._last_prefetch = []
+        if self.prefetch:
+            owner = {b: sl for sl, blks in self._alloc.items()
+                     for b in blks}
+            k = max(1, self.num_device_blocks // 4)
+            if self.prefetch_hook is not None:
+                cand = list(self.prefetch_hook(self._touched_last.copy(), k))
+            else:
+                order = np.argsort(-self._touched_last, kind="stable")
+                cand = [int(hb) for hb in order[:k]
+                        if self._touched_last[hb] > 0]
+            for hb in cand:
+                hb = int(hb)
+                if (not 0 <= hb < self.num_blocks or hb in seen
+                        or sm.resident(hb) or hb not in owner):
+                    continue
+                if acquire_for(hb) is None:
+                    break                  # everything else is pinned
+                self._last_prefetch.append(hb)
+                owner_req = self._slots[owner[hb]]
+                if owner_req is not None:
+                    owner_req.prefetched_blocks += 1
+
+        if writebacks:
+            evs = np.asarray([e for e, _ in writebacks], np.int64)
+            ss = [s for _, s in writebacks]
+            m = _bucket(len(ss))
+            spad = np.zeros((m,), np.int32)
+            spad[:len(ss)] = ss
+            data = self._read_staging_fn(self._state, jnp.asarray(spad))
+            for _, _, name in self._entries:
+                k, v = data[name]
+                self.host.writeback(name, evs, np.asarray(k)[:, :len(ss)],
+                                    np.asarray(v)[:, :len(ss)])
+
+        if installs:
+            ss = [s for _, s in installs]
+            m = _bucket(len(ss))
+            spad = np.full((m,), self.num_device_blocks, np.int32)
+            spad[:len(ss)] = ss
+            hpad = np.zeros((m,), np.int64)
+            hpad[:len(installs)] = [h for h, _ in installs]
+            payloads = {}
+            for _, _, name in self._entries:
+                k, v = self.host.read_blocks(name, hpad)
+                payloads[name] = (jnp.asarray(k), jnp.asarray(v))
+            self._state = self._stage_fn(self._state, jnp.asarray(spad),
+                                         payloads)
+
+    def _harvest_fetch_stats(self) -> None:
+        """Read the chunk's fetch-stat leaves back: per-request staging
+        hit/miss/bytes counters, prefetch-hit accounting, and the touched
+        histogram that seeds the next chunk's prefetch prediction."""
+        touched = np.zeros((self.num_blocks,), np.int64)
+        rows = np.zeros((self.max_batch, 4), np.int64)
+        miss_b = np.zeros((self.max_batch,), np.int64)
+        for si, ln, name in self._entries:
+            f = self._state.caches[si][ln]["fetch"]
+            touched += np.asarray(f["touched"]).sum(axis=0)
+            r = np.asarray(f["rows"]).sum(axis=0).astype(np.int64)
+            rows += r
+            miss_b += (r[:, 2] * self.host.bytes_per_head_row(name)
+                       + r[:, 3] * self.host.bytes_per_row(name))
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            req.staging_hits += int(rows[slot, 1])
+            req.staging_misses += int(rows[slot, 2])
+            req.fetched_bytes += int(miss_b[slot])
+        owner = {b: sl for sl, blks in self._alloc.items() for b in blks}
+        for hb in self._last_prefetch:
+            if touched[hb] > 0:
+                sl = owner.get(hb)
+                if sl is not None and self._slots[sl] is not None:
+                    self._slots[sl].prefetch_hits += 1
+        self.staging.touch(np.flatnonzero(touched > 0))
+        self._touched_last = touched
+
+    # ------------------------------------------- loop phases (overrides) ----
+    def _init_state(self) -> SV.SlotState:
+        return SV.init_paged_slot_state(
+            self.cfg, self.max_batch, self.num_blocks, self.block_size,
+            self.n_max, prefill_budget=self.prefill_budget,
+            num_device_blocks=self.num_device_blocks)
+
+    def start(self) -> None:
+        super().start()
+        self.staging = offload_lib.StagingMap(self.num_blocks,
+                                          self.num_device_blocks)
+        for name in self.host.k:          # zero in place: the jitted
+            self.host.k[name][:] = 0      # chunk holds this exact object
+            self.host.v[name][:] = 0
+        self.host.fetched_head_rows = 0
+        self.host.fetched_fill_rows = 0
+        self._touched_last = np.zeros((self.num_blocks,), np.int64)
+        self._last_prefetch = []
+
+    def _pre_chunk(self) -> None:
+        super()._pre_chunk()              # lazy block allocation first
+        self._update_staging()
+
+    def _run_chunk(self):
+        tokens, self._state = self._chunk(
+            self.params, self._state, jnp.asarray(self._bt),
+            jnp.asarray(self.staging.dev_map))
+        toks = np.asarray(tokens)
+        rem = np.asarray(self._state.remaining)
+        self._harvest_fetch_stats()
+        return toks, rem
+
+    def _reclaim_slot(self, slot: int) -> None:
+        """Reclaim both tiers: staging slots freed (no write-back — the
+        data is dead), host blocks zeroed, device meta/hist cleared."""
+        hbs = np.asarray(self._alloc.get(slot, ()), np.int64)
+        freed = (self.staging.release_host_blocks(hbs) if hbs.size else [])
+        m = _bucket(max(len(freed), 1))
+        spad = np.full((m,), self.num_device_blocks, np.int32)
+        spad[:len(freed)] = freed
+        self._state = self._evict_fn(self._state, self._phys_row(slot),
+                                     jnp.asarray(spad), jnp.int32(slot))
+        if hbs.size:
+            self.host.zero_blocks(hbs)
+        self._release_host(slot)
+
+    def _evict_device(self, slot: int) -> None:
+        self._state = self._cancel_fn(self._state, jnp.int32(slot))
+        self._reclaim_slot(slot)
+
+    def _release_slot(self, slot: int) -> None:
+        self._reclaim_slot(slot)
+
+    def run(self) -> List[Request]:
+        done = super().run()              # asserts the block allocator
+        assert self.staging.resident_count() == 0, \
+            "staging leak: residency map retained blocks after run"
         return done
 
 

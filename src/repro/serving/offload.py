@@ -1,0 +1,260 @@
+"""Host tier of the offloaded paged pool (ISSUE 6).
+
+The tiered ``PagedLayerKVCache`` (core.cache) keeps retrieval metadata
+fully device-resident but bounds the device K/V to ``num_device_blocks``
+staging blocks. This module owns everything host-side:
+
+* :class:`HostKVPool` — the full K/V block pool in host memory, one
+  (k, v) numpy pair per pariskv cache entry, each
+  ``(R, num_blocks, block_size, G, hd)`` (R = stage repeat, matching the
+  stacked device leaves). It also exposes the **on-demand fetch
+  callbacks** the jitted decode step reaches through
+  ``jax.pure_callback``: per-head winner rows (Stage-II misses) and
+  whole logical rows (chunked-prefill prefix reads). The callbacks are
+  pure *for the duration of one decode chunk*: the engine only mutates
+  host arrays between chunks (admission, write-back, eviction), never
+  while a chunk executes.
+
+* :class:`StagingMap` — the device-residency policy: ``dev_map``
+  (num_blocks,) int32 maps host block → staging block (-1 = not
+  staged); slots are handed out from a free list and then recycled by a
+  second-chance clock over unpinned slots. The engine pins, per chunk,
+  every block a step may *write or must read densely* (sink + local
+  window + append/fill frontier), so the jitted step's composed-table
+  writes always land in staging; anything else is evictable, and a
+  retrieval winner whose block was evicted simply comes back through
+  the host fetch path — token-identical either way, which is what makes
+  the prefetch policy a pure performance knob.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EntryFetch:
+    """Per-cache-entry host fetch namespace, closed over by the jitted
+    chunk. ``heads``/``rows`` are traced-level helpers that wrap the
+    numpy gathers in ``jax.pure_callback`` (CPU "side stream" analogue
+    of the async device_put fetch — on TPU the same callbacks ride the
+    host callback stream while the layer pass proceeds)."""
+
+    def __init__(self, pool: "HostKVPool", name: str):
+        self._pool = pool
+        self._name = name
+
+    # -- numpy side (runs on host at execution time) --------------------
+    def _heads_np(self, rows, rep):
+        """rows (b, G, Q, k) flat host-pool rows (< 0 = skip), rep scalar
+        stage-repeat index → (k, v) each (b, G, Q, k, hd)."""
+        pool = self._pool
+        kf, vf = pool.flat(self._name, int(rep))       # (N, G, hd) each
+        rows = np.asarray(rows)
+        want = rows >= 0
+        safe = np.clip(rows, 0, kf.shape[0] - 1)
+        g = np.arange(kf.shape[1]).reshape(1, -1, 1, 1)
+        sel = want[..., None]
+        ko = np.where(sel, kf[safe, g], np.zeros((), kf.dtype))
+        vo = np.where(sel, vf[safe, g], np.zeros((), vf.dtype))
+        pool.fetched_head_rows += int(want.sum())
+        return ko, vo
+
+    def _rows_np(self, rows, rep):
+        """rows (b, L) flat host-pool rows (< 0 = skip) → (k, v) each
+        (b, L, G, hd)."""
+        pool = self._pool
+        kf, vf = pool.flat(self._name, int(rep))
+        rows = np.asarray(rows)
+        want = rows >= 0
+        safe = np.clip(rows, 0, kf.shape[0] - 1)
+        sel = want[..., None, None]
+        ko = np.where(sel, kf[safe], np.zeros((), kf.dtype))
+        vo = np.where(sel, vf[safe], np.zeros((), vf.dtype))
+        pool.fetched_fill_rows += int(want.sum())
+        return ko, vo
+
+    # -- traced side (called inside the jitted decode step) -------------
+    def heads(self, rows: jax.Array, rep: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+        G, hd, dt = self._pool.head_shape(self._name)
+        sds = jax.ShapeDtypeStruct(rows.shape + (hd,), dt)
+        return jax.pure_callback(self._heads_np, (sds, sds), rows, rep)
+
+    def rows(self, rows: jax.Array, rep: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+        G, hd, dt = self._pool.head_shape(self._name)
+        sds = jax.ShapeDtypeStruct(rows.shape + (G, hd), dt)
+        return jax.pure_callback(self._rows_np, (sds, sds), rows, rep)
+
+
+class HostKVPool:
+    """Full K/V block pool in host memory + the fetch callback registry.
+
+    ``shapes``: {entry_name: (R, G, hd)} for every pariskv cache entry;
+    all entries share ``num_blocks``/``block_size``/``dtype``.
+    """
+
+    def __init__(self, shapes: Dict[str, tuple], num_blocks: int,
+                 block_size: int, dtype):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.dtype = dtype
+        self.k: Dict[str, np.ndarray] = {}
+        self.v: Dict[str, np.ndarray] = {}
+        self._heads: Dict[str, tuple] = {}
+        for name, (R, G, hd) in shapes.items():
+            shape = (R, num_blocks, block_size, G, hd)
+            self.k[name] = np.zeros(shape, dtype)
+            self.v[name] = np.zeros(shape, dtype)
+            self._heads[name] = (G, hd, dtype)
+        self._entries = {name: EntryFetch(self, name) for name in shapes}
+        # host-side telemetry (tests/benchmarks; the authoritative per-
+        # request counts ride the device-side "fetch" cache leaves)
+        self.fetched_head_rows = 0
+        self.fetched_fill_rows = 0
+
+    def entry(self, name: str) -> EntryFetch:
+        return self._entries[name]
+
+    def head_shape(self, name: str) -> tuple:
+        return self._heads[name]
+
+    def flat(self, name: str, rep: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(num_blocks·block_size, G, hd) row views of one repeat."""
+        kf = self.k[name][rep]
+        vf = self.v[name][rep]
+        n = self.num_blocks * self.block_size
+        return (kf.reshape((n,) + kf.shape[2:]),
+                vf.reshape((n,) + vf.shape[2:]))
+
+    def bytes_per_head_row(self, name: str) -> int:
+        """K+V bytes one fetched winner row moves (per kv-head)."""
+        _, hd, dt = self._heads[name]
+        return 2 * hd * np.dtype(dt).itemsize
+
+    def bytes_per_row(self, name: str) -> int:
+        """K+V bytes one fetched full row (all kv-heads) moves."""
+        G, hd, dt = self._heads[name]
+        return 2 * G * hd * np.dtype(dt).itemsize
+
+    # -- engine-side mutation (only ever between chunks) ----------------
+    def write_prefill(self, name: str, phys_blocks: np.ndarray,
+                      k_rows: np.ndarray, v_rows: np.ndarray) -> None:
+        """Install a solo prefill's prompt K/V: k/v_rows
+        (R, n_logical, G, hd), phys_blocks (n_logical // bs,) host block
+        per logical block (out-of-range sentinel = pad block, skipped)."""
+        bs = self.block_size
+        R, n = k_rows.shape[:2]
+        nblk = n // bs
+        kview = k_rows.reshape((R, nblk, bs) + k_rows.shape[2:])
+        vview = v_rows.reshape((R, nblk, bs) + v_rows.shape[2:])
+        sel = (phys_blocks >= 0) & (phys_blocks < self.num_blocks)
+        self.k[name][:, phys_blocks[sel]] = kview[:, sel].astype(self.dtype)
+        self.v[name][:, phys_blocks[sel]] = vview[:, sel].astype(self.dtype)
+
+    def writeback(self, name: str, host_blocks: np.ndarray,
+                  k_blocks: np.ndarray, v_blocks: np.ndarray) -> None:
+        """Staging → host write-back before a slot is recycled:
+        k/v_blocks (R, n, bs, G, hd) for host blocks (n,)."""
+        self.k[name][:, host_blocks] = k_blocks.astype(self.dtype)
+        self.v[name][:, host_blocks] = v_blocks.astype(self.dtype)
+
+    def read_blocks(self, name: str, host_blocks: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host → staging payloads (R, n, bs, G, hd) for installation."""
+        return self.k[name][:, host_blocks], self.v[name][:, host_blocks]
+
+    def zero_blocks(self, host_blocks: np.ndarray) -> None:
+        for name in self.k:
+            self.k[name][:, host_blocks] = 0
+            self.v[name][:, host_blocks] = 0
+
+
+class StagingMap:
+    """Device-residency map + second-chance/LRU staging allocator.
+
+    All state is host-side numpy/deque; ``dev_map`` is shipped to the
+    device as a (num_blocks,) int32 argument of each decode chunk (the
+    map is frozen for the chunk's duration — residency only changes at
+    chunk boundaries, where the engine stages/evicts/prefetches)."""
+
+    def __init__(self, num_blocks: int, num_device_blocks: int):
+        self.num_blocks = num_blocks
+        self.num_device_blocks = num_device_blocks
+        self.dev_map = np.full((num_blocks,), -1, np.int32)
+        self.owner = np.full((num_device_blocks,), -1, np.int32)
+        self.pinned = np.zeros((num_device_blocks,), bool)
+        self.ref = np.zeros((num_device_blocks,), bool)
+        self.free = deque(range(num_device_blocks))
+        self._clock = 0
+
+    def resident(self, host_block: int) -> bool:
+        return self.dev_map[host_block] >= 0
+
+    def unpin_all(self) -> None:
+        self.pinned[:] = False
+
+    def pin(self, host_block: int) -> None:
+        s = int(self.dev_map[host_block])
+        assert s >= 0, f"pin of non-resident host block {host_block}"
+        self.pinned[s] = True
+        self.ref[s] = True
+
+    def touch(self, host_blocks) -> None:
+        """Second-chance reference bits for blocks the last chunk read."""
+        for hb in np.atleast_1d(host_blocks):
+            s = self.dev_map[int(hb)]
+            if s >= 0:
+                self.ref[s] = True
+
+    def acquire(self) -> Optional[Tuple[int, int]]:
+        """One staging slot: free list first, else second-chance clock
+        over unpinned slots (a set ref bit buys one more lap). Returns
+        (slot, evicted_host_block or -1); None when every slot is pinned
+        (the caller must shrink its ask — pinned sets are bounded by
+        construction, so required blocks always fit)."""
+        if self.free:
+            return self.free.popleft(), -1
+        n = self.num_device_blocks
+        for _ in range(2 * n + 1):
+            s = self._clock
+            self._clock = (self._clock + 1) % n
+            if self.pinned[s]:
+                continue
+            if self.ref[s]:
+                self.ref[s] = False
+                continue
+            hb = int(self.owner[s])
+            if hb >= 0:
+                self.dev_map[hb] = -1
+            self.owner[s] = -1
+            return s, hb
+        return None
+
+    def install(self, host_block: int, slot: int) -> None:
+        self.dev_map[host_block] = slot
+        self.owner[slot] = host_block
+        self.ref[slot] = True
+
+    def release_host_blocks(self, host_blocks) -> list:
+        """Eviction/cancel path: free the staging slots owned by dead
+        host blocks (their data is dead — no write-back). Returns the
+        freed staging slot ids so the engine can zero them on device."""
+        slots = []
+        for hb in np.atleast_1d(host_blocks):
+            s = int(self.dev_map[int(hb)])
+            if s >= 0:
+                self.dev_map[int(hb)] = -1
+                self.owner[s] = -1
+                self.pinned[s] = False
+                self.ref[s] = False
+                self.free.append(s)
+                slots.append(s)
+        return slots
+
+    def resident_count(self) -> int:
+        return int((self.owner >= 0).sum())

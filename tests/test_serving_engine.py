@@ -286,7 +286,7 @@ def test_decode_chunk_eos_mid_chunk_scripted_real_ids(monkeypatch):
 
     def scripted_decode_step(params, cfg_, token, state, use_pariskv=True,
                              dist=None, active=None, block_tables=None,
-                             paged_fused=True):
+                             paged_fused=True, dev_map=None, fetch=None):
         pos = state.regions.pos
         step = jnp.clip(pos - (S - 1), 0, N - 1)
         tok = jnp.take_along_axis(script, step[:, None], axis=1)[:, 0]
