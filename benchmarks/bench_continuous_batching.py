@@ -42,10 +42,23 @@ harvests from the device-side counters — staging hits/misses (hit
 rate), fetched K+V bytes, and prefetch-prediction accuracy — surfaced
 request-by-request in the CSV rows and aggregated in the smoke record.
 
+Scenario 4 (ISSUE 7): **prefix sharing** under fleet-shaped traffic —
+N requests carrying the same long system prefix with short distinct
+suffixes, ``share_prefixes=True`` vs the identical engine without it.
+The first request (the donor) fills the whole prompt either way; every
+later admission maps the donor's full prefix blocks straight into its
+block table and chunk-fills only the suffix. Reported: fresh blocks
+drawn from the pool (``blocks_consumed``, counted once per physical
+block), shared-block hits, mean sharer TTFT, and token agreement. The
+CI gates are baseline-free and deterministic: tokens must be
+bit-identical to the no-sharing engine (fused, fallback, and offload),
+block cost must stay near-flat (ratio ≤ 0.6 at this workload's 5×
+dedup), and sharer TTFT must drop (ratio ≤ 0.75).
+
 ``run_smoke()`` returns the same numbers machine-readable — the CI
 benchmark job persists them as BENCH_ci.json and fails on >20% tokens/s
 regression vs the committed BENCH_continuous_batching.json baseline (and
-on the chunked-prefill gate above).
+on the chunked-prefill + prefix-sharing gates above).
 """
 from __future__ import annotations
 
@@ -149,9 +162,10 @@ def _measure() -> dict:
 def run_smoke() -> list:
     """Machine-readable results for CI regression tracking (BENCH_*.json):
     the engine-comparison record, the chunked-vs-solo mixed-workload
-    record, and the tiered-offload serving record (benchmarks.run
-    handles the list)."""
-    return [_smoke_continuous(), run_smoke_mixed(), run_smoke_offload()]
+    record, the tiered-offload serving record, and the prefix-sharing
+    record (benchmarks.run handles the list)."""
+    return [_smoke_continuous(), run_smoke_mixed(), run_smoke_offload(),
+            run_smoke_share()]
 
 
 def _smoke_continuous() -> dict:
@@ -263,6 +277,109 @@ def run_smoke_offload() -> dict:
             for tag, r in m["res"].items()},
         "offload": off["fetch"],
         "token_parity_offload_vs_resident": bool(m["parity"]),
+    }
+
+
+# ------------------------------------------------ prefix sharing (ISSUE 7) --
+# Fleet-shaped traffic: one long system prefix (9 full blocks at
+# block_size 16), short distinct suffixes. Small blocks make the
+# shareable span fine-grained; the chunked-fill budget keeps admissions
+# serialized through the single filling slot, so every request after the
+# donor admits against a fully registered prefix.
+SHARE_PREFIX = 144
+SHARE_WORKLOAD = [(17, 8), (23, 8), (11, 8), (29, 8), (19, 8)]  # (suffix, gen)
+SHARE_N_MAX = 512
+SHARE_BLOCK = 16
+SHARE_BATCH = 4
+SHARE_BUDGET = 16
+
+
+def _share_prompts(cfg):
+    rng = np.random.RandomState(13)
+    prefix = rng.randint(0, cfg.vocab_size, size=(SHARE_PREFIX,))
+    return [np.concatenate(
+        [prefix, rng.randint(0, cfg.vocab_size, size=(s,))]).astype(np.int32)
+        for s, _ in SHARE_WORKLOAD]
+
+
+def _run_share_engine(cfg, params, prompts, *, share, warmup=True, **kw):
+    kw.setdefault("fused", True)
+    engine = PagedServingEngine(
+        cfg, params, n_max=SHARE_N_MAX, max_batch=SHARE_BATCH,
+        block_size=SHARE_BLOCK, chunk_size=4, prefill_budget=SHARE_BUDGET,
+        share_prefixes=share, **kw)
+
+    def once():
+        for i, ((_, gen), p) in enumerate(zip(SHARE_WORKLOAD, prompts)):
+            engine.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+        t0 = time.perf_counter()
+        done = engine.run()
+        return done, time.perf_counter() - t0
+
+    if warmup:
+        once()
+        engine.blocks_consumed = 0          # count the measured run only
+        engine.shared_block_hits = 0
+    done, wall = once()
+    sharer_ttft = [r.ttft_s for r in done if r.uid != 0]
+    toks = sum(len(r.output) for r in done)
+    return dict(
+        wall=wall, tok_per_s=toks / wall,
+        blocks=engine.blocks_consumed, hits=engine.shared_block_hits,
+        ttft_sharers=sum(sharer_ttft) / max(len(sharer_ttft), 1),
+        outputs={r.uid: np.asarray(r.output) for r in done})
+
+
+def _measure_share() -> dict:
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _share_prompts(cfg)
+    base = _run_share_engine(cfg, params, prompts, share=False)
+    shared = _run_share_engine(cfg, params, prompts, share=True)
+    # parity-only runs (no timing): meta-view fallback + offloaded tier
+    fb = _run_share_engine(cfg, params, prompts, share=True, warmup=False,
+                           fused=False)
+    off = _run_share_engine(cfg, params, prompts, share=True, warmup=False,
+                            offload=True, num_device_blocks=16)
+
+    def parity(a, b):
+        return all(np.array_equal(a["outputs"][u], b["outputs"][u])
+                   for u in range(len(SHARE_WORKLOAD)))
+
+    return dict(
+        base=base, shared=shared, arch=cfg.name,
+        agreement=parity(base, shared),
+        fallback_parity=parity(base, fb),
+        offload_parity=parity(base, off))
+
+
+def run_smoke_share() -> dict:
+    """The prefix-sharing record + its baseline-free CI gates: token
+    agreement must be exact, block cost near-flat, sharer TTFT cut."""
+    m = _measure_share()
+    base, shared = m["base"], m["shared"]
+    return {
+        "benchmark": "prefix_sharing",
+        "arch": m["arch"],
+        "n_requests": len(SHARE_WORKLOAD),
+        "shared_prefix_tokens": SHARE_PREFIX,
+        "share": {
+            "blocks_consumed_noshare": int(base["blocks"]),
+            "blocks_consumed_share": int(shared["blocks"]),
+            "shared_block_hits": int(shared["hits"]),
+            "tok_per_s_noshare": round(base["tok_per_s"], 2),
+            "tok_per_s_share": round(shared["tok_per_s"], 2),
+            "ttft_sharers_noshare_s": round(base["ttft_sharers"], 5),
+            "ttft_sharers_share_s": round(shared["ttft_sharers"], 5),
+        },
+        "block_cost_ratio_share_over_noshare":
+            round(shared["blocks"] / max(base["blocks"], 1), 4),
+        "ttft_sharers_ratio_share_over_noshare":
+            round(shared["ttft_sharers"] / max(base["ttft_sharers"], 1e-9),
+                  4),
+        "token_agreement_share_vs_noshare": bool(m["agreement"]),
+        "token_parity_share_fallback": bool(m["fallback_parity"]),
+        "token_parity_share_offload": bool(m["offload_parity"]),
     }
 
 
@@ -414,4 +531,20 @@ def run() -> list:
             f"staging_hits={s['hits']};staging_misses={s['misses']};"
             f"fetched_bytes={s['bytes']};prefetched={s['prefetched']};"
             f"prefetch_hits={s['prefetch_hits']}"))
+
+    ms = _measure_share()
+    for tag in ("base", "shared"):
+        r = ms[tag]
+        rows.append(csv_row(
+            f"continuous_batching/share_{tag}", r["wall"] * 1e6,
+            f"tok_per_s={r['tok_per_s']:.1f};blocks={r['blocks']};"
+            f"hits={r['hits']};ttft_sharers_s={r['ttft_sharers']:.3f}"))
+    agree = (ms["agreement"] and ms["fallback_parity"]
+             and ms["offload_parity"])
+    rows.append(csv_row(
+        "continuous_batching/share_dedup", 0.0,
+        f"block_ratio="
+        f"{ms['shared']['blocks'] / max(ms['base']['blocks'], 1):.3f};"
+        f"ttft_ratio={ms['shared']['ttft_sharers'] / max(ms['base']['ttft_sharers'], 1e-9):.3f};"
+        f"token_parity={'ok' if agree else 'MISMATCH'}"))
     return rows

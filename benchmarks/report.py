@@ -117,6 +117,37 @@ def render_bench_trajectory(paths: list) -> None:
                   f"| {'ok' if par else '✗' if par is not None else '-'} "
                   f"| {'ok' if adm else '✗' if adm is not None else '-'} |")
 
+    share_rows = [(os.path.basename(p), rec)
+                  for _, p, payload in records
+                  for rec in payload.get("results", [])
+                  if rec.get("share")]
+    if share_rows:
+        print("\n### Prefix-sharing trajectory (block/TTFT ratios lower "
+              "is better; parity must hold)\n")
+        print("| file | benchmark | requests | blocks (share/noshare) | "
+              "block ratio | shared hits | TTFT ratio | agreement | "
+              "fallback | offload |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for name, rec in share_rows:
+            s = rec["share"]
+            bcr = rec.get("block_cost_ratio_share_over_noshare")
+            ttr = rec.get("ttft_sharers_ratio_share_over_noshare")
+
+            def flag(key):
+                v = rec.get(key)
+                return "ok" if v else "✗" if v is not None else "-"
+
+            print(f"| {name} | {rec['benchmark']} "
+                  f"| {rec.get('n_requests', '-')} "
+                  f"| {s.get('blocks_consumed_share', '-')}"
+                  f"/{s.get('blocks_consumed_noshare', '-')} "
+                  f"| {f'{bcr:.2f}' if bcr is not None else '-'} "
+                  f"| {s.get('shared_block_hits', '-')} "
+                  f"| {f'{ttr:.2f}' if ttr is not None else '-'} "
+                  f"| {flag('token_agreement_share_vs_noshare')} "
+                  f"| {flag('token_parity_share_fallback')} "
+                  f"| {flag('token_parity_share_offload')} |")
+
     path_rows = [(os.path.basename(p), rec)
                  for _, p, payload in records
                  for rec in payload.get("results", [])
@@ -138,6 +169,9 @@ def render_bench_trajectory(paths: list) -> None:
                   f"| {rec.get('meta_bytes_ratio', '-')}x "
                   f"| {'ok' if ident else '✗' if ident is not None else '-'} "
                   f"|")
+
+    print("\nMetric definitions, gate semantics, and baseline-refresh "
+          "instructions: [docs/benchmarks.md](docs/benchmarks.md)")
 
 
 # --------------------------------------------------------- dry-run table ---

@@ -123,6 +123,14 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     baseline. Offloaded-vs-resident token parity and the ≥256k
     admission flags (``offload_admits`` true / the device-resident pool
     *not* fitting the same budget) are baseline-free hard gates.
+
+    Records with ``share`` (block-granular prefix sharing, ISSUE 7) are
+    gated baseline-free on every host: generated tokens must be
+    bit-identical to the no-sharing engine (fused path, meta-view
+    fallback, and offloaded tier), the fresh-block cost ratio must stay
+    ≤ 0.6 (near-flat admission at the workload's 5× prefix dedup), and
+    the mean sharer TTFT ratio must stay ≤ 0.75 — all deterministic at
+    fixed seeds, so no committed reference is needed.
     """
     same_host = baseline.get("host") == payload.get("host")
     base_by_name = {r["benchmark"]: r for r in baseline.get("results", [])}
@@ -146,6 +154,30 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
                     f"{rec['benchmark']}: chunked prefill no longer cuts "
                     f"the solo path's decode stall or TTFT p99 by ≥2× "
                     f"({ratios})")
+        # prefix-sharing hard gates (ISSUE 7), baseline-free: the numbers
+        # are deterministic at fixed seeds (block counts, token bits), so
+        # they gate on every host with no committed reference
+        if rec.get("token_agreement_share_vs_noshare") is False:
+            failures.append(f"{rec['benchmark']}: sharing engine tokens "
+                            f"diverged from the no-sharing engine")
+        if rec.get("token_parity_share_fallback") is False:
+            failures.append(f"{rec['benchmark']}: sharing + meta-view "
+                            f"fallback tokens diverged")
+        if rec.get("token_parity_share_offload") is False:
+            failures.append(f"{rec['benchmark']}: sharing + offloaded "
+                            f"tier tokens diverged")
+        bcr = rec.get("block_cost_ratio_share_over_noshare")
+        if bcr is not None and bcr > 0.6:
+            failures.append(
+                f"{rec['benchmark']}: shared admission drew {bcr:.0%} of "
+                f"the no-sharing block cost (near-flat gate: ≤60% at this "
+                f"workload's 5× prefix dedup)")
+        ttr = rec.get("ttft_sharers_ratio_share_over_noshare")
+        if ttr is not None and ttr > 0.75:
+            failures.append(
+                f"{rec['benchmark']}: sharer TTFT ratio {ttr:.2f} > 0.75 — "
+                f"mapping the cached prefix no longer cuts time-to-first-"
+                f"token")
         # tiered-offload hard gates (ISSUE 6), baseline-free
         if rec.get("token_parity_offload_vs_resident") is False:
             failures.append(f"{rec['benchmark']}: offloaded engine tokens "

@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Docs hygiene gate (CI `docs` job): every relative markdown link in
+README.md and docs/ must resolve to a real file/anchor target, and every
+fenced ``python`` snippet in those pages must at least compile.
+
+Stdlib only — no markdown parser dependency. Two checks:
+
+1. **Links** — inline ``[text](target)`` links whose target carries no
+   scheme (``http://``, ``https://``, ``mailto:``) are resolved relative
+   to the page (or the repo root for absolute-style ``/`` paths) and must
+   exist on disk. ``#fragment`` suffixes are checked against the target
+   page's headings (GitHub slug rules: lowercase, spaces → dashes,
+   punctuation dropped). External URLs are *not* fetched: CI must not
+   flake on the network.
+
+2. **Snippets** — fenced code blocks tagged ``python`` are compiled with
+   :func:`compile` (syntax only, nothing executes). Blocks tagged
+   ``python no-check`` are skipped — for deliberately elided fragments.
+   Shell/text/json fences are ignored.
+
+Exit status 0 = clean; 1 = any dead link or broken snippet, each
+reported as ``file:line: message``.
+
+Usage::
+
+    python scripts/check_docs.py [page.md ...]   # default: README.md docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^(\s*)```(\w*)([^\n]*)$")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: strip markdown emphasis/code marks,
+    lowercase, drop punctuation, spaces → dashes."""
+    text = re.sub(r"[`*_]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set:
+    out = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = _HEADING.match(line)
+        if m:
+            out.add(_slug(m.group(1)))
+    return out
+
+
+def _check_links(page: Path, errors: list) -> None:
+    in_fence = False
+    for ln, line in enumerate(page.read_text(encoding="utf-8").splitlines(),
+                              start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in _LINK.findall(line):
+            if _SCHEME.match(target):
+                continue                      # external URL: not fetched
+            raw, _, frag = target.partition("#")
+            if not raw:                       # same-page #fragment
+                dest = page
+            else:
+                base = ROOT if raw.startswith("/") else page.parent
+                dest = (base / raw.lstrip("/")).resolve()
+                if not dest.exists():
+                    errors.append(f"{page.relative_to(ROOT)}:{ln}: "
+                                  f"dead link ({target})")
+                    continue
+            if frag and dest.suffix == ".md":
+                if _slug(frag) not in _anchors(dest):
+                    errors.append(f"{page.relative_to(ROOT)}:{ln}: "
+                                  f"missing anchor ({target})")
+
+
+def _check_snippets(page: Path, errors: list) -> None:
+    lines = page.read_text(encoding="utf-8").splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m or not m.group(2):
+            i += 1
+            continue
+        lang, attrs = m.group(2).lower(), m.group(3)
+        start, body = i + 1, []
+        i += 1
+        while i < len(lines) and not lines[i].lstrip().startswith("```"):
+            body.append(lines[i])
+            i += 1
+        i += 1                                # closing fence
+        if lang != "python" or "no-check" in attrs:
+            continue
+        src = "\n".join(body) + "\n"
+        try:
+            compile(src, f"{page}:{start}", "exec")
+        except SyntaxError as e:
+            errors.append(f"{page.relative_to(ROOT)}:{start + (e.lineno or 1) - 1}: "
+                          f"snippet does not compile ({e.msg})")
+
+
+def main(argv: list) -> int:
+    pages = [Path(a).resolve() for a in argv] if argv else (
+        [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md")))
+    errors: list = []
+    for page in pages:
+        if not page.exists():
+            errors.append(f"{page}: page not found")
+            continue
+        _check_links(page, errors)
+        _check_snippets(page, errors)
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"checked {len(pages)} page(s): "
+          f"{'FAILED, ' + str(len(errors)) + ' problem(s)' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

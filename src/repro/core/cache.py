@@ -653,6 +653,41 @@ def bucket_hist_from_meta(meta_ids: jax.Array, regions: CacheRegions,
                               cfg.num_centroids())
 
 
+def bucket_hist_from_paged_meta(pool: PagedLayerKVCache, bt_row: jax.Array,
+                                enc_end: jax.Array, cfg: ParisKVConfig
+                                ) -> jax.Array:
+    """Rebuild one slot's bucket histogram from *pool* metadata over
+    [sink, enc_end), addressed through its block-table row.
+
+    The shared-prefix admission path (ISSUE 7) needs this: a slot that
+    maps already-cached blocks into its table never runs a fill pass over
+    them, so its incremental histogram cannot be built up chunk by chunk
+    — it is derived here from the shared blocks' metadata (written by the
+    donor's prefill/fill, final thereafter) in one amortized pass, the
+    paged twin of :func:`bucket_hist_from_meta`. Works on resident and
+    tiered pools alike (both keep metadata full-size on device), and on
+    stacked (leading stage-repeat axis) or per-layer leaves.
+
+    bt_row: (nblk,) int32, entries < 0 = unallocated (excluded);
+    enc_end: traced scalar — the region boundary ``fill_enc_end(f)`` of
+    the shared frontier. → (..., G, B, 2^m) int32, dtype-ready for the
+    ``hist`` cache entry."""
+    from repro.core import retrieval as R
+    bs = paged_block_size(pool)
+    nm = paged_meta_blocks(pool)
+    nblk = bt_row.shape[0]
+    lidx = jnp.arange(nblk * bs)
+    pb = bt_row[lidx // bs]
+    phys = jnp.clip(pb, 0, nm - 1) * bs + lidx % bs
+    lead = pool.meta_ids.shape[:-4]
+    G, B = pool.meta_ids.shape[-3], pool.meta_ids.shape[-1]
+    flat = jnp.moveaxis(pool.meta_ids, -2, -3).reshape(
+        lead + (nm * bs, G, B))
+    ids = jnp.moveaxis(flat[..., phys, :, :], -2, -3)   # (..., G, n, B)
+    valid = (lidx >= cfg.sink_size) & (lidx < enc_end) & (pb >= 0)
+    return R.bucket_histogram(ids, valid, cfg.num_centroids())
+
+
 def paged_promote_rows_hist(pool: PagedLayerKVCache, hist: jax.Array,
                             block_tables: jax.Array, starts: jax.Array,
                             mask: jax.Array, cfg: ParisKVConfig,
@@ -750,7 +785,13 @@ def paged_clear_blocks(pool: PagedLayerKVCache,
                        phys_blocks: jax.Array) -> PagedLayerKVCache:
     """Zero the given physical blocks (eviction hygiene; correctness never
     depends on it — masks stop stale reads — but it keeps reclaimed blocks
-    from leaking a tenant's K/V into debug dumps)."""
+    from leaking a tenant's K/V into debug dumps).
+
+    With prefix sharing (ISSUE 7) a block may be referenced by several
+    slots' tables: callers must pass only blocks whose refcount reached 0
+    (the engine's ``_decref_blocks``), padding the rest of the row with
+    out-of-range sentinels — zeroing a still-shared block would corrupt
+    every surviving holder's prefix."""
     def z(a):
         return a.at[:, phys_blocks].set(0, mode="drop")
     return PagedLayerKVCache(k=z(pool.k), v=z(pool.v),
@@ -915,7 +956,9 @@ def tiered_clear_blocks(pool: PagedLayerKVCache, meta_blocks: jax.Array,
                         stag_blocks: jax.Array) -> PagedLayerKVCache:
     """Eviction hygiene for a tiered pool: zero the slot's *host* blocks
     on the meta leaves and its *staging* blocks on the K/V leaves (the
-    two id spaces differ, unlike :func:`paged_clear_blocks`)."""
+    two id spaces differ, unlike :func:`paged_clear_blocks`). The same
+    refcount contract applies under prefix sharing: both id lists must
+    contain only blocks no surviving slot still maps."""
     def z(a, ids):
         return a.at[:, ids].set(0, mode="drop")
     return pool._replace(

@@ -15,6 +15,19 @@ histogram keys over the 2^m buckets, (2) rank the ≤256 buckets by proxy
 score, (3) convert each bucket's cumulative key-count position into a tier
 weight, and (4) look the weight up per key. Cost: O(2^m log 2^m + n) instead
 of O(n log n).
+
+On the fused paged path the per-step histogram in (1) is never recomputed
+— it lives as per-(slot, G, B) cache state with exactly four writers
+(``core.cache`` owns them all): built once at admission
+(``bucket_hist_from_meta`` from a solo prefill's metadata, or
+``bucket_hist_from_paged_meta`` through the block table when a
+shared-prefix admission maps already-cached blocks that never see a fill
+pass), incremented O(U) at each sliding-window promotion
+(``paged_promote_rows_hist``), advanced per chunked-fill step for the
+region growth (``paged_fill_hist_update``), and zeroed at eviction. The
+invariant ``hist == bucket_histogram(ids, [sink, enc_end))`` holds at
+every step (tests/test_paged_fused.py, test_chunked_prefill.py,
+test_prefix_sharing.py).
 """
 from __future__ import annotations
 

@@ -33,6 +33,14 @@ prefix, inside the same stage scans as the decode rows — ending prefill
 head-of-line blocking. The first token is emitted the step a fill
 completes; the solo path survives as ``prefill_budget=0`` and is
 token-identical (tests/test_chunked_prefill.py).
+
+Chunked prefill is also the substrate for **block-granular prefix
+sharing** (ISSUE 7): ``admit_fill(fill_start=...)`` starts a fill past a
+prefix the serving engine mapped from its pool-level prefix index,
+deriving the slot's histograms from the shared blocks' metadata
+(``bucket_hist_from_paged_meta``). ``share_support_reason`` gates the
+feature to all-ParisKV-attention architectures — sliding-window layers
+keep slot-local ring buffers a mapped prefix cannot populate.
 """
 from __future__ import annotations
 
@@ -697,6 +705,34 @@ def fill_supported(cfg: ModelConfig) -> bool:
     return fill_support_reason(cfg) is None
 
 
+def share_support_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why block-granular prefix sharing canNOT serve this architecture,
+    or None when it can (ISSUE 7). Sharing maps already-cached *pool*
+    blocks into a new slot's table and skips the fill over them, so every
+    layer's prompt-position state must live in the shared pool: chunked
+    prefill must be supported (the unshared suffix fills through the
+    table) and every attention layer must be a ParisKV layer — a
+    sliding-window ring buffer is *slot-local*, so a slot that skipped
+    the prefix fill would face an empty ring where the donor's window
+    should be."""
+    r = fill_support_reason(cfg)
+    if r is not None:
+        return r
+    name = getattr(cfg, "name", cfg.family)
+    for si, stage in enumerate(layer_plan(cfg)):
+        for i, ld in enumerate(stage.layers):
+            if not ld.use_pariskv:
+                return (f"config {name!r}: stage {si} layer {i} caches its "
+                        f"window in a slot-local ring buffer, which a "
+                        f"shared prefix cannot populate (ParisKV-attention "
+                        f"layers only)")
+    return None
+
+
+def share_supported(cfg: ModelConfig) -> bool:
+    return share_support_reason(cfg) is None
+
+
 def offload_support_reason(cfg: ModelConfig) -> Optional[str]:
     """Why the tiered host-offloaded pool canNOT serve this architecture,
     or None when it can. The tiered pool pages exactly what
@@ -1106,8 +1142,8 @@ def _pool_block_size(caches) -> int:
     raise ValueError("no PagedLayerKVCache leaf in caches")
 
 
-def admit_fill(state: SlotState, slot, prompt_row, length, max_new
-               ) -> SlotState:
+def admit_fill(state: SlotState, slot, prompt_row, length, max_new,
+               fill_start=None, bt_row=None, pcfg=None) -> SlotState:
     """Admit a request for **chunked prefill**: copy its prompt into the
     slot's device buffer and arm the fill state — no forward pass happens
     here; decode_chunk's mixed steps consume the prompt ``prefill_budget``
@@ -1118,20 +1154,52 @@ def admit_fill(state: SlotState, slot, prompt_row, length, max_new
     incremental histograms are zeroed (a re-admitted slot starts counting
     from an empty retrieval region; eviction already zeroes, this keeps
     the invariant independent of the previous tenant's exit path). Jit
-    with the state donated — the fill twin of ``_admit_impl``."""
-    caches = [
-        {ln: {key: (val.at[:, slot].set(0) if key == "hist" else val)
-              for key, val in lc.items()}
-         for ln, lc in stage_cache.items()}
-        for stage_cache in state.caches]
+    with the state donated — the fill twin of ``_admit_impl``.
+
+    **Shared-prefix admission** (ISSUE 7): ``fill_start`` (traced scalar)
+    starts the fill frontier past a block-granular prefix the engine
+    already mapped into the slot's block table — the fill then writes
+    only the unshared suffix ``[fill_start, length)``. The regions open
+    exactly where a fill that had written those tokens itself would
+    stand (``pos = fill_start - 1``, ``enc_end = fill_enc_end``), and the
+    slot's histogram is *derived from the shared blocks' metadata*
+    (``bucket_hist_from_paged_meta`` over ``bt_row``, which therefore
+    must carry the shared mappings, -1 elsewhere) instead of zeroed —
+    shared blocks arrive without any fill pass to count them. A traced
+    ``fill_start`` of 0 reproduces the unshared path bit-for-bit (empty
+    region → zero histogram), so one compiled shape serves both."""
+    if fill_start is None:
+        f0 = jnp.int32(0)
+        caches = [
+            {ln: {key: (val.at[:, slot].set(0) if key == "hist" else val)
+                  for key, val in lc.items()}
+             for ln, lc in stage_cache.items()}
+            for stage_cache in state.caches]
+        pos0, enc0 = jnp.int32(-1), jnp.int32(0)
+    else:
+        assert bt_row is not None and pcfg is not None, \
+            "shared-prefix admission needs the slot's block-table row + pcfg"
+        f0 = jnp.asarray(fill_start, jnp.int32)
+        pos0 = f0 - 1
+        enc0 = CC.fill_enc_end(f0, pcfg)
+
+        def hist_row(val, kv):
+            h = CC.bucket_hist_from_paged_meta(kv, bt_row, enc0, pcfg)
+            return val.at[:, slot].set(h.astype(val.dtype))
+
+        caches = [
+            {ln: {key: (hist_row(val, lc["kv"]) if key == "hist" else val)
+                  for key, val in lc.items()}
+             for ln, lc in stage_cache.items()}
+            for stage_cache in state.caches]
     return SlotState(
         caches=caches,
         regions=CC.CacheRegions(
-            pos=state.regions.pos.at[slot].set(-1),
-            enc_end=state.regions.enc_end.at[slot].set(0)),
+            pos=state.regions.pos.at[slot].set(pos0),
+            enc_end=state.regions.enc_end.at[slot].set(enc0)),
         cur_tok=state.cur_tok.at[slot].set(0),
         remaining=state.remaining.at[slot].set(max_new),
-        fill_pos=state.fill_pos.at[slot].set(0),
+        fill_pos=state.fill_pos.at[slot].set(f0),
         fill_len=state.fill_len.at[slot].set(length),
         prompt=jax.lax.dynamic_update_slice(
             state.prompt, prompt_row[None].astype(jnp.int32), (slot, 0)))

@@ -68,6 +68,27 @@ kept for A/B and bisection; ``benchmarks/bench_kernels.py`` measures the
 gap. The two are token-identical whenever ``pariskv.hist_sample == 0``
 (the default).
 
+``share_prefixes=True`` (paged engines, requires ``prefill_budget > 0``)
+turns on **block-granular prefix sharing with copy-on-write** (ISSUE 7):
+full prompt blocks are content-hashed (a chained hash per
+``block_size``-token chunk, so a block's identity covers everything
+before it), registered in a pool-level ``prefix_index`` when their fill
+completes, and mapped — not copied — into later admissions' block tables
+with a per-block refcount. ``admit_fill`` then starts the fill frontier
+past the shared prefix and chunk-fills only the unshared suffix; the
+block holding the last prompt token is never shared, so every write a
+slot performs (suffix fill, decode appends) lands in private blocks —
+copy-on-write by construction, no fault path needed. Reclamation is
+refcounted end to end: eviction/cancel/finish decrement, and a block is
+zeroed + returned to the free list (and dropped from the index) only at
+refcount 0; backpressure reservation counts only the *unshared* blocks a
+request will actually consume. A fleet sharing an 8k system prompt costs
+one set of prefix blocks plus one suffix fill per request — near-flat
+block cost and TTFT cut by ~the shared fraction, token-identical to the
+no-sharing path (tests/test_prefix_sharing.py pins fused/fallback and
+resident/offloaded; ``benchmarks/bench_continuous_batching.py``'s
+``prefix_sharing`` scenario gates all three claims in CI).
+
 ``WaveServingEngine`` preserves the previous lockstep wave scheduler
 (padded-batch prefill, whole-wave decode) as a baseline for
 ``benchmarks/bench_continuous_batching.py``. Its timing is wave-level by
@@ -75,12 +96,14 @@ construction and documented as such.
 
 Deferred (ROADMAP · Open items): chunked prefill for SSM/MLA/cross
 mixers (attention-only architectures today), paged MLA latent caches,
-and non-greedy sampling.
+non-greedy sampling, and cross-run prefix persistence (the prefix index
+only retains blocks some live request still holds).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 from typing import Deque, Dict, List, Optional
 
@@ -112,6 +135,8 @@ class Request:
     fetched_bytes: int = 0       # K+V bytes moved host → device on demand
     prefetched_blocks: int = 0   # blocks speculatively staged for this req
     prefetch_hits: int = 0       # prefetched blocks referenced next chunk
+    # prefix-sharing observability (ISSUE 7; zero unless share_prefixes):
+    shared_prefix_blocks: int = 0  # already-cached blocks mapped, not filled
     # engine-internal:
     _tokens: Optional[list] = None
     _t_admit: float = 0.0
@@ -409,6 +434,7 @@ class ServingEngine:
                 req._t_first = t_now
                 if self._filling == slot:
                     self._filling = None
+                    self._fill_complete(slot, req)
             self._after_collect(slot, req)
             if rem_after[slot] <= 0:
                 self._finish_request(req, t_now)
@@ -419,6 +445,10 @@ class ServingEngine:
 
     def _after_collect(self, slot: int, req: Request) -> None:
         """Hook: host-side position tracking (paged allocator)."""
+
+    def _fill_complete(self, slot: int, req: Request) -> None:
+        """Hook: a chunked fill just finished — the slot's prompt blocks
+        are fully written and immutable (paged sharing registers them)."""
 
     def step_serve(self) -> None:
         """One serving round: cancellations → admission → one decode chunk
@@ -467,6 +497,20 @@ class PagedServingEngine(ServingEngine):
         along with its incremental-histogram rows — including mid-fill
         eviction via ``cancel()``.
 
+    ``share_prefixes=True`` (requires ``prefill_budget > 0``; ParisKV-
+    attention-only architectures — ``models.serve.share_supported``) adds
+    **block-granular prefix sharing** (ISSUE 7): completed prompt blocks
+    register in a chained-content-hash ``prefix_index``, later
+    admissions map matching blocks straight into their table (refcount++,
+    no fill pass — histograms rebuild from the shared blocks' metadata),
+    and only the unshared suffix chunk-fills. The block holding the last
+    prompt token stays private (it takes the fill's final tokens and the
+    decode appends — copy-on-write by construction), and a shared block
+    is zeroed/freed only when its refcount hits 0. Backpressure
+    reservation counts only the blocks an admission will actually draw
+    from the pool, so a fleet sharing one system prompt admits at
+    near-flat block cost.
+
     ``offload=True`` (with ``num_device_blocks`` / ``prefetch`` /
     ``prefetch_hook``) constructs an :class:`OffloadedPagedServingEngine`
     instead: the full K/V pool moves to host memory and the device keeps
@@ -483,11 +527,21 @@ class PagedServingEngine(ServingEngine):
                  num_blocks: Optional[int] = None, greedy: bool = True,
                  use_pariskv: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, fused: bool = True,
-                 prefill_budget: int = 0, offload: bool = False):
+                 prefill_budget: int = 0, offload: bool = False,
+                 share_prefixes: bool = False):
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
             raise ValueError(f"n_max={n_max} must be a multiple of "
                              f"block_size={block_size}")
+        if share_prefixes:
+            if prefill_budget <= 0:
+                raise ValueError(
+                    "share_prefixes=True requires prefill_budget > 0: the "
+                    "shared prefix is *skipped* by the chunked fill, and "
+                    "solo prefill has no way to resume past it")
+            reason = SV.share_support_reason(cfg)
+            if reason is not None:
+                raise ValueError(f"prefix sharing unavailable — {reason}")
         super().__init__(cfg, params, n_max=n_max, max_batch=max_batch,
                          greedy=greedy, use_pariskv=True,
                          chunk_size=chunk_size, eos_id=eos_id,
@@ -515,6 +569,15 @@ class PagedServingEngine(ServingEngine):
                 st, slot, pb, c1, r1, t0, rem, pcfg=cfg.pariskv),
             donate_argnums=(0,))
         self._evict_fn = jax.jit(self._evict_impl, donate_argnums=(0,))
+        self.share_prefixes = share_prefixes
+        if share_prefixes:
+            # the shared twin of admit_fill: fill_start is *traced*, so
+            # one compiled shape serves hit and miss admissions alike
+            self._admit_fill_fn = jax.jit(
+                lambda st, slot, prow, ln, mn, bt, fs: SV.admit_fill(
+                    st, slot, prow, ln, mn, fill_start=fs, bt_row=bt,
+                    pcfg=cfg.pariskv),
+                donate_argnums=(0,))
 
         # host-side allocator state (deque: _take_block pops the head —
         # O(1), unlike list.pop(0)'s O(n) shuffle)
@@ -524,6 +587,15 @@ class PagedServingEngine(ServingEngine):
         self._pos: Dict[int, int] = {}           # slot → host view of pos
         self._need: Dict[int, int] = {}          # slot → total token budget
         self._bt = np.full((max_batch, self.nblk), -1, np.int32)
+        # prefix-sharing state (ISSUE 7). Refcounts are maintained even
+        # with sharing off (every block then holds exactly one reference)
+        # so there is a single reclamation path to get right.
+        self._refcnt: Dict[int, int] = {}        # phys block → live holders
+        self._prefix_index: Dict[bytes, int] = {}  # chained hash → block
+        self._block_hash: Dict[int, bytes] = {}  # reverse map (unregister)
+        self._fill_start: Dict[int, int] = {}    # slot → shared-prefix end
+        self.blocks_consumed = 0   # fresh blocks drawn from the pool (ever)
+        self.shared_block_hits = 0  # admissions served by mapping, not fill
 
     # ------------------------------------------------------------ helpers --
     def blocks_needed(self, req: Request) -> int:
@@ -570,6 +642,83 @@ class PagedServingEngine(ServingEngine):
         self._bt[slot, len(self._alloc[slot])] = blk
         self._alloc[slot].append(blk)
         self._resv[slot] -= 1
+        self._refcnt[blk] = 1
+        self.blocks_consumed += 1
+
+    # ------------------------------------------ prefix sharing (ISSUE 7) ---
+    def _chain_hashes(self, prompt) -> List[bytes]:
+        """Chained content hash per *shareable* full prompt block: block i
+        hashes its token ids together with block i-1's digest, so equal
+        hashes mean equal tokens AND equal preceding context — exactly
+        the condition under which the cached K/V is reusable. The block
+        containing the LAST prompt token is excluded: it must stay
+        private (the fill needs ≥ 1 token to produce first-token logits,
+        and decode appends may land in it — the copy-on-write tail)."""
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        bs = self.block_size
+        out: List[bytes] = []
+        h = b""
+        for i in range((len(toks) - 1) // bs):
+            h = hashlib.sha256(h + toks[i * bs:(i + 1) * bs].tobytes()
+                               ).digest()
+            out.append(h)
+        return out
+
+    def _lookup_shared(self, req: Request) -> List[int]:
+        """Longest already-cached prefix of the request's shareable
+        blocks, as physical block ids (possibly empty)."""
+        blocks: List[int] = []
+        for hh in self._chain_hashes(req.prompt):
+            blk = self._prefix_index.get(hh)
+            if blk is None:
+                break
+            blocks.append(blk)
+        return blocks
+
+    def _map_shared(self, slot: int, blk: int) -> None:
+        """Map an already-cached block into the slot's table: refcount++,
+        no pool draw — the reservation made for it is released."""
+        self._bt[slot, len(self._alloc[slot])] = blk
+        self._alloc[slot].append(blk)
+        self._resv[slot] -= 1
+        self._refcnt[blk] += 1
+        self.shared_block_hits += 1
+
+    def _decref_blocks(self, slot: int) -> List[int]:
+        """Drop the slot's references; return the blocks that died (their
+        last holder left — only these may be zeroed/freed/unindexed)."""
+        dead: List[int] = []
+        for blk in self._alloc.get(slot, ()):
+            self._refcnt[blk] -= 1
+            if self._refcnt[blk] == 0:
+                del self._refcnt[blk]
+                hh = self._block_hash.pop(blk, None)
+                if hh is not None:
+                    self._prefix_index.pop(hh, None)
+                dead.append(blk)
+        return dead
+
+    def _dead_row(self, dead: List[int]) -> jnp.ndarray:
+        """Refcount-0 blocks as an eviction row (same (nblk,) shape as
+        ``_phys_row`` — one `_evict_fn` compile serves both), padded with
+        out-of-range sentinels so still-shared blocks are never zeroed."""
+        phys = np.full((self.nblk,), self.num_blocks, np.int32)
+        phys[:len(dead)] = dead
+        return jnp.asarray(phys)
+
+    def _fill_complete(self, slot: int, req: Request) -> None:
+        """Register the finished fill's shareable blocks in the prefix
+        index (first writer wins; a sharer re-registering its mapped
+        prefix is a no-op). Until now the blocks were partially written —
+        registering at completion is what keeps a concurrent identical
+        prompt from mapping garbage."""
+        if not self.share_prefixes:
+            return
+        for i, hh in enumerate(self._chain_hashes(req.prompt)):
+            blk = int(self._bt[slot, i])
+            if hh not in self._prefix_index:
+                self._prefix_index[hh] = blk
+                self._block_hash[blk] = hh
 
     def _ensure_blocks(self, slot: int) -> None:
         """Lazy allocation: before a chunk, give ``slot`` every block its
@@ -592,20 +741,38 @@ class PagedServingEngine(ServingEngine):
     def _reserve_blocks(self, slot: int, req: Request) -> None:
         """Worst-case block reservation + upfront allocation of the
         prompt's blocks (both admission paths write the whole prompt —
-        solo in one scatter, chunked through the table from step one)."""
+        solo in one scatter, chunked through the table from step one).
+
+        With prefix sharing, already-cached prefix blocks are *mapped*
+        first (refcount++, no pool draw — their reservation is released
+        on the spot), then only the unshared prompt blocks are taken;
+        ``_fill_start[slot]`` records where the chunked fill resumes."""
         self._alloc[slot] = []
         self._resv[slot] = self.blocks_needed(req)
         self._pos[slot] = len(req.prompt) - 1
         self._need[slot] = len(req.prompt) + req.max_new_tokens
-        for _ in range(-(-len(req.prompt) // self.block_size)):
+        shared = self._lookup_shared(req) if self.share_prefixes else []
+        for blk in shared:
+            self._map_shared(slot, blk)
+        self._fill_start[slot] = len(shared) * self.block_size
+        req.shared_prefix_blocks = len(shared)
+        for _ in range(-(-len(req.prompt) // self.block_size) - len(shared)):
             self._take_block(slot)
 
-    def _release_host(self, slot: int) -> None:
-        """Return the slot's blocks to the free list, clear its table."""
-        self._free.extend(self._alloc.pop(slot))
+    def _release_host(self, slot: int,
+                      dead: Optional[List[int]] = None) -> None:
+        """Drop the slot's block references and return the *dead* ones
+        (refcount 0 — ``dead``, or computed here) to the free list; a
+        block some other slot still maps survives in place, index entry
+        and all, until its last holder exits."""
+        if dead is None:
+            dead = self._decref_blocks(slot)
+        self._alloc.pop(slot, None)
+        self._free.extend(dead)
         self._resv.pop(slot, None)
         self._pos.pop(slot, None)
         self._need.pop(slot, None)
+        self._fill_start.pop(slot, None)
         self._bt[slot] = -1
 
     # ------------------------------------------- loop phases (overrides) ----
@@ -615,14 +782,21 @@ class PagedServingEngine(ServingEngine):
             self.n_max, prefill_budget=self.prefill_budget)
 
     def _evict_device(self, slot: int) -> None:
-        """Cancel path: freeze the slot, zero + reclaim its blocks/hist."""
+        """Cancel path: freeze the slot, zero + reclaim its dead blocks
+        and hist row (still-shared blocks survive for their holders)."""
         self._state = self._cancel_fn(self._state, jnp.int32(slot))
-        self._state = self._evict_fn(self._state, self._phys_row(slot),
+        dead = self._decref_blocks(slot)
+        self._state = self._evict_fn(self._state, self._dead_row(dead),
                                      jnp.int32(slot))
-        self._release_host(slot)
+        self._release_host(slot, dead=dead)
 
     def _can_admit(self) -> bool:
-        return self.blocks_needed(self.queue[0]) <= self.free_blocks
+        need = self.blocks_needed(self.queue[0])
+        if self.share_prefixes:
+            # shared prefix blocks are mapped, never drawn from the pool —
+            # the head only waits for the blocks it will actually consume
+            need -= len(self._lookup_shared(self.queue[0]))
+        return need <= self.free_blocks
 
     def _pre_admit(self, slot: int, req: Request) -> None:
         self._reserve_blocks(slot, req)
@@ -652,15 +826,36 @@ class PagedServingEngine(ServingEngine):
         self._pos[slot] = (len(req.prompt) - 1
                            + max(0, len(req._tokens) - 1))
 
+    def _admit_chunked(self, slot: int, req: Request) -> None:
+        """Sharing: admit with the fill frontier past the mapped prefix —
+        the block-table row (with its -1 sentinels) rides along so the
+        slot's histogram can rebuild from the shared blocks' metadata."""
+        if not self.share_prefixes:
+            return super()._admit_chunked(slot, req)
+        req._t_admit = time.perf_counter()
+        req._tokens, req.token_times = [], []
+        prow = np.zeros((self.n_max + self.prefill_budget,), np.int32)
+        prow[:len(req.prompt)] = req.prompt
+        self._state = self._admit_fill_fn(
+            self._state, jnp.int32(slot), jnp.asarray(prow),
+            jnp.int32(len(req.prompt)), jnp.int32(req.max_new_tokens),
+            jnp.asarray(self._bt[slot]),
+            jnp.int32(self._fill_start.get(slot, 0)))
+        self._slots[slot] = req
+        self._filling = slot
+
     def _release_slot(self, slot: int) -> None:
-        self._state = self._evict_fn(self._state, self._phys_row(slot),
+        dead = self._decref_blocks(slot)
+        self._state = self._evict_fn(self._state, self._dead_row(dead),
                                      jnp.int32(slot))
-        self._release_host(slot)
+        self._release_host(slot, dead=dead)
 
     def run(self) -> List[Request]:
         done = super().run()
         assert len(self._free) == self.num_blocks, \
             "block leak: allocator did not reclaim every block"
+        assert not self._refcnt and not self._prefix_index, \
+            "refcount leak: blocks still referenced after run"
         return done
 
 
@@ -713,7 +908,8 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                  eos_id: Optional[int] = None, fused: bool = True,
                  prefill_budget: int = 0, offload: bool = True,
                  num_device_blocks: Optional[int] = None,
-                 prefetch: bool = True, prefetch_hook=None):
+                 prefetch: bool = True, prefetch_hook=None,
+                 share_prefixes: bool = False):
         reason = SV.offload_support_reason(cfg)
         if reason is not None:
             raise ValueError(f"offloaded paged serving unavailable — "
@@ -722,7 +918,8 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                          block_size=block_size, num_blocks=num_blocks,
                          greedy=greedy, use_pariskv=use_pariskv,
                          chunk_size=chunk_size, eos_id=eos_id, fused=fused,
-                         prefill_budget=prefill_budget)
+                         prefill_budget=prefill_budget,
+                         share_prefixes=share_prefixes)
         self.num_device_blocks = (max(1, self.num_blocks // 4)
                                   if num_device_blocks is None
                                   else num_device_blocks)
@@ -1033,18 +1230,25 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         return toks, rem
 
     def _reclaim_slot(self, slot: int) -> None:
-        """Reclaim both tiers: staging slots freed (no write-back — the
-        data is dead), host blocks zeroed, device meta/hist cleared."""
-        hbs = np.asarray(self._alloc.get(slot, ()), np.int64)
+        """Reclaim both tiers — refcount-aware across them (ISSUE 7):
+        only blocks whose last holder just left have their staging slots
+        freed (no write-back — the data is dead), host copies zeroed, and
+        device metadata cleared. A still-shared block keeps all three:
+        its staging residency stays valid for the surviving holders (and
+        writes back through the normal recycle path — the block is
+        immutable, so the copy stays final), its host bytes are live, and
+        its device metadata feeds their retrieval."""
+        dead = self._decref_blocks(slot)
+        hbs = np.asarray(dead, np.int64)
         freed = (self.staging.release_host_blocks(hbs) if hbs.size else [])
         m = _bucket(max(len(freed), 1))
         spad = np.full((m,), self.num_device_blocks, np.int32)
         spad[:len(freed)] = freed
-        self._state = self._evict_fn(self._state, self._phys_row(slot),
+        self._state = self._evict_fn(self._state, self._dead_row(dead),
                                      jnp.asarray(spad), jnp.int32(slot))
         if hbs.size:
             self.host.zero_blocks(hbs)
-        self._release_host(slot)
+        self._release_host(slot, dead=dead)
 
     def _evict_device(self, slot: int) -> None:
         self._state = self._cancel_fn(self._state, jnp.int32(slot))

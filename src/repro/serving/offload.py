@@ -25,6 +25,17 @@ staging blocks. This module owns everything host-side:
   retrieval winner whose block was evicted simply comes back through
   the host fetch path — token-identical either way, which is what makes
   the prefetch policy a pure performance knob.
+
+With prefix sharing (ISSUE 7) a host block may be referenced by several
+slots' block tables at once. Refcounts live engine-side
+(``PagedServingEngine._refcnt``) and span both tiers: the engine calls
+:meth:`HostKVPool.zero_blocks` and :meth:`StagingMap.release_host_blocks`
+only with blocks whose refcount just hit zero, so a still-shared block
+keeps its host bytes and any staging residency when one of its holders
+exits. Full prompt blocks are immutable once filled (decode appends and
+the copy-on-write tail land in private blocks; promotion re-encodes
+metadata device-side only), so the staging → host write-back path stays
+valid no matter which holder triggers the recycle.
 """
 from __future__ import annotations
 
@@ -169,6 +180,9 @@ class HostKVPool:
         return self.k[name][:, host_blocks], self.v[name][:, host_blocks]
 
     def zero_blocks(self, host_blocks: np.ndarray) -> None:
+        """Scrub dead blocks' host bytes. Callers must pass only blocks
+        whose refcount hit zero — zeroing a still-shared block would
+        corrupt every other slot that maps it."""
         for name in self.k:
             self.k[name][:, host_blocks] = 0
             self.v[name][:, host_blocks] = 0
@@ -242,7 +256,9 @@ class StagingMap:
 
     def release_host_blocks(self, host_blocks) -> list:
         """Eviction/cancel path: free the staging slots owned by dead
-        host blocks (their data is dead — no write-back). Returns the
+        host blocks (their data is dead — no write-back). Callers must
+        pass only refcount-0 blocks; a still-shared block keeps its
+        staging slot so surviving holders read it resident. Returns the
         freed staging slot ids so the engine can zero them on device."""
         slots = []
         for hb in np.atleast_1d(host_blocks):

@@ -1,0 +1,289 @@
+"""Block-granular prefix sharing with copy-on-write (ISSUE 7): token
+identity vs non-shared admission (fused + fallback, resident + offload),
+refcount invariants under cancel/finish/readmit interleavings (a shared
+block survives until its last holder exits), tail-block privacy (the
+block holding the last prompt token is never shared), the fused-path
+``hist == recompute`` invariant across shared admissions, and the
+constructor-time gates (``prefill_budget`` required, ParisKV-attention
+architectures only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import retrieval as R
+from repro.core.cache import paged_meta_view, retrieval_valid_mask
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.serving import (OffloadedPagedServingEngine, PagedServingEngine,
+                           Request, ServingEngine)
+
+BS = 16                       # small blocks → many shareable prefix blocks
+
+
+def _workload(seed=7, n_shared=144, n_suffix=17, n_req=4):
+    """n_req prompts sharing an n_shared-token prefix with distinct
+    suffixes (n_shared spans several full blocks at block_size=16)."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, cfg.vocab_size, size=(n_shared,))
+    prompts = [np.concatenate(
+        [shared, rng.randint(0, cfg.vocab_size, size=(n_suffix,))]
+    ).astype(np.int32) for _ in range(n_req)]
+    return cfg, params, prompts
+
+
+def _run(cfg, params, prompts, *, share, gen=6, **kw):
+    kw.setdefault("n_max", 512)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("block_size", BS)
+    kw.setdefault("chunk_size", 4)
+    kw.setdefault("prefill_budget", 16)
+    eng = PagedServingEngine(cfg, params, share_prefixes=share, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+    done = {r.uid: r for r in eng.run()}
+    return eng, done
+
+
+# ------------------------------------------------------- token identity ----
+def test_share_token_identity_fused_and_fallback():
+    """Sharing is a pure capacity/latency optimisation: tokens are
+    bit-identical to the no-sharing paged engine and to the contiguous
+    solo-prefill engine, on both the fused path and the meta-view
+    fallback — while drawing strictly fewer fresh blocks."""
+    cfg, params, prompts = _workload()
+    solo = ServingEngine(cfg, params, n_max=512, max_batch=4, chunk_size=4)
+    for i, p in enumerate(prompts):
+        solo.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    ref = {r.uid: r for r in solo.run()}
+    for fused in (True, False):
+        base, t0 = _run(cfg, params, prompts, share=False, fused=fused)
+        eng, t1 = _run(cfg, params, prompts, share=True, fused=fused)
+        for uid in ref:
+            np.testing.assert_array_equal(
+                t1[uid].output, ref[uid].output,
+                err_msg=f"share vs solo, uid {uid} (fused={fused})")
+            np.testing.assert_array_equal(
+                t0[uid].output, ref[uid].output,
+                err_msg=f"noshare vs solo, uid {uid} (fused={fused})")
+        assert eng.shared_block_hits > 0
+        assert eng.blocks_consumed < base.blocks_consumed
+        assert len(eng._free) == eng.num_blocks   # full reclamation
+
+
+def test_share_backpressured_pool():
+    """A pool too small to hold every request concurrently still admits,
+    shares, and reclaims correctly under backpressure (the reservation
+    accounting must discount blocks served by mapping)."""
+    cfg, params, prompts = _workload()
+    base, t0 = _run(cfg, params, prompts, share=False)
+    # 144+17 tokens + 6 new → 11 blocks/request private; 24 total forces
+    # queuing while shared admissions keep mapping the cached prefix.
+    eng, t1 = _run(cfg, params, prompts, share=True, num_blocks=24,
+                   max_batch=2)
+    for uid in t0:
+        np.testing.assert_array_equal(t1[uid].output, t0[uid].output,
+                                      err_msg=f"uid {uid}")
+    assert eng.shared_block_hits > 0
+    assert len(eng._free) == eng.num_blocks
+
+
+# --------------------------------------------------- refcount invariants ----
+def test_refcount_survives_donor_exit_and_cancel():
+    """A shared block lives exactly as long as some holder maps it: the
+    donor finishing (or being cancelled) must not free blocks a sharer
+    still reads; a later request re-admitted against a surviving holder
+    still hits the index; at drain the index and refcounts are empty."""
+    cfg, params, prompts = _workload(n_req=3)
+    eng = PagedServingEngine(cfg, params, n_max=512, max_batch=2,
+                             block_size=BS, chunk_size=4, prefill_budget=16,
+                             share_prefixes=True)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=12))  # donor
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=48))  # sharer
+    eng.start()
+    saw_shared = readmitted = False
+    hits0 = 0
+    steps = 0
+    while eng.pending():
+        eng.step_serve()
+        steps += 1
+        assert steps < 500, "serving loop did not converge"
+        live = {r.uid for r in eng._slots if r is not None}
+        if {0, 1} <= live and any(v >= 2 for v in eng._refcnt.values()):
+            saw_shared = True
+        if not readmitted and saw_shared and live == {1} and not eng.queue:
+            # donor gone, sharer decoding: its shared prefix must survive
+            assert eng._prefix_index, "index dropped while a holder lives"
+            assert all(v == 1 for v in eng._refcnt.values())
+            # readmit against the surviving sharer → hits again
+            hits0 = eng.shared_block_hits
+            eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=2))
+            readmitted = True
+    done = {r.uid: r for r in eng._done}
+    assert saw_shared, "never observed a block with two holders"
+    assert readmitted, "donor never exited while the sharer decoded"
+    assert sorted(done) == [0, 1, 2]
+    assert eng.shared_block_hits > hits0, "readmission missed the index"
+    assert not eng._refcnt and not eng._prefix_index
+    assert len(eng._free) == eng.num_blocks
+
+    # cancel interleaving: cancelling one holder mid-decode leaves the
+    # other's blocks intact and token-identical to an unshared run
+    eng2 = PagedServingEngine(cfg, params, n_max=512, max_batch=2,
+                              block_size=BS, chunk_size=4, prefill_budget=16,
+                              share_prefixes=True)
+    eng2.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=20))
+    eng2.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=8))
+    eng2.start()
+    cancelled = False
+    steps = 0
+    while eng2.pending():
+        eng2.step_serve()
+        steps += 1
+        assert steps < 500
+        live = {r.uid for r in eng2._slots if r is not None}
+        if not cancelled and {0, 1} <= live and \
+                any(v >= 2 for v in eng2._refcnt.values()):
+            eng2.cancel(0)
+            cancelled = True
+    assert cancelled
+    done2 = {r.uid: r for r in eng2._done}
+    assert done2[0].cancelled
+    base, ref = _run(cfg, params, [prompts[1]], share=False, gen=8,
+                     max_batch=2)
+    np.testing.assert_array_equal(done2[1].output, ref[0].output)
+    assert not eng2._refcnt and len(eng2._free) == eng2.num_blocks
+
+
+def test_tail_block_private_copy_on_write():
+    """Even for bit-identical prompts, the block holding the last prompt
+    token stays private (copy-on-write by construction): the first
+    decode write lands in the holder's own block, never a shared one."""
+    cfg, params, _ = _workload()
+    rng = np.random.RandomState(3)
+    # 53 = 3 full blocks + 5: exactly 3 shareable, tail block private
+    prompt = rng.randint(0, cfg.vocab_size, size=(53,)).astype(np.int32)
+    eng = PagedServingEngine(cfg, params, n_max=256, max_batch=2,
+                             block_size=BS, chunk_size=4, prefill_budget=16,
+                             share_prefixes=True)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=20))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=20))
+    eng.start()
+    checked = False
+    steps = 0
+    while eng.pending():
+        eng.step_serve()
+        steps += 1
+        assert steps < 500
+        live = {r.uid for r in eng._slots if r is not None}
+        if {0, 1} <= live and np.asarray(eng._bt[1, 3]) >= 0 \
+                and eng.shared_block_hits >= 3 and not checked:
+            bt = np.asarray(eng._bt)
+            np.testing.assert_array_equal(bt[0, :3], bt[1, :3])
+            assert bt[0, 3] != bt[1, 3], "tail block was shared"
+            for blk in bt[0, :3]:
+                assert eng._refcnt[int(blk)] == 2
+            assert eng._refcnt[int(bt[0, 3])] == 1
+            assert eng._refcnt[int(bt[1, 3])] == 1
+            checked = True
+    assert checked, "never saw both holders live with the prefix mapped"
+    done = {r.uid: r for r in eng._done}
+    np.testing.assert_array_equal(done[0].output, done[1].output)
+    assert not eng._refcnt and len(eng._free) == eng.num_blocks
+
+
+# -------------------------------------------------------- hist invariant ----
+def _assert_hist_invariant(eng):
+    """Occupied slots' incremental histograms equal a from-scratch
+    recompute over the logical metadata view (same bar as
+    test_chunked_prefill, now with shared-prefix admissions whose hists
+    are *derived* from pool metadata rather than accumulated by fill)."""
+    occupied = [i for i, r in enumerate(eng._slots) if r is not None]
+    if not occupied:
+        return
+    bt = jnp.asarray(eng._bt)
+    n_log = eng.nblk * eng.block_size
+    regions = eng._state.regions
+    for si, stage_cache in enumerate(eng._state.caches):
+        for ln, lc in stage_cache.items():
+            if "hist" not in lc:
+                continue
+            for r in range(lc["hist"].shape[0]):
+                pool = jax.tree.map(lambda a: a[r], lc["kv"])
+                ids, _, _ = paged_meta_view(pool, bt)
+                valid = retrieval_valid_mask(n_log, regions,
+                                             eng.cfg.pariskv)
+                want = R.bucket_histogram(ids, valid[:, None, :],
+                                          eng.cfg.pariskv.num_centroids())
+                np.testing.assert_array_equal(
+                    np.asarray(lc["hist"][r])[occupied],
+                    np.asarray(want)[occupied],
+                    err_msg=f"hist invariant broke (stage {si} {ln} "
+                            f"repeat {r})")
+
+
+def test_hist_invariant_with_shared_admission():
+    """Step the sharing engine one mixed step at a time: after every
+    step — including the admissions whose histograms were rebuilt from
+    shared-block metadata via ``bucket_hist_from_paged_meta`` — each
+    occupied slot's histogram equals the recompute."""
+    cfg, params, prompts = _workload(n_shared=96, n_suffix=13, n_req=3)
+    eng = PagedServingEngine(cfg, params, n_max=256, max_batch=2,
+                             block_size=BS, chunk_size=1, prefill_budget=8,
+                             share_prefixes=True)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    eng.start()
+    steps = 0
+    while eng.pending():
+        eng.step_serve()
+        steps += 1
+        _assert_hist_invariant(eng)
+        assert steps < 800, "serving loop did not converge"
+    assert eng.shared_block_hits > 0      # invariant held *with* sharing
+
+
+# ----------------------------------------------------------- offload tier ----
+def test_offload_share_token_identity_and_refcount_safety():
+    """Refcounts span tiers: the offloaded engine with sharing emits the
+    resident no-sharing engine's exact tokens, never write-backs or
+    host-zeroes a still-shared block (run() asserts staging drained and
+    the pool restored), and ends with an empty index."""
+    cfg, params, prompts = _workload()
+    base, t0 = _run(cfg, params, prompts, share=False)
+    eng, t1 = _run(cfg, params, prompts, share=True, offload=True,
+                   num_device_blocks=12, num_blocks=64)
+    assert isinstance(eng, OffloadedPagedServingEngine)
+    for uid in t0:
+        np.testing.assert_array_equal(t1[uid].output, t0[uid].output,
+                                      err_msg=f"uid {uid}")
+    assert eng.shared_block_hits > 0
+    assert eng.blocks_consumed < base.blocks_consumed
+    assert not eng._refcnt and not eng._prefix_index
+
+
+# ------------------------------------------------------ constructor gates ----
+def test_share_requires_prefill_budget():
+    """Sharing skips the prefix during the chunked fill; solo prefill
+    cannot resume past it, so share_prefixes without a prefill budget is
+    a constructor-time error."""
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefill_budget"):
+        PagedServingEngine(cfg, params, n_max=128, max_batch=1,
+                           share_prefixes=True)
+
+
+def test_share_unsupported_arch_raises():
+    """Ring-buffer (sliding-window) layers cache slot-locally — a shared
+    prefix cannot populate them, so sharing is refused up front rather
+    than silently wrong."""
+    cfg = configs.smoke("gemma2-27b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    assert SV.share_support_reason(cfg) is not None
+    with pytest.raises(ValueError, match="ring buffer"):
+        PagedServingEngine(cfg, params, n_max=256, max_batch=1,
+                           prefill_budget=8, share_prefixes=True)
