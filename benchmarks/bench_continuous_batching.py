@@ -55,10 +55,22 @@ bit-identical to the no-sharing engine (fused, fallback, and offload),
 block cost must stay near-flat (ratio ≤ 0.6 at this workload's 5×
 dedup), and sharer TTFT must drop (ratio ≤ 0.75).
 
+Scenario 5 (ISSUE 8): **sharded serving on a device mesh** —
+``PagedServingEngine(mesh_shards=s)`` for s ∈ {1, 2, 4} at a *fixed
+per-device block budget* (``num_blocks = s × base``), the regime where
+adding shards adds pool capacity. Reported per shard count: tokens/s
+and peak admissible concurrency; the CI gates are baseline-free and
+deterministic — 4-shard peak concurrency must be ≥ 2× single-shard,
+and the 4-way-sharded engine's tokens must be bit-identical to the
+single-device engine at identical pool geometry. Runs on CPU only when
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` forced ≥ 4 host
+devices before jax initialised; otherwise the record is marked
+``skipped`` (never a silent pass — report.py shows the skip).
+
 ``run_smoke()`` returns the same numbers machine-readable — the CI
 benchmark job persists them as BENCH_ci.json and fails on >20% tokens/s
 regression vs the committed BENCH_continuous_batching.json baseline (and
-on the chunked-prefill + prefix-sharing gates above).
+on the chunked-prefill + prefix-sharing + sharded-serving gates above).
 """
 from __future__ import annotations
 
@@ -165,7 +177,7 @@ def run_smoke() -> list:
     record, the tiered-offload serving record, and the prefix-sharing
     record (benchmarks.run handles the list)."""
     return [_smoke_continuous(), run_smoke_mixed(), run_smoke_offload(),
-            run_smoke_share()]
+            run_smoke_share(), run_smoke_sharded()]
 
 
 def _smoke_continuous() -> dict:
@@ -383,6 +395,95 @@ def run_smoke_share() -> dict:
     }
 
 
+# ------------------------------------------- sharded serving mesh (ISSUE 8) --
+# Fixed per-device block budget: each shard contributes SH_BASE_BLOCKS
+# blocks of pool, so the s-shard engine runs num_blocks = s × base. The
+# workload's upfront block demand (17 blocks at block_size 64) exceeds
+# the 1-shard pool (6) but fits the 4-shard pool (24), so admissible
+# concurrency is pool-limited exactly where the scaling claim lives.
+# stablelm-smoke (4 KV heads) is the arch: 4 heads divide every mesh.
+SH_N_MAX = 256
+SH_BLOCK = 64
+SH_BASE_BLOCKS = 6
+SH_BATCH = 8
+SH_SHARDS = (1, 2, 4)
+
+
+def _sharded_skip_reason():
+    if jax.device_count() < max(SH_SHARDS):
+        return (f"needs {max(SH_SHARDS)} devices, have "
+                f"{jax.device_count()} — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{max(SH_SHARDS)} before importing jax")
+    return None
+
+
+def _run_sharded_engine(cfg, params, prompts, shards, num_blocks) -> dict:
+    engine = PagedServingEngine(
+        cfg, params, n_max=SH_N_MAX, max_batch=SH_BATCH,
+        block_size=SH_BLOCK, num_blocks=num_blocks, chunk_size=8,
+        mesh_shards=shards)
+
+    def once():
+        for i, ((_, gen), p) in enumerate(zip(WORKLOAD, prompts)):
+            engine.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+        t0 = time.perf_counter()
+        done = engine.run()
+        return done, time.perf_counter() - t0
+
+    once()                                      # warmup/compile
+    done, wall = once()
+    toks = sum(len(r.output) for r in done)
+    return dict(
+        wall=wall, tok_per_s=toks / wall,
+        peak=int(engine.peak_concurrency), num_blocks=num_blocks,
+        outputs={r.uid: np.asarray(r.output) for r in done})
+
+
+def _measure_sharded() -> dict:
+    cfg = configs.smoke("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = SyntheticLMStream(cfg.vocab_size, seed=4)
+    prompts = [stream.sequence(s) for s, _ in WORKLOAD]
+    scale = {s: _run_sharded_engine(cfg, params, prompts, s,
+                                    SH_BASE_BLOCKS * s)
+             for s in SH_SHARDS}
+    # parity at *identical* pool geometry: single-device vs 4-way mesh
+    ref = _run_sharded_engine(cfg, params, prompts, 1,
+                              SH_BASE_BLOCKS * max(SH_SHARDS))
+    hi = scale[max(SH_SHARDS)]
+    parity = all(np.array_equal(ref["outputs"][uid], hi["outputs"][uid])
+                 for uid in range(len(WORKLOAD)))
+    return dict(scale=scale, parity=parity, arch=cfg.name)
+
+
+def run_smoke_sharded() -> dict:
+    """The mesh-scaling record + its baseline-free CI gates: 4-shard
+    admissible concurrency ≥ 2× single-shard at fixed per-device block
+    budget, exact token parity vs the single-device engine."""
+    reason = _sharded_skip_reason()
+    if reason:
+        return {"benchmark": "sharded_serving", "sharded": True,
+                "skipped": True, "reason": reason}
+    m = _measure_sharded()
+    lo, hi = m["scale"][min(SH_SHARDS)], m["scale"][max(SH_SHARDS)]
+    return {
+        "benchmark": "sharded_serving",
+        "sharded": True,
+        "arch": m["arch"],
+        "block_size": SH_BLOCK,
+        "blocks_per_device": SH_BASE_BLOCKS,
+        "shards": {
+            str(s): {"tok_per_s": round(r["tok_per_s"], 2),
+                     "peak_concurrency": r["peak"],
+                     "num_blocks": r["num_blocks"]}
+            for s, r in m["scale"].items()},
+        "concurrency_ratio_4x_over_1x":
+            round(hi["peak"] / max(lo["peak"], 1), 4),
+        "token_parity_sharded_vs_single": bool(m["parity"]),
+    }
+
+
 # ------------------------------------------- mixed prefill+decode (ISSUE 5) --
 def _mixed_engines(cfg, params):
     """Solo vs chunked prefill, same slots/memory/chunking. The paged
@@ -547,4 +648,23 @@ def run() -> list:
         f"{ms['shared']['blocks'] / max(ms['base']['blocks'], 1):.3f};"
         f"ttft_ratio={ms['shared']['ttft_sharers'] / max(ms['base']['ttft_sharers'], 1e-9):.3f};"
         f"token_parity={'ok' if agree else 'MISMATCH'}"))
+
+    reason = _sharded_skip_reason()
+    if reason:
+        rows.append(csv_row("continuous_batching/sharded_skipped", 0.0,
+                            reason.replace(";", ",")))
+        return rows
+    msh = _measure_sharded()
+    for s, r in msh["scale"].items():
+        rows.append(csv_row(
+            f"continuous_batching/sharded_{s}x", r["wall"] * 1e6,
+            f"tok_per_s={r['tok_per_s']:.1f};peak={r['peak']};"
+            f"num_blocks={r['num_blocks']}"))
+    lo = msh["scale"][min(SH_SHARDS)]
+    hi = msh["scale"][max(SH_SHARDS)]
+    rows.append(csv_row(
+        "continuous_batching/sharded_scaling", 0.0,
+        f"conc_ratio_4x_over_1x={hi['peak'] / max(lo['peak'], 1):.2f};"
+        f"blocks_per_device={SH_BASE_BLOCKS};"
+        f"token_parity={'ok' if msh['parity'] else 'MISMATCH'}"))
     return rows

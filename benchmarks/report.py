@@ -148,6 +148,33 @@ def render_bench_trajectory(paths: list) -> None:
                   f"| {flag('token_parity_share_fallback')} "
                   f"| {flag('token_parity_share_offload')} |")
 
+    sharded_rows = [(os.path.basename(p), rec)
+                    for _, p, payload in records
+                    for rec in payload.get("results", [])
+                    if rec.get("sharded")]
+    if sharded_rows:
+        print("\n### Sharded-serving trajectory (fixed per-device block "
+              "budget; concurrency ratio ≥ 2.0x gates)\n")
+        print("| file | benchmark | shards | pool blocks | tok/s | "
+              "peak conc | conc ratio (4x/1x) | parity |")
+        print("|---|---|---|---|---|---|---|---|")
+        for name, rec in sharded_rows:
+            if rec.get("skipped"):
+                print(f"| {name} | {rec['benchmark']} | skipped "
+                      f"| - | - | - | - | - |")
+                continue
+            cr = rec.get("concurrency_ratio_4x_over_1x")
+            par = rec.get("token_parity_sharded_vs_single")
+            for s, m in sorted(rec.get("shards", {}).items(),
+                               key=lambda kv: int(kv[0])):
+                print(f"| {name} | {rec['benchmark']} | {s} "
+                      f"| {m.get('num_blocks', '-')} "
+                      f"| {m.get('tok_per_s', float('nan')):.1f} "
+                      f"| {m.get('peak_concurrency', '-')} "
+                      f"| {f'{cr:.2f}x' if cr is not None else '-'} "
+                      f"| {'ok' if par else '✗' if par is not None else '-'} "
+                      f"|")
+
     path_rows = [(os.path.basename(p), rec)
                  for _, p, payload in records
                  for rec in payload.get("results", [])

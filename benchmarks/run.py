@@ -131,6 +131,15 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     ≤ 0.6 (near-flat admission at the workload's 5× prefix dedup), and
     the mean sharer TTFT ratio must stay ≤ 0.75 — all deterministic at
     fixed seeds, so no committed reference is needed.
+
+    Records with ``sharded`` (mesh-sharded serving, ISSUE 8) are also
+    baseline-free: at a fixed per-device block budget the 4-shard
+    engine's peak admissible concurrency must be ≥ 2× the single-shard
+    engine's, and the 4-way-sharded tokens must be bit-identical to the
+    single-device engine at identical pool geometry. A record marked
+    ``skipped`` (fewer than 4 devices — the default CI smoke job) gates
+    nothing; the dedicated sharded-smoke job forces 4 host devices so
+    the gates actually run there.
     """
     same_host = baseline.get("host") == payload.get("host")
     base_by_name = {r["benchmark"]: r for r in baseline.get("results", [])}
@@ -178,6 +187,20 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
                 f"{rec['benchmark']}: sharer TTFT ratio {ttr:.2f} > 0.75 — "
                 f"mapping the cached prefix no longer cuts time-to-first-"
                 f"token")
+        # mesh-sharded serving hard gates (ISSUE 8), baseline-free:
+        # deterministic at fixed seeds and per-device block budget
+        if rec.get("sharded") and not rec.get("skipped"):
+            if rec.get("token_parity_sharded_vs_single") is False:
+                failures.append(
+                    f"{rec['benchmark']}: 4-way-sharded engine tokens "
+                    f"diverged from the single-device engine at identical "
+                    f"pool geometry")
+            cr = rec.get("concurrency_ratio_4x_over_1x")
+            if cr is not None and cr < 2.0:
+                failures.append(
+                    f"{rec['benchmark']}: 4-shard peak concurrency only "
+                    f"{cr:.2f}× single-shard (< 2.0× at fixed per-device "
+                    f"block budget — sharding no longer buys capacity)")
         # tiered-offload hard gates (ISSUE 6), baseline-free
         if rec.get("token_parity_offload_vs_resident") is False:
             failures.append(f"{rec['benchmark']}: offloaded engine tokens "

@@ -60,6 +60,17 @@ its block table and chunk-fills only its private suffix. Refcounted,
 copy-on-write, token-identical; the run reports fresh blocks consumed
 and shared-block hits.
 
+``--mesh-shards N`` (paged only) serves over an N-device mesh (ISSUE
+8): the block pool, retrieval metadata and histograms are partitioned
+across whole KV heads (N must divide the arch's ``num_kv_heads``),
+Stage I/II run shard-local, and the winners merge with one tiled
+per-head all_gather — tokens are bit-identical to the single-device
+engine. On CPU, force the devices before launch:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serve_longcontext.py \
+        --arch stablelm-1.6b --engine paged --mesh-shards 4
+
 Kernel interpret mode autodetects the platform (compile on TPU,
 interpret elsewhere); override with REPRO_PALLAS_INTERPRET=0|1.
 
@@ -112,9 +123,16 @@ def main():
     ap.add_argument("--shared-prefix-len", type=int, default=192,
                     help="--share-prefixes: common prefix length in "
                          "tokens (shareable span = full blocks only)")
+    ap.add_argument("--mesh-shards", type=int, default=1,
+                    help="paged: shard pool/metadata/histograms across "
+                         "this many devices on the KV-head axis (must "
+                         "divide num_kv_heads; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     if args.share_prefixes and args.engine != "paged":
         ap.error("--share-prefixes requires --engine paged")
+    if args.mesh_shards > 1 and args.engine != "paged":
+        ap.error("--mesh-shards requires --engine paged")
 
     cfg = configs.smoke(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -137,7 +155,8 @@ def main():
                 block_size=args.block_size, num_blocks=args.num_blocks,
                 fused=not args.no_fused,
                 prefill_budget=args.prefill_budget,
-                share_prefixes=args.share_prefixes, **kw)
+                share_prefixes=args.share_prefixes,
+                mesh_shards=args.mesh_shards, **kw)
         return ServingEngine(cfg, params, n_max=1024,
                              max_batch=args.requests, use_pariskv=use_pk,
                              prefill_budget=args.prefill_budget)

@@ -3,10 +3,19 @@
 Stage I  — coarse candidate generation by multi-tier subspace collisions.
 Stage II — RSQ-IP reranking of the candidates from 4-bit codes.
 
-This module is the *reference* (pure-jnp) implementation and the one used by
-the distributed serving path (XLA/GSPMD partitions it). ``repro.kernels``
-provides Pallas TPU kernels for the collision scan, bucket-top-k and fused
-rerank with identical semantics, validated against these functions.
+This module is the *reference* (pure-jnp) implementation and the one the
+**sharded serving path** runs shard-locally: every op here is independent
+per kv-head, so a call over a head-slice of the pool/metadata returns
+exactly that head-slice of the single-device result, bit for bit.
+``models.serve`` exploits that under ``jax.shard_map`` (a 1-D mesh whose
+axis partitions KV heads): each shard runs Stage I over its device-resident
+metadata slice and Stage II over its own candidates, and
+``retrieve_paged_fused_sharded`` reassembles the global result with one
+tiled per-head ``all_gather`` — a pure concatenation, no float reductions,
+so the merge is provably equivalent to single-device top-C
+(tests/test_sharded_serving.py). ``repro.kernels`` provides Pallas TPU
+kernels for the collision scan, bucket-top-k and fused rerank with
+identical semantics, validated against these functions.
 
 A crucial implementation point (matches the paper's "bucket-level" design):
 the tier weight is a property of the *centroid bucket*, not of the key — all
@@ -487,6 +496,34 @@ def retrieve_paged_fused(pool, block_tables: jax.Array, qt: QueryTransform,
         indices=top_idx, block_ids=safe_blk, offsets=off,
         phys_rows=phys_rows, scores=top_est,
         cand_indices=cand, coarse_scores=coarse)
+
+
+def retrieve_paged_fused_sharded(pool, block_tables: jax.Array,
+                                 qt: QueryTransform, counts: jax.Array,
+                                 enc_end: jax.Array, cfg: ParisKVConfig,
+                                 num_candidates: int, top_k: int,
+                                 axis_name: str,
+                                 bucket_select: bool = True,
+                                 use_kernels: bool = None
+                                 ) -> PagedRetrievalResult:
+    """Shard-local fused retrieval + global top-C merge, for use *inside*
+    ``jax.shard_map`` over a mesh axis that partitions KV heads.
+
+    ``pool``/``counts``/``qt`` carry this shard's head slice; block tables
+    and block numbering are replicated, so each shard's ``phys_rows``
+    already address the global (replicated) block space. Stage I and
+    Stage II run entirely shard-local via ``retrieve_paged_fused``; the
+    merge is a single tiled ``all_gather`` on the head axis of every
+    result leaf — a pure per-head concatenation with no float reductions,
+    hence bit-identical to the single-device call on the full pool
+    (every op in this module is per-head independent)."""
+    res = retrieve_paged_fused(pool, block_tables, qt, counts, enc_end,
+                               cfg, num_candidates, top_k,
+                               bucket_select=bucket_select,
+                               use_kernels=use_kernels)
+    return PagedRetrievalResult(*[
+        jax.lax.all_gather(leaf, axis_name, axis=1, tiled=True)
+        for leaf in res])
 
 
 def tiered_winner_rows(phys_rows: jax.Array, dev_map: jax.Array,

@@ -29,6 +29,27 @@ from repro.core.config import ParisKVConfig
 
 
 # ----------------------------------------------------------------- helpers --
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: the top-level ``jax.shard_map``
+    (``check_vma``) when this jax has it, ``jax.experimental.shard_map``
+    (``check_rep``) otherwise. Replication checking is disabled either
+    way — the serving specs mark replicated outputs that the checker's
+    static analysis cannot prove (e.g. values equalized by all_gather)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as esm
+    try:
+        return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    except TypeError:
+        return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def truncated_normal(key, shape, std=0.02, dtype=jnp.float32):
     return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
 
@@ -347,8 +368,8 @@ def distributed_retrieve_fetch(q_grp: jax.Array, layer_cache: C.LayerKVCache,
     out_specs = (P(ba, None, None, None),
                  P(ba, None, None, None, None),
                  P(ba, None, None, None, None))
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map_compat(local, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     b = q_grp.shape[0]
     pos_b = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,))
     enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
@@ -449,6 +470,106 @@ def attn_decode_pariskv_paged(p: dict, x_t: jax.Array,
         sm_scale=spec.scale(), softcap=spec.softcap,
         k_ret=k_ret, v_ret=v_ret)
     return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], pool
+
+
+def attn_decode_pariskv_paged_sharded(p: dict, x_t: jax.Array,
+                                      pool: C.PagedLayerKVCache,
+                                      hist: jax.Array,
+                                      block_tables: jax.Array,
+                                      regions: C.CacheRegions,
+                                      spec: AttnSpec, pcfg: ParisKVConfig,
+                                      signs: jax.Array, num_candidates: int,
+                                      axis_name: str, fused: bool = True
+                                      ) -> Tuple[jax.Array,
+                                                 C.PagedLayerKVCache]:
+    """Paged ParisKV decode *inside* ``jax.shard_map`` over a mesh axis
+    that partitions KV heads (serve.ShardedPagedDist).
+
+    ``pool``/``hist`` carry this shard's head slice; params, ``x_t`` and
+    block tables are replicated. The replicated qkv projection is sliced
+    to the local head range (heads are contiguous per shard: query head
+    h = g·Hg + j), the append + Stage I + Stage II + sparse attention all
+    run shard-local — every ParisKV op is per-head independent, so each
+    shard computes exactly its head-slice of the single-device result —
+    and the only collective is one tiled ``all_gather`` of the attention
+    output heads before the (replicated) output projection. With
+    ``fused=False`` Stage I runs over the shard-local metadata view
+    instead (the ``fused=False`` engine fallback), same merge."""
+    b, _ = x_t.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G_loc = pool.k.shape[2]
+    Hg = H // G
+    g0 = jax.lax.axis_index(axis_name) * G_loc
+    pos = jnp.broadcast_to(jnp.asarray(regions.pos, jnp.int32), (b,)) + 1
+    q, k_t, v_t = _decode_qkv(p, x_t, spec, pos)
+    k_loc = jax.lax.dynamic_slice_in_dim(k_t, g0, G_loc, axis=1)
+    v_loc = jax.lax.dynamic_slice_in_dim(v_t, g0, G_loc, axis=1)
+    pool = C.paged_decode_append(pool, block_tables, k_loc, v_loc, pos)
+
+    q_grp = q.reshape(b, G, Hg, hd)
+    q_loc = jax.lax.dynamic_slice_in_dim(q_grp, g0, G_loc, axis=1)
+    qt = E.encode_query(q_loc, pcfg, signs)
+    enc_b = jnp.broadcast_to(jnp.asarray(regions.enc_end, jnp.int32), (b,))
+    if fused:
+        res = R.retrieve_paged_fused(pool, block_tables, qt, hist, enc_b,
+                                     pcfg, num_candidates, pcfg.top_k)
+    else:
+        bs = C.paged_block_size(pool)
+        n_log = block_tables.shape[1] * bs
+        ids, codes, w = C.paged_meta_view(pool, block_tables)
+        meta = E.KeyMetadata(ids, codes, w)
+        valid = C.retrieval_valid_mask(n_log, regions, pcfg)
+        if valid.ndim == 1:
+            valid = valid[None]
+        valid = jnp.broadcast_to(valid[:, None, None, :],
+                                 (b, G_loc, 1, n_log))
+        meta_b = jax.tree.map(lambda a: a[:, :, None], meta)
+        res = R.retrieve_paged(meta_b, qt, valid, pcfg, num_candidates,
+                               pcfg.top_k, block_tables, bs,
+                               hist_sample=pcfg.hist_sample)
+    k_ret = C.gather_heads_physical(pool.k, res.phys_rows)
+    v_ret = C.gather_heads_physical(pool.v, res.phys_rows)
+
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+    out = A.sparse_decode_attention_paged(
+        q_loc.reshape(b, G_loc * Hg, hd), pool.k, pool.v, block_tables,
+        res.indices, ws, pos, regions.enc_end, sink_size=pcfg.sink_size,
+        window_size=W, sm_scale=spec.scale(), softcap=spec.softcap,
+        k_ret=k_ret, v_ret=v_ret)
+    out = jax.lax.all_gather(out, axis_name, axis=1, tiled=True)  # (b,H,hd)
+    return out.reshape(b, -1).astype(x_t.dtype) @ p["wo"], pool
+
+
+def attn_fill_chunk_sharded(p: dict, x: jax.Array, spec: AttnSpec,
+                            q_pos: jax.Array, k_pref: jax.Array,
+                            v_pref: jax.Array, pref_pos: jax.Array,
+                            new_pos: jax.Array, axis_name: str
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``attn_fill_chunk`` inside ``jax.shard_map`` over a KV-head mesh
+    axis: the prefix k/v arrive as this shard's head slice (gathered from
+    the local pool), the replicated chunk projection is sliced to the
+    local heads, chunk attention runs shard-local, and the output heads
+    are all-gathered before the output projection. Returns the **local**
+    k/v (b, P, G_loc, hd) — the caller writes them (and metadata encoded
+    from them) straight into the shard-local pool."""
+    b, P, _ = x.shape
+    H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    G_loc = k_pref.shape[2]
+    Hg = H // G
+    g0 = jax.lax.axis_index(axis_name) * G_loc
+    q, k, v = _project_qkv(p, x, spec, q_pos)
+    q_loc = jax.lax.dynamic_slice_in_dim(
+        q.reshape(b, P, G, Hg, hd), g0, G_loc, axis=2
+    ).reshape(b, P, G_loc * Hg, hd)
+    k_loc = jax.lax.dynamic_slice_in_dim(k, g0, G_loc, axis=2)
+    v_loc = jax.lax.dynamic_slice_in_dim(v, g0, G_loc, axis=2)
+    out = A.chunk_fill_attention(
+        q_loc, k_pref, v_pref, pref_pos, k_loc, v_loc, q_pos, new_pos,
+        sm_scale=spec.scale(), softcap=spec.softcap,
+        sliding_window=spec.sliding_window)
+    out = jax.lax.all_gather(out, axis_name, axis=2, tiled=True)
+    return out.reshape(b, P, -1) @ p["wo"], k_loc, v_loc
 
 
 def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,

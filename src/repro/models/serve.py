@@ -159,6 +159,40 @@ class UnsupportedPagedConfig(NotImplementedError):
             f"serve — {hint}")
 
 
+class UnsupportedShardedConfig(NotImplementedError):
+    """A config/feature combination the sharded (mesh) serving path cannot
+    run — the structured twin of ``UnsupportedPagedConfig``. Carries the
+    config name and the offending feature so callers and logs can point
+    at the exact conflict instead of silently falling back to a
+    single-device engine."""
+
+    def __init__(self, cfg: ModelConfig, feature: str, hint: str):
+        self.config_name = getattr(cfg, "name", cfg.family)
+        self.feature = feature
+        super().__init__(
+            f"config {self.config_name!r}: {feature} cannot run on a "
+            f"sharded device mesh — {hint}")
+
+
+class ShardedPagedDist(NamedTuple):
+    """Marker threaded as ``dist=`` through the **paged** decode/fill path
+    when the call runs *inside* ``jax.shard_map`` over a 1-D mesh whose
+    axis partitions KV heads (ISSUE 8).
+
+    The shard_map in_specs (``sharded_state_specs``) deliver each shard
+    its head slice of every pool/metadata/histogram leaf; params, block
+    tables, prompts and per-slot scalars are replicated, and block/
+    physical-row numbering is replicated too (only heads shard), so
+    shard-local retrieval returns globally valid rows. Layer functions
+    slice their replicated qkv projections to the local head range, run
+    retrieval + attention shard-local, and all-gather only the attention
+    output heads (layers.attn_decode_pariskv_paged_sharded /
+    attn_fill_chunk_sharded). Contiguous caches keep the original tuple
+    ``dist=(mesh, seq_axes, batch_axes)`` — the two forms never mix."""
+    axis_name: str
+    num_shards: int
+
+
 def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
                       block_size: int, n_max: int, as_spec: bool = False,
                       num_device_blocks: Optional[int] = None):
@@ -447,6 +481,11 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                     fetch, rep, regions, ld.attn, pcfg, signs,
                     num_candidates, fused=paged_fused)
                 return y, kvc
+            if isinstance(dist, ShardedPagedDist):
+                return L.attn_decode_pariskv_paged_sharded(
+                    p["attn"], h, kv, cache["hist"], block_tables, regions,
+                    ld.attn, pcfg, signs, num_candidates, dist.axis_name,
+                    fused=paged_fused)
             if paged_fused:
                 return L.attn_decode_pariskv_paged_fused(
                     p["attn"], h, kv, cache["hist"], block_tables, regions,
@@ -456,7 +495,8 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
                 signs, num_candidates)
         return L.attn_decode_pariskv(
             p["attn"], h, kv, regions, ld.attn, pcfg, signs,
-            num_candidates, dist=dist)
+            num_candidates,
+            dist=None if isinstance(dist, ShardedPagedDist) else dist)
 
     def promote_and_store(kvc):
         """Post-attention promotion, paged (kv + hist) or contiguous."""
@@ -556,7 +596,7 @@ class FillCtx(NamedTuple):
 
 
 def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
-                signs, fetch=None, rep=None):
+                signs, fetch=None, rep=None, dist=None):
     """One layer of one prefill chunk for the filling slot.
 
     Mirrors ``_layer_prefill``'s math chunk-by-chunk: qkv at the chunk's
@@ -619,8 +659,17 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
         p_s = last - (last - jnp.arange(w)) % w  # latest pos < start ≡ s
         pref_pos = jnp.where(p_s >= 0, p_s, -1)[None]
 
-    y, k_new, v_new = L.attn_fill_chunk(p["attn"], h, ld.attn, fctx.q_pos,
-                                        k_pref, v_pref, pref_pos, new_pos)
+    if isinstance(dist, ShardedPagedDist) and isinstance(
+            kv, CC.PagedLayerKVCache):
+        # prefix k/v came from the shard-local pool; k_new/v_new come back
+        # head-local too, so the block writes below stay shard-local
+        y, k_new, v_new = L.attn_fill_chunk_sharded(
+            p["attn"], h, ld.attn, fctx.q_pos, k_pref, v_pref, pref_pos,
+            new_pos, dist.axis_name)
+    else:
+        y, k_new, v_new = L.attn_fill_chunk(p["attn"], h, ld.attn,
+                                            fctx.q_pos, k_pref, v_pref,
+                                            pref_pos, new_pos)
 
     if isinstance(kv, (CC.PagedLayerKVCache, CC.LayerKVCache)):
         meta = None
@@ -754,6 +803,27 @@ def offload_supported(cfg: ModelConfig) -> bool:
     return offload_support_reason(cfg) is None
 
 
+def sharded_support_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why mesh-sharded paged serving canNOT serve this architecture, or
+    None when it can (ISSUE 8). The mesh partitions the paged ParisKV
+    pool on the KV-head axis; bounded slot-local state (ring buffers,
+    SSM, media K/V) is replicated and its compute runs identically on
+    every shard, so the only structural blocker is a cache the paged
+    pool itself cannot hold."""
+    name = getattr(cfg, "name", cfg.family)
+    for si, stage in enumerate(layer_plan(cfg)):
+        for i, ld in enumerate(stage.layers):
+            if ld.mixer == "mla":
+                return (f"config {name!r}: stage {si} layer {i} mixer "
+                        f"'mla' keeps latent caches contiguous — the mesh "
+                        f"shards the paged block pool only (ROADMAP)")
+    return None
+
+
+def sharded_supported(cfg: ModelConfig) -> bool:
+    return sharded_support_reason(cfg) is None
+
+
 def _stage_pass(params, cfg: ModelConfig, x_t, caches, regions, signs,
                 num_candidates, will_promote, use_pariskv, dist,
                 block_tables, paged_fused, x_f=None, fctx=None,
@@ -792,7 +862,8 @@ def _stage_pass(params, cfg: ModelConfig, x_t, caches, regions, signs,
                         lambda op, p_l=p_slice[f"l{i}"], ld_l=ld_eff,
                                fe_l=fe, rep_l=rep:
                             _layer_fill(p_l, op[0], ld_l, cfg, op[1], fctx,
-                                        signs, fetch=fe_l, rep=rep_l),
+                                        signs, fetch=fe_l, rep=rep_l,
+                                        dist=dist),
                         lambda op: op, (x_f, c))
                 new_c[f"l{i}"] = c
             return (x_t, x_f), new_c
@@ -837,7 +908,10 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state: ServeState,
            else jnp.broadcast_to(active, (b,)))
     will_promote = CC.promote_trigger(regions, pcfg) & act
     if block_tables is not None:
-        assert dist is None, "paged decode + distributed retrieval: TODO"
+        assert dist is None or isinstance(dist, ShardedPagedDist), (
+            "paged decode takes dist=ShardedPagedDist (mesh head sharding "
+            "under shard_map); the contiguous (mesh, seq_axes, batch_axes) "
+            "tuple is for contiguous caches only")
         assert use_pariskv, "paged decode serves the ParisKV path only"
         n_max = block_tables.shape[1] * _pool_block_size(state.caches)
     else:
@@ -892,7 +966,10 @@ def decode_fill_step(params, cfg: ModelConfig, token: jax.Array,
            else jnp.broadcast_to(active, (b,)))
     will_promote = CC.promote_trigger(regions, pcfg) & act
     if block_tables is not None:
-        assert dist is None, "paged decode + distributed retrieval: TODO"
+        assert dist is None or isinstance(dist, ShardedPagedDist), (
+            "paged decode takes dist=ShardedPagedDist (mesh head sharding "
+            "under shard_map); the contiguous (mesh, seq_axes, batch_axes) "
+            "tuple is for contiguous caches only")
         assert use_pariskv, "paged decode serves the ParisKV path only"
         n_max = block_tables.shape[1] * _pool_block_size(state.caches)
     else:
@@ -986,6 +1063,47 @@ def init_paged_slot_state(cfg: ModelConfig, batch: int, num_blocks: int,
         cur_tok=jnp.zeros((batch,), jnp.int32),
         remaining=jnp.zeros((batch,), jnp.int32),
         **_fill_state(batch, n_max, prefill_budget))
+
+
+def sharded_state_specs(caches, prefill_budget: int = 0,
+                        axis_name: str = "kv") -> SlotState:
+    """PartitionSpec tree matching a paged SlotState, for ``jax.shard_map``
+    in/out_specs and ``NamedSharding`` placement (ISSUE 8). ``caches`` may
+    be real caches or a ``make_paged_caches(..., as_spec=True)`` tree —
+    only the structure is read.
+
+    Partitioned on the KV-head axis: pool K/V (stacked
+    (repeat, nb, bs, G, hd) → heads at axis 3), pool metadata
+    ((repeat, nb, G, bs, B) → axis 2) and per-slot histograms
+    ((repeat, batch, G, B, 2^m) → axis 2). Everything else — regions,
+    scalars, prompts, ring/SSM/media leaves — is replicated: those layers
+    compute identically on every shard, and block numbering stays global
+    so shard-local retrieval returns globally valid physical rows."""
+    P = jax.sharding.PartitionSpec
+
+    def entry_specs(lc):
+        out = {}
+        for key, val in lc.items():
+            if key == "kv" and isinstance(val, CC.PagedLayerKVCache):
+                out[key] = CC.PagedLayerKVCache(
+                    k=P(None, None, None, axis_name),
+                    v=P(None, None, None, axis_name),
+                    meta_ids=P(None, None, axis_name),
+                    meta_codes=P(None, None, axis_name),
+                    meta_w=P(None, None, axis_name))
+            elif key == "hist":
+                out[key] = P(None, None, axis_name)
+            else:
+                out[key] = jax.tree.map(lambda _: P(), val)
+        return out
+
+    fill = P() if prefill_budget > 0 else None
+    return SlotState(
+        caches=[{ln: entry_specs(lc) for ln, lc in sc.items()}
+                for sc in caches],
+        regions=CC.CacheRegions(pos=P(), enc_end=P()),
+        cur_tok=P(), remaining=P(),
+        fill_pos=fill, fill_len=fill, prompt=fill)
 
 
 def _zero_fetch_leaves(caches):
@@ -1220,7 +1338,7 @@ def cancel_slot(state: SlotState, slot) -> SlotState:
 
 
 def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
-                tok0, rem, pcfg=None) -> SlotState:
+                tok0, rem, pcfg=None, dist=None) -> SlotState:
     """Install a solo (batch=1) prefill result into a paged slot state.
 
     Pool leaves scatter whole blocks to the physical ids in ``phys_blocks``
@@ -1231,11 +1349,31 @@ def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
     amortized histogram over the admitted row's metadata, the base the
     O(U) promotion updates build on — which needs ``pcfg``. Jit this with
     the state donated — it is the paged twin of ServingEngine._admit_impl.
-    """
+
+    ``dist`` (ShardedPagedDist, inside shard_map): the solo prefill runs
+    replicated, so ``caches1`` carries full-head KV leaves while the pool
+    is head-sharded — each shard scatters (and counts histograms from)
+    only its own head slice of the admitted row."""
+    def local_kv(pool_entry, kv1):
+        """Slice a replicated solo-prefill LayerKVCache to this shard's
+        heads (stacked leaves: k/v (repeat, 1, n, G, hd), meta
+        (repeat, 1, G, n, B))."""
+        if dist is None:
+            return kv1
+        g_loc = pool_entry.k.shape[-2]
+        g0 = jax.lax.axis_index(dist.axis_name) * g_loc
+        sl = jax.lax.dynamic_slice_in_dim
+        return kv1._replace(
+            k=sl(kv1.k, g0, g_loc, axis=3),
+            v=sl(kv1.v, g0, g_loc, axis=3),
+            meta_ids=sl(kv1.meta_ids, g0, g_loc, axis=2),
+            meta_codes=sl(kv1.meta_codes, g0, g_loc, axis=2),
+            meta_w=sl(kv1.meta_w, g0, g_loc, axis=2))
+
     def merge(pool_entry, new_entry):
         if isinstance(pool_entry, CC.PagedLayerKVCache):
-            return CC.paged_scatter_prefill(pool_entry, new_entry,
-                                            phys_blocks)
+            return CC.paged_scatter_prefill(
+                pool_entry, local_kv(pool_entry, new_entry), phys_blocks)
         return jax.tree.map(
             lambda big, small: jax.lax.dynamic_update_slice_in_dim(
                 big, small, slot, axis=1),
@@ -1247,7 +1385,9 @@ def admit_paged(state: SlotState, slot, phys_blocks, caches1, regions1,
             hist_entry, h1.astype(hist_entry.dtype), slot, axis=1)
 
     caches = [
-        {lname: {key: (admit_hist(lcache[key], caches1[si][lname]["kv"])
+        {lname: {key: (admit_hist(lcache[key],
+                                  local_kv(lcache["kv"],
+                                           caches1[si][lname]["kv"]))
                        if key == "hist"
                        else merge(lcache[key], caches1[si][lname][key]))
                  for key in lcache}

@@ -113,6 +113,7 @@ import numpy as np
 
 from repro.core import cache as CC
 from repro.core.config import ModelConfig
+from repro.models import layers as L
 from repro.models import serve as SV
 from repro.serving import offload as offload_lib
 
@@ -515,6 +516,17 @@ class PagedServingEngine(ServingEngine):
     ``prefetch_hook``) constructs an :class:`OffloadedPagedServingEngine`
     instead: the full K/V pool moves to host memory and the device keeps
     retrieval metadata plus a bounded staging pool (ISSUE 6).
+
+    ``mesh_shards=N`` (ISSUE 8) serves over an N-device 1-D mesh that
+    partitions the pool, retrieval metadata and histograms on the KV-head
+    axis: Stage I/II run shard-local inside ``shard_map`` and only
+    attention-output heads are all-gathered, so tokens are bit-identical
+    to the single-device engine while each device holds ``1/N`` of the
+    pool bytes — at a fixed per-device budget, ``num_blocks`` (and the
+    admissible batch) scales with N. Requires ``num_kv_heads % N == 0``
+    and N visible devices (CPU: ``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N``); mesh+offload and
+    mesh+MLA raise :class:`models.serve.UnsupportedShardedConfig`.
     """
 
     def __new__(cls, *args, **kwargs):
@@ -528,11 +540,28 @@ class PagedServingEngine(ServingEngine):
                  use_pariskv: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, fused: bool = True,
                  prefill_budget: int = 0, offload: bool = False,
-                 share_prefixes: bool = False):
+                 share_prefixes: bool = False, mesh_shards: int = 1):
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
             raise ValueError(f"n_max={n_max} must be a multiple of "
                              f"block_size={block_size}")
+        if mesh_shards > 1:
+            if cfg.num_kv_heads % mesh_shards != 0:
+                raise ValueError(
+                    f"mesh_shards={mesh_shards} must divide num_kv_heads="
+                    f"{cfg.num_kv_heads}: the mesh partitions whole KV "
+                    f"heads, and an uneven split would give shards "
+                    f"different pool shapes")
+            if jax.device_count() < mesh_shards:
+                raise ValueError(
+                    f"mesh_shards={mesh_shards} needs {mesh_shards} "
+                    f"devices but jax sees {jax.device_count()} — on CPU "
+                    f"set XLA_FLAGS=--xla_force_host_platform_device_count"
+                    f"={mesh_shards} before importing jax")
+            reason = SV.sharded_support_reason(cfg)
+            if reason is not None:
+                raise SV.UnsupportedShardedConfig(
+                    cfg, f"mesh_shards={mesh_shards}", reason)
         if share_prefixes:
             if prefill_budget <= 0:
                 raise ValueError(
@@ -578,6 +607,68 @@ class PagedServingEngine(ServingEngine):
                     st, slot, prow, ln, mn, fill_start=fs, bt_row=bt,
                     pcfg=cfg.pariskv),
                 donate_argnums=(0,))
+
+        # mesh-sharded serving (ISSUE 8): rewrap every jit that touches
+        # SlotState in shard_map over a 1-D KV-head mesh. The state's pool/
+        # metadata/hist leaves live sharded on device (sharded_state_specs);
+        # everything else — params, block tables, solo-prefill results,
+        # scalars — is replicated, and the allocator below is untouched:
+        # block numbering is global, so admission reserves and eviction
+        # reclaims the same physical blocks on every shard.
+        self.mesh_shards = mesh_shards
+        self.mesh = None
+        if mesh_shards > 1:
+            P_ = jax.sharding.PartitionSpec
+            rep = P_()
+            self.mesh = jax.make_mesh((mesh_shards,), ("kv",))
+            dist = SV.ShardedPagedDist("kv", mesh_shards)
+            ss = SV.sharded_state_specs(
+                SV.make_paged_caches(cfg, max_batch, self.num_blocks,
+                                     block_size, n_max, as_spec=True),
+                prefill_budget=prefill_budget)
+            self._state_specs = ss
+            self._chunk = jax.jit(L.shard_map_compat(
+                lambda p, st, bt: SV.decode_chunk(
+                    p, cfg, st, chunk_size, eos_id=eos_id, block_tables=bt,
+                    paged_fused=fused, prefill_budget=prefill_budget,
+                    dist=dist),
+                mesh=self.mesh, in_specs=(rep, ss, rep),
+                out_specs=(rep, ss)),
+                donate_argnums=(1,))
+            self._admit_fn = jax.jit(L.shard_map_compat(
+                lambda st, slot, pb, c1, r1, t0, rem: SV.admit_paged(
+                    st, slot, pb, c1, r1, t0, rem, pcfg=cfg.pariskv,
+                    dist=dist),
+                mesh=self.mesh, in_specs=(ss,) + (rep,) * 6,
+                out_specs=ss),
+                donate_argnums=(0,))
+            self._evict_fn = jax.jit(L.shard_map_compat(
+                self._evict_impl, mesh=self.mesh, in_specs=(ss, rep, rep),
+                out_specs=ss),
+                donate_argnums=(0,))
+            if share_prefixes:
+                self._admit_fill_fn = jax.jit(L.shard_map_compat(
+                    lambda st, slot, prow, ln, mn, bt, fs: SV.admit_fill(
+                        st, slot, prow, ln, mn, fill_start=fs, bt_row=bt,
+                        pcfg=cfg.pariskv),
+                    mesh=self.mesh, in_specs=(ss,) + (rep,) * 6,
+                    out_specs=ss),
+                    donate_argnums=(0,))
+            elif prefill_budget > 0:
+                self._admit_fill_fn = jax.jit(L.shard_map_compat(
+                    lambda st, slot, prow, ln, mn: SV.admit_fill(
+                        st, slot, prow, ln, mn),
+                    mesh=self.mesh, in_specs=(ss,) + (rep,) * 4,
+                    out_specs=ss),
+                    donate_argnums=(0,))
+            # solo prefill runs replicated over the mesh (out_shardings)
+            # so _admit_fn never mixes single-device and mesh arrays
+            self._prefill = jax.jit(
+                lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
+                                                 lengths=lens),
+                out_shardings=jax.sharding.NamedSharding(self.mesh, rep))
+            self.params = jax.device_put(
+                params, jax.sharding.NamedSharding(self.mesh, rep))
 
         # host-side allocator state (deque: _take_block pops the head —
         # O(1), unlike list.pop(0)'s O(n) shuffle)
@@ -777,9 +868,15 @@ class PagedServingEngine(ServingEngine):
 
     # ------------------------------------------- loop phases (overrides) ----
     def _init_state(self) -> SV.SlotState:
-        return SV.init_paged_slot_state(
+        state = SV.init_paged_slot_state(
             self.cfg, self.max_batch, self.num_blocks, self.block_size,
             self.n_max, prefill_budget=self.prefill_budget)
+        if self.mesh is None:
+            return state
+        return jax.tree.map(
+            lambda x, s: jax.device_put(
+                x, jax.sharding.NamedSharding(self.mesh, s)),
+            state, self._state_specs)
 
     def _evict_device(self, slot: int) -> None:
         """Cancel path: freeze the slot, zero + reclaim its dead blocks
@@ -909,7 +1006,13 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                  prefill_budget: int = 0, offload: bool = True,
                  num_device_blocks: Optional[int] = None,
                  prefetch: bool = True, prefetch_hook=None,
-                 share_prefixes: bool = False):
+                 share_prefixes: bool = False, mesh_shards: int = 1):
+        if mesh_shards > 1:
+            raise SV.UnsupportedShardedConfig(
+                cfg, f"offload=True with mesh_shards={mesh_shards}",
+                "the tiered host pool fetches K/V through single-device "
+                "pure_callback reads — shard the resident engine "
+                "(offload=False) instead (ROADMAP)")
         reason = SV.offload_support_reason(cfg)
         if reason is not None:
             raise ValueError(f"offloaded paged serving unavailable — "
