@@ -117,6 +117,32 @@ def render_bench_trajectory(paths: list) -> None:
                   f"| {'ok' if par else '✗' if par is not None else '-'} "
                   f"| {'ok' if adm else '✗' if adm is not None else '-'} |")
 
+    fp_rows = [(os.path.basename(p), rec)
+               for _, p, payload in records
+               for rec in payload.get("results", [])
+               if rec.get("fetch_pipeline")]
+    if fp_rows:
+        print("\n### Overlapped fetch-pipeline trajectory (stall lower is "
+              "better; parity must hold, callbacks ≤ 2/layer/step)\n")
+        print("| file | benchmark | n | link us | sync p50 us | "
+              "overlap p50 us | stall p50 (sync→ov) us | dedup | "
+              "callbacks | parity |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for name, rec in fp_rows:
+            fp = rec["fetch_pipeline"]
+            s, o = fp.get("sync", {}), fp.get("overlap", {})
+            par = fp.get("token_parity_overlap_vs_sync")
+            print(f"| {name} | {rec['benchmark']} "
+                  f"| {fp.get('n_logical', '-')} "
+                  f"| {fp.get('link_latency_us', '-')} "
+                  f"| {s.get('us_p50', '-')} "
+                  f"| {o.get('us_p50', '-')} "
+                  f"| {s.get('stall_us_p50', '-')}→"
+                  f"{o.get('stall_us_p50', '-')} "
+                  f"| {fp.get('dedup_factor', '-')}x "
+                  f"| {o.get('callbacks_per_layer_step', '-')} "
+                  f"| {'ok' if par else '✗' if par is not None else '-'} |")
+
     share_rows = [(os.path.basename(p), rec)
                   for _, p, payload in records
                   for rec in payload.get("results", [])

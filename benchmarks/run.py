@@ -124,6 +124,13 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     admission flags (``offload_admits`` true / the device-resident pool
     *not* fitting the same budget) are baseline-free hard gates.
 
+    Records with ``fetch_pipeline`` (the overlapped host-fetch pipeline,
+    ISSUE 9) gate baseline-free on every host: overlap/sync/PR-5 arms
+    must agree bit-exactly, each arm must stay within 2 host callbacks
+    per layer per step, the request dedup factor must stay ≥ 1.2, and
+    the overlapped arm's fetch-stall p50 must undercut the sync arm's
+    under the same modeled link (≤ 0.75×, with a 1 ms noise floor).
+
     Records with ``share`` (block-granular prefix sharing, ISSUE 7) are
     gated baseline-free on every host: generated tokens must be
     bit-identical to the no-sharing engine (fused path, meta-view
@@ -213,6 +220,37 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
                 f"{rec['benchmark']}: device-resident pool now fits the "
                 f"offload budget — the admission comparison is vacuous "
                 f"(shrink the budget or grow the context)")
+        # fetch-pipeline hard gates (ISSUE 9), baseline-free: parity and
+        # callback/dedup counters are deterministic; the stall gate is a
+        # ratio of two same-host measurements under the same modeled
+        # link, so it holds on any runner (wall-clock p50s do not gate —
+        # single-core runners serialize callback infra with the compute
+        # the pipeline hides behind)
+        fp = rec.get("fetch_pipeline")
+        if fp:
+            if fp.get("token_parity_overlap_vs_sync") is False:
+                failures.append(f"{rec['benchmark']}: overlapped fetch "
+                                f"tokens diverged from the sync path")
+            for arm in ("sync", "overlap"):
+                c = fp.get(arm, {}).get("callbacks_per_layer_step")
+                if c is not None and c > 2.0 + 1e-6:
+                    failures.append(
+                        f"{rec['benchmark']}: {arm} fetch used {c:.2f} "
+                        f"host callbacks per layer per step (> 2 — the "
+                        f"fetch is no longer coalesced)")
+            df = fp.get("dedup_factor")
+            if df is not None and df < 1.2:
+                failures.append(
+                    f"{rec['benchmark']}: fetch dedup factor {df:.2f} < "
+                    f"1.2 (coalescing stopped collapsing shared rows)")
+            ss = fp.get("sync", {}).get("stall_us_p50")
+            ov = fp.get("overlap", {}).get("stall_us_p50")
+            if ss is not None and ov is not None \
+                    and ov > max(0.75 * ss, 1000.0):
+                failures.append(
+                    f"{rec['benchmark']}: overlap fetch stall p50 "
+                    f"{ov:.0f}us vs sync {ss:.0f}us — the begin/collect "
+                    f"window no longer hides the host copy")
         base = base_by_name.get(rec["benchmark"])
         if base is None:
             continue

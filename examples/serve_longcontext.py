@@ -51,6 +51,14 @@ fetched bytes between the prefetch and the demand path. Per-request
 fetch stats (staging hits/misses, fetched bytes, prefetch accuracy)
 print after the run.
 
+Host fetches default to the **overlapped pipeline** (ISSUE 9): each
+layer issues its deduped fetch right after retrieval resolves, runs the
+dense sink/window work while the host worker copies, and collects last.
+``--no-overlap`` falls back to one blocking callback per fetch — same
+tokens, the difference shows up in the printed fetch-stall time and
+callback counts (and per request as ``fetched_unique_bytes``,
+``fetch_stall_s``, ``fetch_callbacks``).
+
 ``--share-prefixes`` (paged only, needs ``--prefill-budget > 0``)
 deduplicates shared prompt prefixes at block granularity (ISSUE 7): the
 example rewrites the request prompts to carry one common system prefix
@@ -115,6 +123,11 @@ def main():
     ap.add_argument("--no-prefetch", action="store_true",
                     help="offload: disable chunk-boundary prefetch (all "
                          "host reads go through the demand-fetch path)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="offload: synchronous host fetches (one blocking "
+                         "callback per fetch) instead of the overlapped "
+                         "begin/collect pipeline — tokens are identical, "
+                         "only the fetch stall moves")
     ap.add_argument("--share-prefixes", action="store_true",
                     help="paged: dedup shared prompt prefixes at block "
                          "granularity (requires --prefill-budget > 0); "
@@ -129,6 +142,8 @@ def main():
                          "divide num_kv_heads; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
+    if args.offload and args.engine != "paged":
+        ap.error("--offload requires --engine paged")
     if args.share_prefixes and args.engine != "paged":
         ap.error("--share-prefixes requires --engine paged")
     if args.mesh_shards > 1 and args.engine != "paged":
@@ -149,7 +164,8 @@ def main():
             if args.offload:
                 kw = dict(offload=True,
                           num_device_blocks=args.num_device_blocks,
-                          prefetch=not args.no_prefetch)
+                          prefetch=not args.no_prefetch,
+                          overlap=not args.no_overlap)
             return PagedServingEngine(
                 cfg, params, n_max=1024, max_batch=args.requests,
                 block_size=args.block_size, num_blocks=args.num_blocks,
@@ -201,6 +217,11 @@ def main():
                   f"{hits / max(hits + miss, 1):.1%}  fetched "
                   f"{sum(r.fetched_bytes for r in done)} B  prefetch "
                   f"{pfh}/{pf} useful")
+            mode = "sync" if args.no_overlap else "overlap"
+            print(f"[{tag}] fetch ({mode}): unique "
+                  f"{sum(r.fetched_unique_bytes for r in done)} B  stall "
+                  f"{sum(r.fetch_stall_s for r in done) * 1e3:.1f}ms  "
+                  f"{sum(r.fetch_callbacks for r in done)} callbacks")
 
     if "full-attn" in results:
         agree = []

@@ -9,7 +9,7 @@ region — the TPU analogue of the paper's UVA on-demand fetch (DESIGN.md §2).
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +173,24 @@ def sparse_decode_attention(q: jax.Array,
     ).reshape(b, H, hd)
 
 
+def dense_segment_scores(qg: jax.Array, k_sink: jax.Array,
+                         k_loc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Raw (unmasked, unscaled) sink/window score einsums.
+
+    Split out of ``_segment_attention`` so the overlapped fetch pipeline
+    (ISSUE 9) can run these two einsums while the host K/V fetch is in
+    flight — they depend only on staging-resident keys. Both the hoisted
+    and the inline path call this exact function, so the scores are
+    bit-identical regardless of where they were scheduled.
+
+    qg: (b, G, Hg, hd) float32 → s_sink (b, G, Hg, sink), s_loc
+    (b, G, Hg, W).
+    """
+    s_sink = jnp.einsum("bghd,bsgd->bghs", qg, k_sink.astype(jnp.float32))
+    s_loc = jnp.einsum("bghd,bwgd->bghw", qg, k_loc.astype(jnp.float32))
+    return s_sink, s_loc
+
+
 def _segment_attention(qg: jax.Array,
                        k_sink: jax.Array, v_sink: jax.Array,
                        k_ret: jax.Array, v_ret: jax.Array,
@@ -180,7 +198,9 @@ def _segment_attention(qg: jax.Array,
                        top_idx: jax.Array, window_start: jax.Array,
                        pos: jax.Array, enc_end: jax.Array, *,
                        sink_size: int, window_size: int,
-                       sm_scale: float, softcap: float) -> jax.Array:
+                       sm_scale: float, softcap: float,
+                       s_sink: Optional[jax.Array] = None,
+                       s_loc: Optional[jax.Array] = None) -> jax.Array:
     """Joint softmax over the three gathered segments (Eq. 2-3 core).
 
     The segments may come from a contiguous per-row cache *or* from a
@@ -191,6 +211,8 @@ def _segment_attention(qg: jax.Array,
 
     qg: (b, G, Hg, hd) float32; k_sink/v_sink: (b, sink, G, hd);
     k_ret/v_ret: (b, G, Hg, k, hd); k_loc/v_loc: (b, W, G, hd).
+    ``s_sink``/``s_loc`` may arrive precomputed (see
+    ``dense_segment_scores``); masking always happens here.
     → (b, G, Hg, hd) float32.
     """
     # --- retrieved segment ------------------------------------------------
@@ -200,17 +222,16 @@ def _segment_attention(qg: jax.Array,
     ret_valid = (top_idx >= sink_size) & (top_idx < enc_end[:, None, None, None])
     s_ret = jnp.where(ret_valid, s_ret, NEG_INF)
 
+    if s_sink is None:
+        s_sink, s_loc = dense_segment_scores(qg, k_sink, k_loc)
+
     # --- sink segment -----------------------------------------------------
-    k_sink = k_sink.astype(jnp.float32)
     v_sink = v_sink.astype(jnp.float32)
-    s_sink = jnp.einsum("bghd,bsgd->bghs", qg, k_sink)
     sink_valid = (jnp.arange(sink_size)[None] <= pos[:, None])  # (b, sink)
     s_sink = jnp.where(sink_valid[:, None, None, :], s_sink, NEG_INF)
 
     # --- local + update-buffer window --------------------------------------
-    k_loc = k_loc.astype(jnp.float32)
     v_loc = v_loc.astype(jnp.float32)
-    s_loc = jnp.einsum("bghd,bwgd->bghw", qg, k_loc)
     w_pos = window_start[:, None] + jnp.arange(window_size)  # (b, W)
     loc_valid = ((w_pos >= enc_end[:, None]) & (w_pos >= sink_size)
                  & (w_pos <= pos[:, None]))
@@ -235,7 +256,13 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
                                   sink_size: int, window_size: int,
                                   sm_scale: float, softcap: float = 0.0,
                                   k_ret: Optional[jax.Array] = None,
-                                  v_ret: Optional[jax.Array] = None
+                                  v_ret: Optional[jax.Array] = None,
+                                  k_sink: Optional[jax.Array] = None,
+                                  v_sink: Optional[jax.Array] = None,
+                                  k_loc: Optional[jax.Array] = None,
+                                  v_loc: Optional[jax.Array] = None,
+                                  s_sink: Optional[jax.Array] = None,
+                                  s_loc: Optional[jax.Array] = None
                                   ) -> jax.Array:
     """Paged twin of ``sparse_decode_attention``: all three segments are
     gathered from the shared block pool through per-row block tables
@@ -246,9 +273,12 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
     positions (as produced by retrieval over the logical metadata view) —
     the retrieved rows themselves may arrive pre-fetched via
     ``k_ret``/``v_ret`` (retrieve_paged hands out block-relative physical
-    rows, so the caller can gather without a second table lookup).
-    Masks are identical to the contiguous path, so the result is
-    token-identical for the same cache contents.
+    rows, so the caller can gather without a second table lookup), and
+    the dense sink/window segments likewise via ``k_sink``/``v_loc``/…
+    (the overlapped fetch pipeline hoists those gathers into the window
+    between its begin and collect callbacks — gather placement never
+    changes the math). Masks are identical to the contiguous path, so
+    the result is token-identical for the same cache contents.
     """
     from repro.core import cache as CC
 
@@ -264,18 +294,22 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
         k_ret = CC.paged_gather_heads(pool_k, block_tables, top_idx)
         v_ret = CC.paged_gather_heads(pool_v, block_tables, top_idx)
 
-    sink_idx = jnp.broadcast_to(jnp.arange(sink_size)[None], (b, sink_size))
-    k_sink = CC.paged_gather_rows(pool_k, block_tables, sink_idx)
-    v_sink = CC.paged_gather_rows(pool_v, block_tables, sink_idx)
+    if k_sink is None:
+        sink_idx = jnp.broadcast_to(jnp.arange(sink_size)[None],
+                                    (b, sink_size))
+        k_sink = CC.paged_gather_rows(pool_k, block_tables, sink_idx)
+        v_sink = CC.paged_gather_rows(pool_v, block_tables, sink_idx)
 
-    w_idx = window_start[:, None] + jnp.arange(window_size)[None]
-    k_loc = CC.paged_gather_rows(pool_k, block_tables, w_idx)
-    v_loc = CC.paged_gather_rows(pool_v, block_tables, w_idx)
+    if k_loc is None:
+        w_idx = window_start[:, None] + jnp.arange(window_size)[None]
+        k_loc = CC.paged_gather_rows(pool_k, block_tables, w_idx)
+        v_loc = CC.paged_gather_rows(pool_v, block_tables, w_idx)
 
     return _segment_attention(
         qg, k_sink, v_sink, k_ret, v_ret, k_loc, v_loc, top_idx,
         window_start, pos, enc_end, sink_size=sink_size,
-        window_size=window_size, sm_scale=sm_scale, softcap=softcap
+        window_size=window_size, sm_scale=sm_scale, softcap=softcap,
+        s_sink=s_sink, s_loc=s_loc
     ).reshape(b, H, hd)
 
 
@@ -289,7 +323,13 @@ def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
                                    sink_size: int, window_size: int,
                                    sm_scale: float, softcap: float = 0.0,
                                    k_ret: Optional[jax.Array] = None,
-                                   v_ret: Optional[jax.Array] = None
+                                   v_ret: Optional[jax.Array] = None,
+                                   k_sink: Optional[jax.Array] = None,
+                                   v_sink: Optional[jax.Array] = None,
+                                   k_loc: Optional[jax.Array] = None,
+                                   v_loc: Optional[jax.Array] = None,
+                                   s_sink: Optional[jax.Array] = None,
+                                   s_loc: Optional[jax.Array] = None
                                    ) -> jax.Array:
     """Tiered twin of ``sparse_decode_attention_paged`` (ISSUE 6): the
     dense sink/window gathers are indirected through the **staging map**
@@ -299,7 +339,9 @@ def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
     engine pins sink + window blocks staging-resident, so these gathers
     always hit; the retrieved segment must arrive pre-fetched via
     ``k_ret``/``v_ret`` (hit/miss-blended by the caller — winners may
-    live on either tier)."""
+    live on either tier). The overlapped fetch pipeline (ISSUE 9) also
+    pre-gathers sink/window via ``k_sink``/``k_loc``/… so the dense
+    reads run while the host fetch is in flight."""
     from repro.core import cache as CC
 
     assert k_ret is not None and v_ret is not None, \
@@ -308,7 +350,9 @@ def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
     return sparse_decode_attention_paged(
         q, pool_k, pool_v, bt_dev, top_idx, window_start, pos, enc_end,
         sink_size=sink_size, window_size=window_size, sm_scale=sm_scale,
-        softcap=softcap, k_ret=k_ret, v_ret=v_ret)
+        softcap=softcap, k_ret=k_ret, v_ret=v_ret, k_sink=k_sink,
+        v_sink=v_sink, k_loc=k_loc, v_loc=v_loc, s_sink=s_sink,
+        s_loc=s_loc)
 
 
 def chunk_fill_attention(q: jax.Array, k_pref: jax.Array, v_pref: jax.Array,

@@ -589,16 +589,27 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
     tables ``tiered_kv_tables(bt, dev_map)`` — those blocks are pinned
     staging-resident by the engine, so they always hit. Stage-II winners
     are resolved against ``dev_map``: resident rows gather from staging,
-    misses fetch from the host pool via ``fetch.heads`` (a
-    ``pure_callback`` into serving.offload.HostKVPool; ``rep`` is the
-    stage-repeat index selecting the host arrays' leading axis). The
-    hit/miss blend is exact — a winner's K/V is bit-identical whichever
-    tier serves it — so staging policy and prefetch quality affect bytes
-    moved, never tokens.
+    misses fetch from the host pool (``rep`` is the stage-repeat index
+    selecting the host arrays' leading axis). The hit/miss blend is
+    exact — a winner's K/V is bit-identical whichever tier serves it —
+    so staging policy and prefetch quality affect bytes moved, never
+    tokens.
+
+    ``fetch`` selects the fetch discipline (ISSUE 9): a synchronous
+    ``offload.EntryFetch`` blocks on one gather callback; a
+    ``offload.PipelinedEntryFetch`` (``pipelined=True``) issues
+    ``begin_heads`` immediately after Stage II, runs the staging-hit
+    gather plus the dense sink/window gathers while the host worker
+    copies, and ``collect``s last. True data deps pin the schedule:
+    ``fetch.fence`` folds the ticket into the gather indices and the
+    dense outputs ride into ``collect_heads`` as extra operands — the
+    data is identical either way, only the schedule moves.
 
     → (y, pool, fetch-stat increments {"touched": (num_blocks,) winner
     references per host block — the prefetch predictor's signal;
-    "rows": (b, 3) [winner rows, staging hits, host fetches]}).
+    "rows": (b, 3) [winner rows, staging hits, host fetches];
+    "stall": () seconds the step blocked on the host fetch;
+    "calls": () host callbacks this step}).
     """
     b, _ = x_t.shape
     H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
@@ -632,10 +643,43 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
                  & (res.indices < enc_b[:, None, None, None]))
     hit = ret_valid & resident
     miss = ret_valid & ~resident
-    k_hit = C.gather_heads_physical(pool.k, stag_rows)
-    v_hit = C.gather_heads_physical(pool.v, stag_rows)
     miss_rows = jnp.where(miss, res.phys_rows, -1).astype(jnp.int32)
-    k_miss, v_miss = fetch.heads(miss_rows, rep)
+    W = C.window_size(pcfg)
+    ws = jnp.maximum(pos + 1 - W, 0)
+
+    if getattr(fetch, "pipelined", False):
+        # ---- overlapped path: begin → dense work → collect ------------
+        ticket = fetch.begin_heads(miss_rows, rep)
+        # fence: add the ticket-derived 0 to every dense gather's indices
+        # (bit-exact) so the gathers truly depend on the begin callback —
+        # optimization_barrier does NOT survive into the schedule …
+        z = fetch.fence(ticket)
+        sink_idx = jnp.broadcast_to(jnp.arange(pcfg.sink_size)[None],
+                                    (b, pcfg.sink_size)) + z
+        w_idx = ws[:, None] + jnp.arange(W)[None] + z
+        k_hit = C.gather_heads_physical(pool.k, stag_rows + z)
+        v_hit = C.gather_heads_physical(pool.v, stag_rows + z)
+        k_sink = C.paged_gather_rows(pool.k, bt_dev, sink_idx)
+        v_sink = C.paged_gather_rows(pool.v, bt_dev, sink_idx)
+        k_loc = C.paged_gather_rows(pool.k, bt_dev, w_idx)
+        v_loc = C.paged_gather_rows(pool.v, bt_dev, w_idx)
+        # the sink/window score einsums only need staging-resident keys,
+        # so they run in the overlap window too — same function the
+        # attention kernel would call, so the values are bit-identical
+        s_sink, s_loc = A.dense_segment_scores(
+            q_grp.astype(jnp.float32), k_sink, k_loc)
+        # … and the collect takes the dense outputs as extra callback
+        # operands, so it schedules after the work hiding the host copy
+        k_miss, v_miss, stall = fetch.collect_heads(
+            ticket, miss_rows.shape,
+            k_hit, v_hit, v_sink, v_loc, s_sink, s_loc)
+        calls = jnp.int32(2)
+    else:
+        k_hit = C.gather_heads_physical(pool.k, stag_rows)
+        v_hit = C.gather_heads_physical(pool.v, stag_rows)
+        k_miss, v_miss, stall = fetch.heads(miss_rows, rep)
+        k_sink = v_sink = k_loc = v_loc = s_sink = s_loc = None
+        calls = jnp.int32(1)
     sel = resident[..., None]
     k_ret = jnp.where(sel, k_hit, k_miss.astype(k_hit.dtype))
     v_ret = jnp.where(sel, v_hit, v_miss.astype(v_hit.dtype))
@@ -648,15 +692,15 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
                       hit.sum(axis=(1, 2, 3)).astype(jnp.int32),
                       miss.sum(axis=(1, 2, 3)).astype(jnp.int32)], axis=-1)
 
-    W = C.window_size(pcfg)
-    ws = jnp.maximum(pos + 1 - W, 0)
     out = A.sparse_decode_attention_tiered(
         q, pool.k, pool.v, block_tables, dev_map, res.indices, ws, pos,
         regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
         sm_scale=spec.scale(), softcap=spec.softcap,
-        k_ret=k_ret, v_ret=v_ret)
+        k_ret=k_ret, v_ret=v_ret, k_sink=k_sink, v_sink=v_sink,
+        k_loc=k_loc, v_loc=v_loc, s_sink=s_sink, s_loc=s_loc)
     y = out.reshape(b, -1).astype(x_t.dtype) @ p["wo"]
-    return y, pool, {"touched": touched, "rows": rows}
+    return y, pool, {"touched": touched, "rows": rows,
+                     "stall": stall.astype(jnp.float32), "calls": calls}
 
 
 def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,

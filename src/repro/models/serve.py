@@ -216,9 +216,12 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
     (the full K/V pool lives host-side, serving.offload.HostKVPool).
     Tiered ParisKV layers additionally carry ``fetch`` stats leaves —
     ``touched`` (num_blocks,) winner references per host block (the
-    prefetch predictor's input) and ``rows`` (batch, 4) int32
-    [winner rows, staging hits, host fetches, fill-prefix fetches] —
-    zeroed at each decode_chunk entry and read back by the engine."""
+    prefetch predictor's input), ``rows`` (batch, 4) int32
+    [winner rows, staging hits, host fetches, fill-prefix fetches],
+    ``stall`` () float32 seconds the jitted step spent blocked on host
+    fetch callbacks, and ``calls`` () int32 host callbacks issued
+    (ISSUE 9 observability) — zeroed at each decode_chunk entry and
+    read back by the engine."""
     pcfg = cfg.pariskv
     dt = _dtype(cfg)
 
@@ -246,11 +249,14 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
         return jnp.zeros(shape, jnp.int32)
 
     def fetch_stats():
-        shapes = {"touched": (num_blocks,), "rows": (batch, 4)}
+        shapes = {"touched": ((num_blocks,), jnp.int32),
+                  "rows": ((batch, 4), jnp.int32),
+                  "stall": ((), jnp.float32),
+                  "calls": ((), jnp.int32)}
         if as_spec:
-            return {k: jax.ShapeDtypeStruct(s, jnp.int32)
-                    for k, s in shapes.items()}
-        return {k: jnp.zeros(s, jnp.int32) for k, s in shapes.items()}
+            return {k: jax.ShapeDtypeStruct(s, d)
+                    for k, (s, d) in shapes.items()}
+        return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
 
     caches = []
     for si, stage in enumerate(layer_plan(cfg)):
@@ -513,7 +519,9 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
         f = cache["fetch"]
         return {**cache, "fetch": {
             "touched": f["touched"] + fetch_delta["touched"],
-            "rows": f["rows"].at[:, :3].add(fetch_delta["rows"])}}
+            "rows": f["rows"].at[:, :3].add(fetch_delta["rows"]),
+            "stall": f["stall"] + fetch_delta["stall"],
+            "calls": f["calls"] + fetch_delta["calls"]}}
 
     if ld.mixer == "attn":
         if ld.use_pariskv:
@@ -620,7 +628,7 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
         return jax.lax.dynamic_slice_in_dim(a, fctx.slot, 1, axis=0)
 
     kv = cache["kv"]
-    fill_fetched = None
+    fill_fetched = fill_stall = fill_calls = None
     if isinstance(kv, CC.PagedLayerKVCache):
         bs = CC.paged_block_size(kv)
         nblk = fctx.bt_row.shape[0]
@@ -630,8 +638,6 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
             # already-written prompt — staging rows where resident, host
             # fetch (pure_callback) for the rest. Blended exactly like the
             # decode winner path, so prefetch quality never changes tokens.
-            k_stag = CC.paged_gather_rows(kv.k, fctx.dev_row[None], idx)
-            v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None], idx)
             blk = idx[0] // bs
             resident = (fctx.dev_row[blk] >= 0)[None]
             need = (idx < fctx.start) & ~resident
@@ -639,7 +645,24 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
             host_rows = jnp.where(need & (host_blk >= 0),
                                   host_blk * bs + idx % bs,
                                   -1).astype(jnp.int32)
-            k_host, v_host = fetch.rows(host_rows, rep)
+            if getattr(fetch, "pipelined", False):
+                # overlapped (ISSUE 9): issue the host prefix fetch,
+                # read the staging rows while it's in flight, collect
+                # last — same fence/operand ordering as the decode path
+                ticket = fetch.begin_rows(host_rows, rep)
+                idx_b = idx + fetch.fence(ticket)
+                k_stag = CC.paged_gather_rows(kv.k, fctx.dev_row[None],
+                                              idx_b)
+                v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None],
+                                              idx_b)
+                k_host, v_host, fill_stall = fetch.collect_rows(
+                    ticket, host_rows.shape, k_stag, v_stag)
+                fill_calls = jnp.int32(2)
+            else:
+                k_stag = CC.paged_gather_rows(kv.k, fctx.dev_row[None], idx)
+                v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None], idx)
+                k_host, v_host, fill_stall = fetch.rows(host_rows, rep)
+                fill_calls = jnp.int32(1)
             sel = resident[..., None, None]
             k_pref = jnp.where(sel, k_stag, k_host.astype(k_stag.dtype))
             v_pref = jnp.where(sel, v_stag, v_host.astype(v_stag.dtype))
@@ -685,7 +708,9 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
                     cache = {**cache, "fetch": {
                         **cache["fetch"],
                         "rows": cache["fetch"]["rows"].at[fctx.slot, 3].add(
-                            fill_fetched)}}
+                            fill_fetched),
+                        "stall": cache["fetch"]["stall"] + fill_stall,
+                        "calls": cache["fetch"]["calls"] + fill_calls}}
             else:
                 kvc = CC.paged_fill_chunk_write(
                     kv, fctx.bt_row, fctx.start, k_new[0], v_new[0],

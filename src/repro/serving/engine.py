@@ -133,9 +133,16 @@ class Request:
     # offloaded-engine fetch observability (ISSUE 6; zero elsewhere):
     staging_hits: int = 0        # winner head-rows served from staging
     staging_misses: int = 0      # winner head-rows fetched from the host tier
-    fetched_bytes: int = 0       # K+V bytes moved host → device on demand
+    fetched_bytes: int = 0       # requested K+V bytes moved host → device
+    fetched_unique_bytes: int = 0  # after head/query dedup (ISSUE 9) —
+    #                              the bytes the host actually gathered,
+    #                              attributed ∝ this request's fetch rows
     prefetched_blocks: int = 0   # blocks speculatively staged for this req
     prefetch_hits: int = 0       # prefetched blocks referenced next chunk
+    # fetch-pipeline observability (ISSUE 9; zero elsewhere):
+    fetch_stall_s: float = 0.0   # decode-step seconds blocked on host
+    #                              fetches, attributed ∝ fetch rows
+    fetch_callbacks: int = 0     # host callbacks attributed the same way
     # prefix-sharing observability (ISSUE 7; zero unless share_prefixes):
     shared_prefix_blocks: int = 0  # already-cached blocks mapped, not filled
     # engine-internal:
@@ -992,10 +999,20 @@ class OffloadedPagedServingEngine(PagedServingEngine):
     ``cancel(uid)`` reclaim both tiers: host blocks zeroed, staging slots
     freed without write-back (the data is dead).
 
+    The fetch discipline is the **overlapped pipeline** by default
+    (ISSUE 9): one coalesced, deduped begin/collect callback pair per
+    pariskv layer per step, with the host gather running on a worker
+    thread while the step's dense attention work proceeds between the
+    two callbacks. ``overlap=False`` is the synchronous single-callback
+    escape hatch (the PR-5 path) for A/B and debugging — tokens are
+    bit-identical either way; only schedule and stall move.
+
     Per-request fetch observability lands on ``Request``: staging_hits/
-    staging_misses (winner head-rows by serving tier), fetched_bytes
-    (on-demand host→device traffic), prefetched_blocks/prefetch_hits
-    (prediction accuracy).
+    staging_misses (winner head-rows by serving tier), fetched_bytes /
+    fetched_unique_bytes (on-demand host→device traffic, requested vs
+    after-dedup), prefetched_blocks/prefetch_hits (prediction
+    accuracy), and fetch_stall_s/fetch_callbacks (pipeline residual
+    stall and callback count, attributed ∝ fetch rows).
     """
 
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
@@ -1006,6 +1023,7 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                  prefill_budget: int = 0, offload: bool = True,
                  num_device_blocks: Optional[int] = None,
                  prefetch: bool = True, prefetch_hook=None,
+                 overlap: bool = True,
                  share_prefixes: bool = False, mesh_shards: int = 1):
         if mesh_shards > 1:
             raise SV.UnsupportedShardedConfig(
@@ -1045,12 +1063,21 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                                        self.block_size, SV._dtype(cfg))
         self.staging = offload_lib.StagingMap(self.num_blocks,
                                           self.num_device_blocks)
-        host = self.host
+        self.overlap = bool(overlap)
+        # layer-pass fetch entries the chunk will trace (used to
+        # normalize the callbacks-per-layer-per-step invariant)
+        self.num_fetch_layers = sum(
+            shapes[name][0] for _, _, name in self._entries)
+        self.pipeline = (offload_lib.FetchPipeline(self.host)
+                         if self.overlap else None)
+        # NB: like the pool, the jitted chunk closes over this exact
+        # fetch object — start() resets it in place
+        fetch = self.pipeline if self.overlap else self.host
         self._chunk = jax.jit(
             lambda p, st, bt, dm: SV.decode_chunk(
                 p, cfg, st, chunk_size, eos_id=eos_id, block_tables=bt,
                 paged_fused=fused, prefill_budget=prefill_budget,
-                dev_map=dm, fetch=host),
+                dev_map=dm, fetch=fetch),
             donate_argnums=(1,))
         # solo prefill at the prompt's bucketed capacity (static arg →
         # one compile per bucket), so admission never materializes an
@@ -1067,8 +1094,18 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                                  donate_argnums=(0,))
         self._stage_fn = jax.jit(self._stage_impl, donate_argnums=(0,))
         self._read_staging_fn = jax.jit(self._read_staging_impl)
-        self._touched_last = np.zeros((self.num_blocks,), np.int64)
+        # exponential-decay touch score per host block — smoother
+        # prefetch ranking than the last-chunk-only snapshot it replaces
+        self._touched_last = np.zeros((self.num_blocks,), np.float64)
+        self._touch_decay = 0.5
         self._last_prefetch: List[int] = []
+        # engine-level stall trace: (stall seconds, callbacks) per chunk
+        self.fetch_stall_chunks: List[tuple] = []
+        self.fetch_stall_s = 0.0
+        self.fetch_callbacks = 0
+        # host unique-row counter snapshots for per-chunk deltas
+        self._uniq_head = 0
+        self._uniq_fill = 0
 
     # ------------------------------------------------------ device helpers --
     def _stage_impl(self, state: SV.SlotState, stag_blocks, payloads):
@@ -1233,13 +1270,21 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                 order = np.argsort(-self._touched_last, kind="stable")
                 cand = [int(hb) for hb in order[:k]
                         if self._touched_last[hb] > 0]
+            wanted = []
             for hb in cand:
                 hb = int(hb)
                 if (not 0 <= hb < self.num_blocks or hb in seen
                         or sm.resident(hb) or hb not in owner):
                     continue
-                if acquire_for(hb) is None:
-                    break                  # everything else is pinned
+                wanted.append(hb)
+            # whole-batch slot grab (ISSUE 9): one acquire_batch call,
+            # then installs — may come back short when slots are pinned
+            got = sm.acquire_batch(len(wanted))
+            for hb, (s, ev) in zip(wanted, got):
+                if ev >= 0:
+                    writebacks.append((ev, s))
+                sm.install(hb, s)
+                installs.append((hb, s))
                 self._last_prefetch.append(hb)
                 owner_req = self._slots[owner[hb]]
                 if owner_req is not None:
@@ -1273,11 +1318,14 @@ class OffloadedPagedServingEngine(PagedServingEngine):
 
     def _harvest_fetch_stats(self) -> None:
         """Read the chunk's fetch-stat leaves back: per-request staging
-        hit/miss/bytes counters, prefetch-hit accounting, and the touched
-        histogram that seeds the next chunk's prefetch prediction."""
+        hit/miss/bytes counters, fetch-stall/callback attribution,
+        prefetch-hit accounting, and the exponential-decay touch scores
+        that seed the next chunk's prefetch prediction."""
         touched = np.zeros((self.num_blocks,), np.int64)
         rows = np.zeros((self.max_batch, 4), np.int64)
         miss_b = np.zeros((self.max_batch,), np.int64)
+        stall = 0.0
+        calls = 0
         for si, ln, name in self._entries:
             f = self._state.caches[si][ln]["fetch"]
             touched += np.asarray(f["touched"]).sum(axis=0)
@@ -1285,12 +1333,37 @@ class OffloadedPagedServingEngine(PagedServingEngine):
             rows += r
             miss_b += (r[:, 2] * self.host.bytes_per_head_row(name)
                        + r[:, 3] * self.host.bytes_per_row(name))
+            stall += float(np.asarray(f["stall"]).sum())
+            calls += int(np.asarray(f["calls"]).sum())
+        self.fetch_stall_chunks.append((stall, calls))
+        self.fetch_stall_s += stall
+        self.fetch_callbacks += calls
+        # unique (post-dedup) traffic comes off the host counters — all
+        # pariskv entries share (G, hd, dtype), so the first entry's
+        # per-row byte sizes price the global unique-row deltas
+        name0 = self._entries[0][2]
+        uniq_b = ((self.host.fetched_unique_head_rows - self._uniq_head)
+                  * self.host.bytes_per_head_row(name0)
+                  + (self.host.fetched_unique_fill_rows - self._uniq_fill)
+                  * self.host.bytes_per_row(name0))
+        self._uniq_head = self.host.fetched_unique_head_rows
+        self._uniq_fill = self.host.fetched_unique_fill_rows
+        # stall/callbacks/unique-bytes are chunk-global: attribute per
+        # request ∝ its share of fetch rows, even split when none fetched
+        active = [s for s, rq in enumerate(self._slots) if rq is not None]
+        fetch_rows = rows[:, 2] + rows[:, 3]
+        tot = int(fetch_rows.sum())
         for slot, req in enumerate(self._slots):
             if req is None:
                 continue
             req.staging_hits += int(rows[slot, 1])
             req.staging_misses += int(rows[slot, 2])
             req.fetched_bytes += int(miss_b[slot])
+            share = (fetch_rows[slot] / tot if tot
+                     else 1.0 / max(len(active), 1))
+            req.fetched_unique_bytes += int(round(uniq_b * share))
+            req.fetch_stall_s += stall * share
+            req.fetch_callbacks += int(round(calls * share))
         owner = {b: sl for sl, blks in self._alloc.items() for b in blks}
         for hb in self._last_prefetch:
             if touched[hb] > 0:
@@ -1298,7 +1371,8 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                 if sl is not None and self._slots[sl] is not None:
                     self._slots[sl].prefetch_hits += 1
         self.staging.touch(np.flatnonzero(touched > 0))
-        self._touched_last = touched
+        self._touched_last = (self._touch_decay * self._touched_last
+                              + touched)
 
     # ------------------------------------------- loop phases (overrides) ----
     def _init_state(self) -> SV.SlotState:
@@ -1314,10 +1388,16 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         for name in self.host.k:          # zero in place: the jitted
             self.host.k[name][:] = 0      # chunk holds this exact object
             self.host.v[name][:] = 0
-        self.host.fetched_head_rows = 0
-        self.host.fetched_fill_rows = 0
-        self._touched_last = np.zeros((self.num_blocks,), np.int64)
+        self.host.reset_counters()
+        if self.pipeline is not None:     # same in-place contract: the
+            self.pipeline.reset()         # chunk closes over the pipeline
+        self._touched_last = np.zeros((self.num_blocks,), np.float64)
         self._last_prefetch = []
+        self.fetch_stall_chunks = []
+        self.fetch_stall_s = 0.0
+        self.fetch_callbacks = 0
+        self._uniq_head = 0
+        self._uniq_fill = 0
 
     def _pre_chunk(self) -> None:
         super()._pre_chunk()              # lazy block allocation first

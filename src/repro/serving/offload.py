@@ -15,6 +15,16 @@ staging blocks. This module owns everything host-side:
   host arrays between chunks (admission, write-back, eviction), never
   while a chunk executes.
 
+* :class:`FetchPipeline` — the **overlapped** fetch front end
+  (ISSUE 9): instead of one blocking callback per fetch, the jitted
+  step issues a ``begin`` callback (enqueue the deduped gather on a
+  host worker into a per-entry double buffer, return a ticket) right
+  after Stage II, runs the dense sink/window attention and the
+  resident-candidate gather while the host copy is in flight, and
+  ``collect``s the ticket last — the residual blocking time is
+  returned as the per-step fetch stall. ``overlap=False`` on the
+  engine keeps the synchronous :class:`EntryFetch` path for A/B.
+
 * :class:`StagingMap` — the device-residency policy: ``dev_map``
   (num_blocks,) int32 maps host block → staging block (-1 = not
   staged); slots are handed out from a free list and then recycled by a
@@ -39,12 +49,58 @@ valid no matter which holder triggers the recycle.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Dict, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _dedup_heads_gather(kf, vf, rows, out_k, out_v):
+    """Shared coalesced head-row gather: rows (b, G, Q, k) flat host rows
+    (< 0 = skip) → out_k/out_v (b, G, Q, k, hd) written in place. The
+    (row, head) pairs are **deduped** before touching the pool — winners
+    repeated across heads/queries are gathered once and scattered back —
+    so host gather work scales with unique rows, not requested rows.
+    Returns (requested, unique) element counts."""
+    G = kf.shape[1]
+    g = np.broadcast_to(np.arange(G).reshape(1, G, 1, 1), rows.shape)
+    keys = np.where(rows >= 0, rows * G + g, -1).ravel()
+    m = keys >= 0
+    out_k[:] = 0
+    out_v[:] = 0
+    if not m.any():
+        return 0, 0
+    uk, inv = np.unique(keys[m], return_inverse=True)
+    ur, ug = uk // G, uk % G
+    ok = out_k.reshape(-1, out_k.shape[-1])
+    ov = out_v.reshape(-1, out_v.shape[-1])
+    ok[m] = kf[ur, ug][inv]
+    ov[m] = vf[ur, ug][inv]
+    return int(m.sum()), int(len(uk))
+
+
+def _dedup_rows_gather(kf, vf, rows, out_k, out_v):
+    """Shared coalesced full-row gather: rows (b, L) flat host rows
+    (< 0 = skip) → out_k/out_v (b, L, G, hd) in place, deduped the same
+    way (a prefix row wanted by several fill queries moves once).
+    Returns (requested, unique) row counts."""
+    keys = rows.ravel()
+    m = keys >= 0
+    out_k[:] = 0
+    out_v[:] = 0
+    if not m.any():
+        return 0, 0
+    uk, inv = np.unique(keys[m], return_inverse=True)
+    ok = out_k.reshape(-1, *out_k.shape[2:])
+    ov = out_v.reshape(-1, *out_v.shape[2:])
+    ok[m] = kf[uk][inv]
+    ov[m] = vf[uk][inv]
+    return int(m.sum()), int(len(uk))
 
 
 class EntryFetch:
@@ -52,7 +108,15 @@ class EntryFetch:
     chunk. ``heads``/``rows`` are traced-level helpers that wrap the
     numpy gathers in ``jax.pure_callback`` (CPU "side stream" analogue
     of the async device_put fetch — on TPU the same callbacks ride the
-    host callback stream while the layer pass proceeds)."""
+    host callback stream while the layer pass proceeds).
+
+    This is the **synchronous** path (``overlap=False``): one blocking
+    callback per fetch, whose whole gather time is device stall. Both
+    helpers return ``(k, v, stall_seconds)`` so the stall is observable
+    on either path; :class:`PipelinedEntryFetch` is the overlapped twin.
+    """
+
+    pipelined = False
 
     def __init__(self, pool: "HostKVPool", name: str):
         self._pool = pool
@@ -61,45 +125,229 @@ class EntryFetch:
     # -- numpy side (runs on host at execution time) --------------------
     def _heads_np(self, rows, rep):
         """rows (b, G, Q, k) flat host-pool rows (< 0 = skip), rep scalar
-        stage-repeat index → (k, v) each (b, G, Q, k, hd)."""
+        stage-repeat index → (k, v, stall) with k/v (b, G, Q, k, hd)."""
         pool = self._pool
+        t0 = time.perf_counter()
         kf, vf = pool.flat(self._name, int(rep))       # (N, G, hd) each
         rows = np.asarray(rows)
-        want = rows >= 0
-        safe = np.clip(rows, 0, kf.shape[0] - 1)
-        g = np.arange(kf.shape[1]).reshape(1, -1, 1, 1)
-        sel = want[..., None]
-        ko = np.where(sel, kf[safe, g], np.zeros((), kf.dtype))
-        vo = np.where(sel, vf[safe, g], np.zeros((), vf.dtype))
-        pool.fetched_head_rows += int(want.sum())
-        return ko, vo
+        ko = np.zeros(rows.shape + (kf.shape[-1],), kf.dtype)
+        vo = np.zeros(rows.shape + (vf.shape[-1],), vf.dtype)
+        req, uniq = _dedup_heads_gather(kf, vf, rows, ko, vo)
+        if pool.link_latency_s:
+            time.sleep(pool.link_latency_s)
+        pool.fetched_head_rows += req
+        pool.fetched_unique_head_rows += uniq
+        pool.fetch_callbacks += 1
+        return ko, vo, np.float32(time.perf_counter() - t0)
 
     def _rows_np(self, rows, rep):
-        """rows (b, L) flat host-pool rows (< 0 = skip) → (k, v) each
-        (b, L, G, hd)."""
+        """rows (b, L) flat host-pool rows (< 0 = skip) → (k, v, stall)
+        with k/v (b, L, G, hd)."""
         pool = self._pool
+        t0 = time.perf_counter()
         kf, vf = pool.flat(self._name, int(rep))
         rows = np.asarray(rows)
-        want = rows >= 0
-        safe = np.clip(rows, 0, kf.shape[0] - 1)
-        sel = want[..., None, None]
-        ko = np.where(sel, kf[safe], np.zeros((), kf.dtype))
-        vo = np.where(sel, vf[safe], np.zeros((), vf.dtype))
-        pool.fetched_fill_rows += int(want.sum())
-        return ko, vo
+        ko = np.zeros(rows.shape + kf.shape[1:], kf.dtype)
+        vo = np.zeros(rows.shape + vf.shape[1:], vf.dtype)
+        req, uniq = _dedup_rows_gather(kf, vf, rows, ko, vo)
+        if pool.link_latency_s:
+            time.sleep(pool.link_latency_s)
+        pool.fetched_fill_rows += req
+        pool.fetched_unique_fill_rows += uniq
+        pool.fetch_callbacks += 1
+        return ko, vo, np.float32(time.perf_counter() - t0)
 
     # -- traced side (called inside the jitted decode step) -------------
     def heads(self, rows: jax.Array, rep: jax.Array
-              ) -> Tuple[jax.Array, jax.Array]:
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         G, hd, dt = self._pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(rows.shape + (hd,), dt)
-        return jax.pure_callback(self._heads_np, (sds, sds), rows, rep)
+        st = jax.ShapeDtypeStruct((), jnp.float32)
+        return jax.pure_callback(self._heads_np, (sds, sds, st), rows, rep)
 
     def rows(self, rows: jax.Array, rep: jax.Array
-             ) -> Tuple[jax.Array, jax.Array]:
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         G, hd, dt = self._pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(rows.shape + (G, hd), dt)
-        return jax.pure_callback(self._rows_np, (sds, sds), rows, rep)
+        st = jax.ShapeDtypeStruct((), jnp.float32)
+        return jax.pure_callback(self._rows_np, (sds, sds, st), rows, rep)
+
+
+class PipelinedEntryFetch:
+    """Overlapped twin of :class:`EntryFetch` (ISSUE 9): the fetch is
+    split into a ``begin_*`` callback that only *enqueues* the gather on
+    the pipeline's host worker (returning an int32 ticket) and a
+    ``collect_*`` callback that blocks on that ticket. The layer issues
+    ``begin`` right after Stage II resolves its winners, runs the dense
+    sink/window gathers and the resident-candidate gather while the host
+    copy is in flight, and only then ``collect``s — the blocking time
+    that remains (returned as the stall scalar) is the host latency the
+    layer pass failed to hide.
+
+    Ordering is enforced by *data* dependencies, not barriers: XLA
+    strips ``optimization_barrier`` ops before scheduling and re-derives
+    only elementwise deps, so a barrier tuple does **not** pin the dense
+    work between the two callbacks (measured on the CPU backend: the
+    begin callback ran *after* the sandwiched matmuls). Instead,
+
+    * ``fence(ticket)`` returns an int32 that is always 0 at runtime but
+      unfoldable at compile time — adding it to the dense gathers'
+      indices makes every gather truly depend on the begin callback;
+    * ``collect_*`` takes the dense outputs as extra (ignored) callback
+      operands, so collect schedules only after the work it is hiding
+      the host copy behind.
+
+    Per-entry begin/collect pairs are serialized the same way: collect
+    consumes begin's ticket, and the next step's begin operands depend
+    on this step's attention output. That strict alternation is what
+    makes the pipeline's per-entry **double buffer** safe: ticket t
+    writes buffer t % 2, and buffer t % 2 is not reused before
+    collect(t+1)'s value has been consumed downstream."""
+
+    pipelined = True
+
+    def __init__(self, pipeline: "FetchPipeline", name: str):
+        self._pl = pipeline
+        self._name = name
+        # entry name / fetch kind are trace-time constants — bind them
+        # into distinct callables (pure_callback operands must be arrays)
+        self._begin_h = partial(pipeline._begin_np, name=name, kind="heads")
+        self._begin_r = partial(pipeline._begin_np, name=name, kind="rows")
+
+    # -- traced side ----------------------------------------------------
+    @staticmethod
+    def fence(ticket: jax.Array) -> jax.Array:
+        """int32 scalar that is 0 at runtime (tickets stay far below
+        2**30 — they reset with the run) but data-depends on the begin
+        callback in a way the compiler cannot fold away. Add it to
+        gather indices to schedule the gathers inside the overlap
+        window; the values are bit-identical (idx + 0)."""
+        return jax.lax.shift_right_logical(ticket, jnp.int32(30))
+
+    def begin_heads(self, rows: jax.Array, rep: jax.Array) -> jax.Array:
+        tk = jax.ShapeDtypeStruct((), jnp.int32)
+        return jax.pure_callback(self._begin_h, tk, rows, rep)
+
+    def collect_heads(self, ticket: jax.Array, rows_shape: tuple,
+                      *after: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """``after`` arrays are passed (as single-element slices) into
+        the collect callback purely as scheduling operands: collect
+        cannot run until the dense work producing them has."""
+        G, hd, dt = self._pl.pool.head_shape(self._name)
+        sds = jax.ShapeDtypeStruct(tuple(rows_shape) + (hd,), dt)
+        st = jax.ShapeDtypeStruct((), jnp.float32)
+        deps = [a.reshape(-1)[:1] for a in after]
+        return jax.pure_callback(self._pl._collect_np, (sds, sds, st),
+                                 ticket, *deps)
+
+    def begin_rows(self, rows: jax.Array, rep: jax.Array) -> jax.Array:
+        tk = jax.ShapeDtypeStruct((), jnp.int32)
+        return jax.pure_callback(self._begin_r, tk, rows, rep)
+
+    def collect_rows(self, ticket: jax.Array, rows_shape: tuple,
+                     *after: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        G, hd, dt = self._pl.pool.head_shape(self._name)
+        sds = jax.ShapeDtypeStruct(tuple(rows_shape) + (G, hd), dt)
+        st = jax.ShapeDtypeStruct((), jnp.float32)
+        deps = [a.reshape(-1)[:1] for a in after]
+        return jax.pure_callback(self._pl._collect_np, (sds, sds, st),
+                                 ticket, *deps)
+
+
+class FetchPipeline:
+    """Overlapped host-fetch front end over a :class:`HostKVPool`
+    (ISSUE 9). ``entry(name)`` hands the jitted chunk a
+    :class:`PipelinedEntryFetch` whose begin/collect callbacks run here:
+
+    * **begin** picks the entry's spare double buffer, submits the
+      deduped gather to a one-worker thread pool (numpy releases the
+      GIL on the fancy-indexing copies, so the gather genuinely overlaps
+      the XLA compute between begin and collect), and returns a ticket.
+    * **collect** blocks on the ticket's future and returns the filled
+      buffers plus the blocking time — the *residual* stall after
+      overlap, the pipeline's headline observable.
+
+    One worker thread is deliberate: per entry the begin/collect pairs
+    are already serialized by data flow, and a single worker keeps
+    cross-entry gathers FIFO with their begin order, so the deepest the
+    queue ever gets is the few begins issued while an earlier entry's
+    gather still runs — exactly the overlap window."""
+
+    def __init__(self, pool: "HostKVPool"):
+        self.pool = pool
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="kv-fetch")
+        self._tickets: Dict[int, tuple] = {}
+        self._next = 0
+        # (name, kind) → [(out_k, out_v), (out_k, out_v)] double buffer,
+        # allocated lazily at the first begin of that shape
+        self._bufs: Dict[tuple, List[tuple]] = {}
+        self._flip: Dict[tuple, int] = {}
+
+    def entry(self, name: str) -> PipelinedEntryFetch:
+        return PipelinedEntryFetch(self, name)
+
+    def reset(self) -> None:
+        """Drop queued work between runs (the jitted chunk closes over
+        this exact object — reset in place, like the pool's zeroing)."""
+        for fut, _ in self._tickets.values():
+            fut.cancel()
+        self._tickets.clear()
+        self._next = 0
+
+    # -- host side ------------------------------------------------------
+    def _gather(self, name, kind, rows, rep, out_k, out_v):
+        kf, vf = self.pool.flat(name, rep)
+        if kind == "heads":
+            out = _dedup_heads_gather(kf, vf, rows, out_k, out_v)
+        else:
+            out = _dedup_rows_gather(kf, vf, rows, out_k, out_v)
+        if self.pool.link_latency_s:     # modeled link cost runs on the
+            time.sleep(self.pool.link_latency_s)  # worker → overlappable
+        return out
+
+    def _begin_np(self, rows, rep, *, name, kind):
+        pool = self.pool
+        rows = np.asarray(rows)
+        rep = int(rep)
+        if kind == "heads":
+            _, hd, dt = pool.head_shape(name)
+            oshape = rows.shape + (hd,)
+        else:
+            G, hd, dt = pool.head_shape(name)
+            oshape = rows.shape + (G, hd)
+        key = (name, kind)
+        if key not in self._bufs:
+            self._bufs[key] = [(np.zeros(oshape, dt), np.zeros(oshape, dt))
+                               for _ in range(2)]
+            self._flip[key] = 0
+        self._flip[key] ^= 1
+        out_k, out_v = self._bufs[key][self._flip[key]]
+        assert out_k.shape == oshape, "fetch shape changed mid-run"
+        t = self._next
+        self._next += 1
+        fut = self._exec.submit(self._gather, name, kind, rows, rep,
+                                out_k, out_v)
+        self._tickets[t] = (fut, (kind, out_k, out_v))
+        pool.fetch_callbacks += 1
+        return np.int32(t)
+
+    def _collect_np(self, ticket, *_after):
+        pool = self.pool
+        t0 = time.perf_counter()
+        fut, (kind, out_k, out_v) = self._tickets.pop(int(ticket))
+        req, uniq = fut.result()
+        stall = time.perf_counter() - t0
+        if kind == "heads":
+            pool.fetched_head_rows += req
+            pool.fetched_unique_head_rows += uniq
+        else:
+            pool.fetched_fill_rows += req
+            pool.fetched_unique_fill_rows += uniq
+        pool.fetch_callbacks += 1
+        return out_k, out_v, np.float32(stall)
 
 
 class HostKVPool:
@@ -124,9 +372,31 @@ class HostKVPool:
             self._heads[name] = (G, hd, dtype)
         self._entries = {name: EntryFetch(self, name) for name in shapes}
         # host-side telemetry (tests/benchmarks; the authoritative per-
-        # request counts ride the device-side "fetch" cache leaves)
+        # request counts ride the device-side "fetch" cache leaves).
+        # *_head_rows / *_fill_rows count requested per-(head, query)
+        # elements — what the device receives; the *_unique_* twins count
+        # what the host actually gathered after dedup (ISSUE 9), so
+        # requested-bytes stays comparable with PR 5 while the dedup
+        # saving is visible as the requested/unique gap.
         self.fetched_head_rows = 0
         self.fetched_fill_rows = 0
+        self.fetched_unique_head_rows = 0
+        self.fetched_unique_fill_rows = 0
+        self.fetch_callbacks = 0
+        # modeled host-link latency per gather (benchmarks only): on a
+        # CPU-only host the numpy gather is nearly free, which hides the
+        # schedule difference the pipeline exists for. Setting this adds
+        # a sleep per gather *inside* the fetch path — the sync path
+        # pays it as stall, the pipelined path hides it behind the dense
+        # work between begin and collect. Never set in serving.
+        self.link_latency_s = 0.0
+
+    def reset_counters(self) -> None:
+        self.fetched_head_rows = 0
+        self.fetched_fill_rows = 0
+        self.fetched_unique_head_rows = 0
+        self.fetched_unique_fill_rows = 0
+        self.fetch_callbacks = 0
 
     def entry(self, name: str) -> EntryFetch:
         return self._entries[name]
@@ -219,11 +489,13 @@ class StagingMap:
         self.ref[s] = True
 
     def touch(self, host_blocks) -> None:
-        """Second-chance reference bits for blocks the last chunk read."""
-        for hb in np.atleast_1d(host_blocks):
-            s = self.dev_map[int(hb)]
-            if s >= 0:
-                self.ref[s] = True
+        """Second-chance reference bits for blocks the last chunk read
+        (vectorized — one scatter per chunk, not a python loop)."""
+        hbs = np.atleast_1d(np.asarray(host_blocks, np.int64))
+        if hbs.size == 0:
+            return
+        slots = self.dev_map[hbs]
+        self.ref[slots[slots >= 0]] = True
 
     def acquire(self) -> Optional[Tuple[int, int]]:
         """One staging slot: free list first, else second-chance clock
@@ -248,6 +520,26 @@ class StagingMap:
             self.owner[s] = -1
             return s, hb
         return None
+
+    def acquire_batch(self, n: int) -> List[Tuple[int, int]]:
+        """Up to ``n`` staging slots in one call (ISSUE 9: the prefetch
+        path asks for its whole block batch at once instead of
+        block-at-a-time). Returns [(slot, evicted_host_block or -1)];
+        shorter than ``n`` when the clock runs out of unpinned victims.
+        Acquired slots are held (pinned) until the batch completes so a
+        full clock lap cannot hand the same slot out twice before the
+        caller installs into it."""
+        out = []
+        for _ in range(n):
+            got = self.acquire()
+            if got is None:
+                break
+            self.pinned[got[0]] = True
+            out.append(got)
+        for s, _ in out:
+            self.pinned[s] = False
+            self.ref[s] = True
+        return out
 
     def install(self, host_block: int, slot: int) -> None:
         self.dev_map[host_block] = slot

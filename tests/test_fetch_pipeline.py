@@ -1,0 +1,175 @@
+"""Overlapped host-fetch pipeline (ISSUE 9): token identity, callback
+budget, and fetch-stall observability.
+
+The pipelined fetch (``overlap=True``, the default) must be bit-identical
+to the synchronous fetch (``overlap=False`` — the PR-5 discipline: one
+blocking callback per fetch) and to the device-resident
+``PagedServingEngine``: begin/collect only moves *when* the host copy
+runs, never what it returns. The callback budget is the coalescing
+claim — at most one begin + one collect per cache entry per decode
+chunk, independent of batch size, heads, and queries per head."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serving import (OffloadedPagedServingEngine, PagedServingEngine,
+                           Request)
+
+jax.config.update("jax_platform_name", "cpu")
+
+NUM_BLOCKS = 64
+NUM_DEVICE = 16                      # 25% of the host pool
+GEOM = dict(n_max=512, max_batch=2, block_size=16, num_blocks=NUM_BLOCKS,
+            chunk_size=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(11)
+    prompts = {n: rng.randint(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (300, 260, 140)}
+    return cfg, params, prompts
+
+
+def _run(cfg, params, specs, prompts, **kw):
+    eng = PagedServingEngine(cfg, params, **GEOM, **kw)
+    for i, (plen, gen) in enumerate(specs):
+        eng.submit(Request(uid=i, prompt=prompts[plen], max_new_tokens=gen))
+    return {r.uid: r for r in eng.run()}, eng
+
+
+def _assert_identical(base, off, specs, label):
+    assert sorted(off) == sorted(base)
+    for uid, (_, gen) in enumerate(specs):
+        np.testing.assert_array_equal(base[uid].output, off[uid].output,
+                                      err_msg=f"{label}: request {uid}")
+
+
+# ------------------------------------------- identity, 80-step drift run ----
+def test_overlap_identity_80_step_drift(setup):
+    """80 decode steps whose retrieval targets drift across the whole
+    context: resident, sync-offloaded, and overlapped engines generate
+    identical tokens while the overlapped run reports per-request stall
+    time, callback counts, and unique-row bytes."""
+    cfg, params, prompts = setup
+    specs = [(300, 80), (260, 10)]
+    base, _ = _run(cfg, params, specs, prompts)
+    syn, es = _run(cfg, params, specs, prompts, offload=True,
+                   num_device_blocks=NUM_DEVICE, overlap=False)
+    ov, eo = _run(cfg, params, specs, prompts, offload=True,
+                  num_device_blocks=NUM_DEVICE)
+    assert isinstance(es, OffloadedPagedServingEngine)
+    assert es.pipeline is None and not es.overlap       # escape hatch
+    assert eo.pipeline is not None and eo.overlap       # default
+    _assert_identical(base, syn, specs, "sync-drift")
+    _assert_identical(base, ov, specs, "overlap-drift")
+    # both disciplines moved the same unique rows off the host …
+    assert eo.host.fetched_unique_head_rows == es.host.fetched_unique_head_rows
+    assert eo.host.fetched_head_rows == es.host.fetched_head_rows
+    # … and dedup actually collapsed shared (head, query) requests
+    assert eo.host.fetched_head_rows > eo.host.fetched_unique_head_rows
+    for done in (syn, ov):
+        r = done[0]
+        assert r.fetched_bytes > 0
+        assert 0 < r.fetched_unique_bytes <= r.fetched_bytes
+        assert r.fetch_stall_s >= 0.0 and r.fetch_callbacks > 0
+    # the pipelined run drained every ticket (no orphaned futures)
+    assert eo.pipeline._tickets == {}
+    assert eo.fetch_stall_chunks and eo.fetch_stall_s >= 0.0
+
+
+# ------------------------------------------------- fallback retrieval -------
+def test_overlap_identity_fallback_retrieval(setup):
+    cfg, params, prompts = setup
+    specs = [(300, 12), (260, 10)]
+    syn, _ = _run(cfg, params, specs, prompts, fused=False, offload=True,
+                  num_device_blocks=NUM_DEVICE, overlap=False)
+    ov, eng = _run(cfg, params, specs, prompts, fused=False, offload=True,
+                   num_device_blocks=NUM_DEVICE)
+    _assert_identical(syn, ov, specs, "fallback")
+    assert sum(r.staging_misses for r in ov.values()) > 0
+
+
+# ------------------------- chunked prefill + prefix sharing (fill fetch) ----
+def test_overlap_identity_chunked_prefill_sharing(setup):
+    """Mixed prefill+decode chunks with block-granular prefix sharing:
+    the filling slot's dense prefix reads ride the pipelined fill fetch
+    (its own begin/collect pair under the any-fill branch) and tokens
+    still match the synchronous engine exactly."""
+    cfg, params, prompts = setup
+    rng = np.random.RandomState(3)
+    shared = prompts[260]       # prefix alone overflows the staging pool
+    share_prompts = {0: np.concatenate([shared, rng.randint(
+        0, cfg.vocab_size, size=(17,))]).astype(np.int32),
+        1: np.concatenate([shared, rng.randint(
+            0, cfg.vocab_size, size=(9,))]).astype(np.int32)}
+    specs = [(0, 10), (1, 8)]
+    kw = dict(prefill_budget=8, share_prefixes=True, offload=True,
+              num_device_blocks=NUM_DEVICE)
+    syn, es = _run(cfg, params, specs, share_prompts, overlap=False, **kw)
+    ov, eo = _run(cfg, params, specs, share_prompts, **kw)
+    _assert_identical(syn, ov, specs, "prefill-sharing")
+    assert eo.host.fetched_fill_rows > 0      # prefix reads hit the host
+    assert eo.host.fetched_fill_rows == es.host.fetched_fill_rows
+    assert eo.shared_block_hits > 0
+
+
+# --------------------------------------------------- mid-flight cancel ------
+def test_overlap_cancel_midflight(setup):
+    """cancel(uid) between chunks with fetches in flight: the pipeline
+    ends the run with no orphaned tickets, both tiers reclaim fully, and
+    the survivor's tokens match the device-resident engine."""
+    cfg, params, prompts = setup
+    specs = [(300, 40), (260, 10)]
+    eng = PagedServingEngine(cfg, params, **GEOM, offload=True,
+                             num_device_blocks=NUM_DEVICE)
+    for i, (plen, gen) in enumerate(specs):
+        eng.submit(Request(uid=i, prompt=prompts[plen], max_new_tokens=gen))
+    eng.start()
+    eng.step_serve()                 # both admitted, first chunk decoded
+    eng.cancel(0)
+    while eng.queue or any(s is not None for s in eng._slots):
+        eng.step_serve()
+    done = {r.uid: r for r in eng._done}
+    assert 0 < done[0].output.shape[0] < 40      # partial output
+    base, _ = _run(cfg, params, specs, prompts)
+    np.testing.assert_array_equal(done[1].output, base[1].output)
+    assert eng.pipeline._tickets == {}
+    assert len(eng._free) == eng.num_blocks
+    assert eng.staging.resident_count() == 0
+
+
+# --------------------------------- callback budget + evict/readmit cycle ----
+def test_overlap_callback_budget(setup):
+    """≤ 2 host callbacks (one begin + one collect) per cache entry per
+    decode step — the fetch is coalesced across every head, query, and
+    batched request — through an evict/readmit cycle (three requests
+    over two slots). Each serve chunk scans ``chunk_size`` decode
+    steps; done-masked steps still trace (and run) their callbacks, so
+    the normalization is exact."""
+    cfg, params, prompts = setup
+    specs = [(300, 8), (260, 12), (140, 6)]
+    eng = PagedServingEngine(cfg, params, **GEOM, offload=True,
+                             num_device_blocks=NUM_DEVICE)
+    for i, (plen, gen) in enumerate(specs):
+        eng.submit(Request(uid=i, prompt=prompts[plen], max_new_tokens=gen))
+    eng.start()
+    chunks = 0
+    while eng.queue or any(s is not None for s in eng._slots):
+        eng.step_serve()
+        chunks += 1
+    assert eng.peak_concurrency == 2             # third request readmitted
+    assert chunks > 0 and eng.num_fetch_layers > 0
+    steps = chunks * GEOM["chunk_size"]
+    per_layer_step = eng.host.fetch_callbacks / (eng.num_fetch_layers
+                                                 * steps)
+    assert 0 < per_layer_step <= 2.0, per_layer_step
+    # engine-level accounting attributes every callback to a request
+    done = {r.uid: r for r in eng._done}
+    assert sum(r.fetch_callbacks for r in done.values()) > 0
+    harvested = sum(c for _, c in eng.fetch_stall_chunks)
+    assert 0 < harvested <= eng.host.fetch_callbacks
