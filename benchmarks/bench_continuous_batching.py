@@ -67,10 +67,23 @@ single-device engine at identical pool geometry. Runs on CPU only when
 devices before jax initialised; otherwise the record is marked
 ``skipped`` (never a silent pass — report.py shows the skip).
 
+Scenario 6 (ISSUE 10): **fault-injected serving** — the offloaded
+engine under a deterministic, seeded `FaultPlan` (see
+docs/robustness.md). Four runs at identical geometry: clean;
+*recovered* (transient gather failures + one worker hang, inside the
+deadline/retry budget — must keep exact token parity with clean and
+zero degraded steps while actually exercising ≥1 timeout and retry);
+*degraded* (persistent gather failures past the retry budget — must
+still complete every request full-length, with degraded steps
+counted); and *quarantine* (a per-slot engine fault — exactly one
+request fails, survivors keep exact parity). `verify_invariants()`
+runs after every arm. All gates are baseline-free and deterministic.
+
 ``run_smoke()`` returns the same numbers machine-readable — the CI
 benchmark job persists them as BENCH_ci.json and fails on >20% tokens/s
 regression vs the committed BENCH_continuous_batching.json baseline (and
-on the chunked-prefill + prefix-sharing + sharded-serving gates above).
+on the chunked-prefill + prefix-sharing + sharded-serving +
+fault-injection gates above).
 """
 from __future__ import annotations
 
@@ -83,7 +96,8 @@ from benchmarks.common import csv_row
 from repro import configs
 from repro.data import SyntheticLMStream
 from repro.models import model as M
-from repro.serving import (PagedServingEngine, Request, ServingEngine,
+from repro.serving import (FaultPlan, FaultSpec, InvariantViolation,
+                           PagedServingEngine, Request, ServingEngine,
                            WaveServingEngine)
 
 # (prompt_len, max_new) — short chatty requests mixed with long ones,
@@ -177,7 +191,7 @@ def run_smoke() -> list:
     record, the tiered-offload serving record, and the prefix-sharing
     record (benchmarks.run handles the list)."""
     return [_smoke_continuous(), run_smoke_mixed(), run_smoke_offload(),
-            run_smoke_share(), run_smoke_sharded()]
+            run_smoke_share(), run_smoke_sharded(), run_smoke_faults()]
 
 
 def _smoke_continuous() -> dict:
@@ -481,6 +495,127 @@ def run_smoke_sharded() -> dict:
         "concurrency_ratio_4x_over_1x":
             round(hi["peak"] / max(lo["peak"], 1), 4),
         "token_parity_sharded_vs_single": bool(m["parity"]),
+    }
+
+
+# ------------------------------------------- fault injection (ISSUE 10) -----
+# Small offloaded geometry (the fault suite's): a tiny staging pool so
+# host gathers genuinely carry the retrieval working set — an injected
+# fetch fault has to matter for the parity/degradation claims to mean
+# anything. Two requests keep the four arms' wall time bounded.
+FI_WORKLOAD = [(300, 16), (140, 8)]
+FI_GEOM = dict(n_max=512, max_batch=2, block_size=16, num_blocks=64,
+               chunk_size=4)
+FI_DEVICE = 16
+
+
+def _run_fault_engine(cfg, params, prompts, faults=None, **kw):
+    engine = PagedServingEngine(cfg, params, **FI_GEOM, offload=True,
+                                num_device_blocks=FI_DEVICE, faults=faults,
+                                **kw)
+    for i, ((_, gen), p) in enumerate(zip(FI_WORKLOAD, prompts)):
+        engine.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
+    t0 = time.perf_counter()
+    done = {r.uid: r for r in engine.run()}
+    wall = time.perf_counter() - t0
+    try:
+        engine.verify_invariants()
+        invariants = True
+    except InvariantViolation:
+        invariants = False
+    out = dict(
+        wall=wall,
+        fetch_retries=int(engine.fetch_retries),
+        fetch_timeouts=int(engine.fetch_timeouts),
+        degraded_steps=int(engine.degraded_steps),
+        respawns=int(engine.pipeline.respawns if engine.pipeline else 0),
+        quarantined=[r.uid for r in engine.quarantined],
+        invariants=invariants,
+        failed={u: r.failed for u, r in done.items()},
+        lens={u: len(r.output) for u, r in done.items()},
+        outputs={u: np.asarray(r.output) for u, r in done.items()})
+    engine.close()
+    return out
+
+
+def _measure_faults() -> dict:
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+               for s, _ in FI_WORKLOAD]
+    clean = _run_fault_engine(cfg, params, prompts)
+    recovered = _run_fault_engine(
+        cfg, params, prompts,
+        faults=FaultPlan([FaultSpec("fetch.gather", "fail", after=2,
+                                    count=2),
+                          FaultSpec("fetch.gather", "hang", after=8,
+                                    count=1)]),
+        fetch_timeout_s=0.25, fetch_max_retries=2, fetch_backoff_s=0.001)
+    degraded = _run_fault_engine(
+        cfg, params, prompts,
+        faults=FaultPlan([FaultSpec("fetch.gather", "fail", after=6,
+                                    count=None)]),
+        fetch_max_retries=1, fetch_backoff_s=0.0)
+    quarantine = _run_fault_engine(
+        cfg, params, prompts,
+        faults=FaultPlan([FaultSpec("engine.slot", "fail",
+                                    match={"uid": 0})]))
+    return dict(clean=clean, recovered=recovered, degraded=degraded,
+                quarantine=quarantine, arch=cfg.name)
+
+
+def run_smoke_faults() -> dict:
+    """The fault-injection record + its baseline-free CI gates (see
+    docs/robustness.md): recovered-vs-clean exact parity with zero
+    degraded steps and ≥1 timeout/retry actually exercised; the degraded
+    arm completing full-length; quarantine isolating exactly one
+    request; invariants clean after every arm."""
+    m = _measure_faults()
+    clean = m["clean"]
+    uids = list(range(len(FI_WORKLOAD)))
+
+    def parity(arm, subset):
+        return all(np.array_equal(clean["outputs"][u],
+                                  m[arm]["outputs"][u]) for u in subset)
+
+    survivors = [u for u in uids if u not in m["quarantine"]["quarantined"]]
+    full = {u: gen for u, (_, gen) in enumerate(FI_WORKLOAD)}
+    zero_lost = (
+        all(not m["degraded"]["failed"][u]
+            and m["degraded"]["lens"][u] == full[u] for u in uids)
+        and all(not m["recovered"]["failed"][u]
+                and m["recovered"]["lens"][u] == full[u] for u in uids)
+        and all(not m["quarantine"]["failed"][u]
+                and m["quarantine"]["lens"][u] == full[u]
+                for u in survivors))
+
+    def arm_stats(arm):
+        r = m[arm]
+        return {"fetch_retries": r["fetch_retries"],
+                "fetch_timeouts": r["fetch_timeouts"],
+                "degraded_steps": r["degraded_steps"],
+                "respawns": r["respawns"],
+                "wall_s": round(r["wall"], 3)}
+
+    return {
+        "benchmark": "fault_injection",
+        "arch": m["arch"],
+        "fault_injection": {
+            "recovered": arm_stats("recovered"),
+            "degraded": arm_stats("degraded"),
+            "quarantine": {
+                "quarantined_uids": m["quarantine"]["quarantined"],
+                "survivor_uids": survivors,
+            },
+        },
+        "token_parity_fault_vs_clean": bool(parity("recovered", uids)),
+        "token_parity_quarantine_survivors":
+            bool(parity("quarantine", survivors)),
+        "zero_lost_unaffected": bool(zero_lost),
+        "invariants_clean": bool(all(m[a]["invariants"] for a in
+                                     ("clean", "recovered", "degraded",
+                                      "quarantine"))),
     }
 
 

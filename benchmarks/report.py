@@ -201,6 +201,43 @@ def render_bench_trajectory(paths: list) -> None:
                       f"| {'ok' if par else '✗' if par is not None else '-'} "
                       f"|")
 
+    fi_rows = [(os.path.basename(p), rec)
+               for _, p, payload in records
+               for rec in payload.get("results", [])
+               if rec.get("fault_injection")]
+    if fi_rows:
+        print("\n### Fault-injection trajectory (recovered arm must hold "
+              "parity with 0 degraded steps; quarantine isolates exactly "
+              "one request)\n")
+        print("| file | benchmark | arm | retries | timeouts | "
+              "degraded steps | respawns | quarantined | parity | "
+              "zero lost | invariants |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for name, rec in fi_rows:
+            fi = rec["fault_injection"]
+
+            def flag(key):
+                v = rec.get(key)
+                return "ok" if v else "✗" if v is not None else "-"
+
+            zl, inv = flag("zero_lost_unaffected"), flag("invariants_clean")
+            for arm in ("recovered", "degraded"):
+                a = fi.get(arm, {})
+                par = flag("token_parity_fault_vs_clean" if
+                           arm == "recovered" else "zero_lost_unaffected")
+                print(f"| {name} | {rec['benchmark']} | {arm} "
+                      f"| {a.get('fetch_retries', '-')} "
+                      f"| {a.get('fetch_timeouts', '-')} "
+                      f"| {a.get('degraded_steps', '-')} "
+                      f"| {a.get('respawns', '-')} | - "
+                      f"| {par} | {zl} | {inv} |")
+            q = fi.get("quarantine", {})
+            print(f"| {name} | {rec['benchmark']} | quarantine "
+                  f"| - | - | - | - "
+                  f"| {q.get('quarantined_uids', '-')} "
+                  f"| {flag('token_parity_quarantine_survivors')} "
+                  f"| {zl} | {inv} |")
+
     path_rows = [(os.path.basename(p), rec)
                  for _, p, payload in records
                  for rec in payload.get("results", [])

@@ -131,6 +131,17 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
     the overlapped arm's fetch-stall p50 must undercut the sync arm's
     under the same modeled link (≤ 0.75×, with a 1 ms noise floor).
 
+    Records with ``fault_injection`` (ISSUE 10) gate baseline-free on
+    every host — the numbers are deterministic at fixed seeds: the
+    recovered arm (transient failures + a worker hang inside the
+    deadline/retry budget) must keep exact token parity with the clean
+    arm, suffer zero degraded steps, and actually exercise ≥1 fetch
+    timeout and ≥1 retry (a gate that never fires is vacuous); the
+    degraded arm must complete every request full-length with
+    ``degraded_steps > 0``; the quarantine arm must fail exactly one
+    request while survivors keep exact parity; and the engine invariant
+    auditor must pass after every arm.
+
     Records with ``share`` (block-granular prefix sharing, ISSUE 7) are
     gated baseline-free on every host: generated tokens must be
     bit-identical to the no-sharing engine (fused path, meta-view
@@ -251,6 +262,49 @@ def check_regression(payload: dict, baseline: dict, tol: float) -> list:
                     f"{rec['benchmark']}: overlap fetch stall p50 "
                     f"{ov:.0f}us vs sync {ss:.0f}us — the begin/collect "
                     f"window no longer hides the host copy")
+        # fault-injection hard gates (ISSUE 10), baseline-free: seeded
+        # fault schedules make every number deterministic on any host
+        fi = rec.get("fault_injection")
+        if fi:
+            if rec.get("token_parity_fault_vs_clean") is False:
+                failures.append(
+                    f"{rec['benchmark']}: recovered-arm tokens diverged "
+                    f"from the clean run — recovery is no longer exact")
+            if rec.get("token_parity_quarantine_survivors") is False:
+                failures.append(
+                    f"{rec['benchmark']}: quarantine-survivor tokens "
+                    f"diverged from the clean run — isolation leaked")
+            if rec.get("zero_lost_unaffected") is False:
+                failures.append(
+                    f"{rec['benchmark']}: a request untouched by the "
+                    f"injected fault failed or came back short")
+            if rec.get("invariants_clean") is False:
+                failures.append(
+                    f"{rec['benchmark']}: verify_invariants() failed "
+                    f"after a fault arm — recovery corrupted engine state")
+            recov = fi.get("recovered", {})
+            if recov.get("degraded_steps", 0) != 0:
+                failures.append(
+                    f"{rec['benchmark']}: recovered arm took "
+                    f"{recov['degraded_steps']} degraded step(s) — the "
+                    f"retry budget no longer absorbs transient faults")
+            if recov.get("fetch_timeouts", 0) < 1 \
+                    or recov.get("fetch_retries", 0) < 1:
+                failures.append(
+                    f"{rec['benchmark']}: recovered arm exercised "
+                    f"{recov.get('fetch_timeouts', 0)} timeout(s) / "
+                    f"{recov.get('fetch_retries', 0)} retrie(s) — the "
+                    f"injected faults no longer reach the fetch path")
+            if fi.get("degraded", {}).get("degraded_steps", 0) <= 0:
+                failures.append(
+                    f"{rec['benchmark']}: degraded arm recorded no "
+                    f"degraded steps — exhausted fetches are not being "
+                    f"counted (or the fault never fired)")
+            q = fi.get("quarantine", {}).get("quarantined_uids", [])
+            if len(q) != 1:
+                failures.append(
+                    f"{rec['benchmark']}: quarantine arm isolated "
+                    f"{len(q)} request(s) (expected exactly 1): {q}")
         base = base_by_name.get(rec["benchmark"])
         if base is None:
             continue

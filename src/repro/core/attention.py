@@ -200,7 +200,8 @@ def _segment_attention(qg: jax.Array,
                        sink_size: int, window_size: int,
                        sm_scale: float, softcap: float,
                        s_sink: Optional[jax.Array] = None,
-                       s_loc: Optional[jax.Array] = None) -> jax.Array:
+                       s_loc: Optional[jax.Array] = None,
+                       ret_keep: Optional[jax.Array] = None) -> jax.Array:
     """Joint softmax over the three gathered segments (Eq. 2-3 core).
 
     The segments may come from a contiguous per-row cache *or* from a
@@ -213,6 +214,11 @@ def _segment_attention(qg: jax.Array,
     k_ret/v_ret: (b, G, Hg, k, hd); k_loc/v_loc: (b, W, G, hd).
     ``s_sink``/``s_loc`` may arrive precomputed (see
     ``dense_segment_scores``); masking always happens here.
+    ``ret_keep`` (b, G, Hg, k) bool, optional: extra validity on the
+    retrieved segment — the tiered degraded-mode mask (ISSUE 10) drops
+    winners whose host fetch exhausted its retries, so the step falls
+    back to sink + window + whatever was resident instead of attending
+    to zeroed garbage. All-True (or None) is bit-identical.
     → (b, G, Hg, hd) float32.
     """
     # --- retrieved segment ------------------------------------------------
@@ -220,6 +226,8 @@ def _segment_attention(qg: jax.Array,
     # guard: only positions actually inside the Retrieval region count —
     # with an empty region (early decode) Stage-II returns arbitrary indices
     ret_valid = (top_idx >= sink_size) & (top_idx < enc_end[:, None, None, None])
+    if ret_keep is not None:
+        ret_valid = ret_valid & ret_keep
     s_ret = jnp.where(ret_valid, s_ret, NEG_INF)
 
     if s_sink is None:
@@ -262,7 +270,8 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
                                   k_loc: Optional[jax.Array] = None,
                                   v_loc: Optional[jax.Array] = None,
                                   s_sink: Optional[jax.Array] = None,
-                                  s_loc: Optional[jax.Array] = None
+                                  s_loc: Optional[jax.Array] = None,
+                                  ret_keep: Optional[jax.Array] = None
                                   ) -> jax.Array:
     """Paged twin of ``sparse_decode_attention``: all three segments are
     gathered from the shared block pool through per-row block tables
@@ -309,7 +318,7 @@ def sparse_decode_attention_paged(q: jax.Array, pool_k: jax.Array,
         qg, k_sink, v_sink, k_ret, v_ret, k_loc, v_loc, top_idx,
         window_start, pos, enc_end, sink_size=sink_size,
         window_size=window_size, sm_scale=sm_scale, softcap=softcap,
-        s_sink=s_sink, s_loc=s_loc
+        s_sink=s_sink, s_loc=s_loc, ret_keep=ret_keep
     ).reshape(b, H, hd)
 
 
@@ -329,7 +338,8 @@ def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
                                    k_loc: Optional[jax.Array] = None,
                                    v_loc: Optional[jax.Array] = None,
                                    s_sink: Optional[jax.Array] = None,
-                                   s_loc: Optional[jax.Array] = None
+                                   s_loc: Optional[jax.Array] = None,
+                                   ret_keep: Optional[jax.Array] = None
                                    ) -> jax.Array:
     """Tiered twin of ``sparse_decode_attention_paged`` (ISSUE 6): the
     dense sink/window gathers are indirected through the **staging map**
@@ -352,7 +362,7 @@ def sparse_decode_attention_tiered(q: jax.Array, pool_k: jax.Array,
         sink_size=sink_size, window_size=window_size, sm_scale=sm_scale,
         softcap=softcap, k_ret=k_ret, v_ret=v_ret, k_sink=k_sink,
         v_sink=v_sink, k_loc=k_loc, v_loc=v_loc, s_sink=s_sink,
-        s_loc=s_loc)
+        s_loc=s_loc, ret_keep=ret_keep)
 
 
 def chunk_fill_attention(q: jax.Array, k_pref: jax.Array, v_pref: jax.Array,

@@ -605,11 +605,20 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
     dense outputs ride into ``collect_heads`` as extra operands — the
     data is identical either way, only the schedule moves.
 
+    When a miss fetch exhausts its retry budget (ISSUE 10) the callback
+    returns zeroed buffers with ``ok=0`` and this step **degrades**:
+    the failed miss rows are masked out of the retrieved segment
+    (``ret_keep``) so attention falls back to sink + window + resident
+    staged winners — recall is sacrificed for that step, never
+    correctness or liveness.
+
     → (y, pool, fetch-stat increments {"touched": (num_blocks,) winner
     references per host block — the prefetch predictor's signal;
     "rows": (b, 3) [winner rows, staging hits, host fetches];
     "stall": () seconds the step blocked on the host fetch;
-    "calls": () host callbacks this step}).
+    "calls": () host callbacks this step;
+    "retries"/"timeouts": () fetch re-issues / deadline expiries;
+    "degraded": (b,) 1 per row whose misses were dropped this step}).
     """
     b, _ = x_t.shape
     H, G, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
@@ -670,19 +679,26 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
             q_grp.astype(jnp.float32), k_sink, k_loc)
         # … and the collect takes the dense outputs as extra callback
         # operands, so it schedules after the work hiding the host copy
-        k_miss, v_miss, stall = fetch.collect_heads(
-            ticket, miss_rows.shape,
-            k_hit, v_hit, v_sink, v_loc, s_sink, s_loc)
+        k_miss, v_miss, stall, retries, timeouts, f_ok = \
+            fetch.collect_heads(ticket, miss_rows.shape,
+                                k_hit, v_hit, v_sink, v_loc, s_sink, s_loc)
         calls = jnp.int32(2)
     else:
         k_hit = C.gather_heads_physical(pool.k, stag_rows)
         v_hit = C.gather_heads_physical(pool.v, stag_rows)
-        k_miss, v_miss, stall = fetch.heads(miss_rows, rep)
+        k_miss, v_miss, stall, retries, timeouts, f_ok = \
+            fetch.heads(miss_rows, rep)
         k_sink = v_sink = k_loc = v_loc = s_sink = s_loc = None
         calls = jnp.int32(1)
     sel = resident[..., None]
     k_ret = jnp.where(sel, k_hit, k_miss.astype(k_hit.dtype))
     v_ret = jnp.where(sel, v_hit, v_miss.astype(v_hit.dtype))
+    # degraded-mode mask (ISSUE 10): ok=0 means the miss buffers are
+    # zeros — drop those winners from attention instead of mixing in
+    # garbage. All-resident steps are unaffected even when ok=0.
+    ret_keep = resident | (f_ok > 0)
+    degraded = ((miss.sum(axis=(1, 2, 3)) > 0)
+                & (f_ok == 0)).astype(jnp.int32)
 
     nb = dev_map.shape[0]
     host_blk = res.phys_rows // bs
@@ -697,10 +713,13 @@ def attn_decode_pariskv_tiered(p: dict, x_t: jax.Array,
         regions.enc_end, sink_size=pcfg.sink_size, window_size=W,
         sm_scale=spec.scale(), softcap=spec.softcap,
         k_ret=k_ret, v_ret=v_ret, k_sink=k_sink, v_sink=v_sink,
-        k_loc=k_loc, v_loc=v_loc, s_sink=s_sink, s_loc=s_loc)
+        k_loc=k_loc, v_loc=v_loc, s_sink=s_sink, s_loc=s_loc,
+        ret_keep=ret_keep)
     y = out.reshape(b, -1).astype(x_t.dtype) @ p["wo"]
     return y, pool, {"touched": touched, "rows": rows,
-                     "stall": stall.astype(jnp.float32), "calls": calls}
+                     "stall": stall.astype(jnp.float32), "calls": calls,
+                     "retries": retries, "timeouts": timeouts,
+                     "degraded": degraded}
 
 
 def attn_decode_pariskv(p: dict, x_t: jax.Array, layer_cache: C.LayerKVCache,

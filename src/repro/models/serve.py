@@ -252,7 +252,10 @@ def make_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
         shapes = {"touched": ((num_blocks,), jnp.int32),
                   "rows": ((batch, 4), jnp.int32),
                   "stall": ((), jnp.float32),
-                  "calls": ((), jnp.int32)}
+                  "calls": ((), jnp.int32),
+                  "retries": ((), jnp.int32),
+                  "timeouts": ((), jnp.int32),
+                  "degraded": ((batch,), jnp.int32)}
         if as_spec:
             return {k: jax.ShapeDtypeStruct(s, d)
                     for k, (s, d) in shapes.items()}
@@ -521,7 +524,10 @@ def _layer_decode(p, x_t, ld: LayerDef, cfg: ModelConfig, cache, regions,
             "touched": f["touched"] + fetch_delta["touched"],
             "rows": f["rows"].at[:, :3].add(fetch_delta["rows"]),
             "stall": f["stall"] + fetch_delta["stall"],
-            "calls": f["calls"] + fetch_delta["calls"]}}
+            "calls": f["calls"] + fetch_delta["calls"],
+            "retries": f["retries"] + fetch_delta["retries"],
+            "timeouts": f["timeouts"] + fetch_delta["timeouts"],
+            "degraded": f["degraded"] + fetch_delta["degraded"]}}
 
     if ld.mixer == "attn":
         if ld.use_pariskv:
@@ -629,6 +635,7 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
 
     kv = cache["kv"]
     fill_fetched = fill_stall = fill_calls = None
+    fill_retries = fill_timeouts = fill_deg = fill_keep = None
     if isinstance(kv, CC.PagedLayerKVCache):
         bs = CC.paged_block_size(kv)
         nblk = fctx.bt_row.shape[0]
@@ -655,22 +662,32 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
                                               idx_b)
                 v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None],
                                               idx_b)
-                k_host, v_host, fill_stall = fetch.collect_rows(
+                (k_host, v_host, fill_stall, fill_retries, fill_timeouts,
+                 f_ok) = fetch.collect_rows(
                     ticket, host_rows.shape, k_stag, v_stag)
                 fill_calls = jnp.int32(2)
             else:
                 k_stag = CC.paged_gather_rows(kv.k, fctx.dev_row[None], idx)
                 v_stag = CC.paged_gather_rows(kv.v, fctx.dev_row[None], idx)
-                k_host, v_host, fill_stall = fetch.rows(host_rows, rep)
+                (k_host, v_host, fill_stall, fill_retries, fill_timeouts,
+                 f_ok) = fetch.rows(host_rows, rep)
                 fill_calls = jnp.int32(1)
             sel = resident[..., None, None]
             k_pref = jnp.where(sel, k_stag, k_host.astype(k_stag.dtype))
             v_pref = jnp.where(sel, v_stag, v_host.astype(v_stag.dtype))
             fill_fetched = (host_rows >= 0).sum().astype(jnp.int32)
+            # degraded fill step: the host prefix fetch exhausted its
+            # retries, so the failed (zeroed) host rows are masked out of
+            # the chunk-causal prefix instead of attending to garbage
+            fill_keep = (host_rows < 0) | (f_ok > 0)
+            fill_deg = ((fill_fetched > 0)
+                        & (f_ok == 0)).astype(jnp.int32)
         else:
             k_pref = CC.paged_gather_rows(kv.k, fctx.bt_row[None], idx)
             v_pref = CC.paged_gather_rows(kv.v, fctx.bt_row[None], idx)
         pref_pos = jnp.where(idx < fctx.start, idx, -1)
+        if fill_keep is not None:
+            pref_pos = jnp.where(fill_keep, pref_pos, -1)
     elif isinstance(kv, CC.LayerKVCache):
         k_pref, v_pref = row1(kv.k), row1(kv.v)
         idx = jnp.arange(k_pref.shape[1])[None]
@@ -705,12 +722,16 @@ def _layer_fill(p, x_f, ld: LayerDef, cfg: ModelConfig, cache, fctx: FillCtx,
                     kv, fctx.bt_row, fctx.dev_row, fctx.start, k_new[0],
                     v_new[0], fctx.valid[0], meta)
                 if "fetch" in cache:
+                    f = cache["fetch"]
                     cache = {**cache, "fetch": {
-                        **cache["fetch"],
-                        "rows": cache["fetch"]["rows"].at[fctx.slot, 3].add(
-                            fill_fetched),
-                        "stall": cache["fetch"]["stall"] + fill_stall,
-                        "calls": cache["fetch"]["calls"] + fill_calls}}
+                        **f,
+                        "rows": f["rows"].at[fctx.slot, 3].add(fill_fetched),
+                        "stall": f["stall"] + fill_stall,
+                        "calls": f["calls"] + fill_calls,
+                        "retries": f["retries"] + fill_retries,
+                        "timeouts": f["timeouts"] + fill_timeouts,
+                        "degraded": f["degraded"].at[fctx.slot].add(
+                            fill_deg)}}
             else:
                 kvc = CC.paged_fill_chunk_write(
                     kv, fctx.bt_row, fctx.start, k_new[0], v_new[0],

@@ -1,3 +1,6 @@
 from repro.serving.engine import (  # noqa: F401
-    OffloadedPagedServingEngine, PagedServingEngine, Request, ServingEngine,
-    WaveServingEngine)
+    InvariantViolation, OffloadedPagedServingEngine, PagedServingEngine,
+    Request, ServingEngine, WaveServingEngine)
+from repro.serving.faults import (  # noqa: F401
+    FaultPlan, FaultSpec, InjectedFault)
+from repro.serving.offload import HostIndexError  # noqa: F401

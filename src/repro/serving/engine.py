@@ -112,10 +112,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as CC
+from repro.core import retrieval as R
 from repro.core.config import ModelConfig
 from repro.models import layers as L
 from repro.models import serve as SV
 from repro.serving import offload as offload_lib
+from repro.serving.faults import FaultPlan
+
+
+class InvariantViolation(AssertionError):
+    """``verify_invariants()`` found engine state that breaks a structural
+    invariant (allocator accounting, block-table/refcount consistency,
+    staging residency, or the incremental-histogram identity). Raised —
+    not logged — so tests and the chaos harness fail loudly."""
 
 
 @dataclasses.dataclass
@@ -145,6 +154,16 @@ class Request:
     fetch_callbacks: int = 0     # host callbacks attributed the same way
     # prefix-sharing observability (ISSUE 7; zero unless share_prefixes):
     shared_prefix_blocks: int = 0  # already-cached blocks mapped, not filled
+    # fault-tolerance observability (ISSUE 10; zero elsewhere):
+    fetch_retries: int = 0       # host-fetch attempts beyond the first,
+    #                              attributed ∝ this request's fetch rows
+    fetch_timeouts: int = 0      # fetch deadlines that fired (worker
+    #                              abandoned + respawned), same attribution
+    degraded_steps: int = 0      # (layer, step) fetches that exhausted
+    #                              retries: attention fell back to sink +
+    #                              window + resident-staged blocks only
+    failed: bool = False         # quarantined by an engine fault
+    error: Optional[str] = None  # the quarantining exception, rendered
     # engine-internal:
     _tokens: Optional[list] = None
     _t_admit: float = 0.0
@@ -230,7 +249,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, n_max: int = 4096,
                  max_batch: int = 8, greedy: bool = True, use_pariskv=True,
                  chunk_size: int = 8, eos_id: Optional[int] = None,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0,
+                 faults: Optional[FaultPlan] = None):
         assert greedy, "sampling is on-device argmax; greedy only for now"
         if prefill_budget and not SV.fill_supported(cfg):
             raise ValueError(
@@ -245,6 +265,8 @@ class ServingEngine:
         self.chunk_size = chunk_size
         self.eos_id = eos_id
         self.prefill_budget = prefill_budget
+        self.faults = faults
+        self.quarantined: List[Request] = []
         self._prefill = jax.jit(
             lambda p, t, lens, m: SV.prefill(p, cfg, t, n_max, m,
                                              lengths=lens))
@@ -313,6 +335,7 @@ class ServingEngine:
         self._state = self._init_state()
         self._slots = [None] * self.max_batch
         self._done = []
+        self.quarantined = []
         self._filling = None
         # uids are per-run: drop cancels left over from a previous run
         # (a finished uid must not ambush a later request reusing it),
@@ -359,6 +382,43 @@ class ServingEngine:
         # ambush a later request that happens to reuse it
         self._cancelled.clear()
 
+    # -- quarantine (ISSUE 10) -----------------------------------------------
+    def _quarantine(self, slot: int, req: Request, exc: Exception) -> None:
+        """Evict and fail exactly one request after an exception
+        attributable to its slot: device state frozen and reclaimed
+        (blocks, staging residency, histogram row — the same full path
+        ``cancel()`` uses), output finalized from whatever tokens were
+        already emitted, and the request recorded in both ``quarantined``
+        and the done list. The rest of the batch keeps serving."""
+        t_now = time.perf_counter()
+        req.failed = True
+        req.error = f"{type(exc).__name__}: {exc}"
+        self._evict_device(slot)
+        if req._tokens is None:
+            req._tokens, req.token_times = [], []
+        if not req._t_first:
+            req._t_first = t_now
+        self._finish_request(req, t_now)
+        self._slots[slot] = None
+        if self._filling == slot:
+            self._filling = None
+        self.quarantined.append(req)
+
+    def _quarantine_admission(self, slot: int, req: Request,
+                              exc: Exception) -> None:
+        """Admission-path quarantine: the request never went live on a
+        device slot, so only its reservations are unwound
+        (``_abort_admit``) and it finishes failed with empty output."""
+        t_now = time.perf_counter()
+        req.failed = True
+        req.error = f"{type(exc).__name__}: {exc}"
+        if req._tokens is None:
+            req._tokens, req.token_times = [], []
+        req._t_first = t_now
+        self._finish_request(req, t_now)
+        self._abort_admit(slot)
+        self.quarantined.append(req)
+
     # -- admission hooks (paged engine overrides) ----------------------------
     def _can_admit(self) -> bool:
         """Backpressure gate for the request at the head of the queue."""
@@ -391,8 +451,12 @@ class ServingEngine:
                 continue
             req = self.queue.pop(0)
             t_admit = time.perf_counter()
-            self._pre_admit(slot, req)
-            state1, tok0 = self._prefill_request(req)
+            try:
+                self._pre_admit(slot, req)
+                state1, tok0 = self._prefill_request(req)
+            except Exception as exc:  # noqa: BLE001 — quarantine boundary
+                self._quarantine_admission(slot, req, exc)
+                continue
             t_first = time.perf_counter()
             req.ttft_s = t_first - t_admit
             req._t_first = t_first
@@ -404,7 +468,11 @@ class ServingEngine:
                 self._done.append(req)
                 self._abort_admit(slot)
                 continue
-            self._install_solo(slot, req, state1, tok0)
+            try:
+                self._install_solo(slot, req, state1, tok0)
+            except Exception as exc:  # noqa: BLE001 — quarantine boundary
+                self._quarantine_admission(slot, req, exc)
+                continue
             self._slots[slot] = req
 
     def _admit_chunked(self, slot: int, req: Request) -> None:
@@ -420,8 +488,24 @@ class ServingEngine:
         self._slots[slot] = req
         self._filling = slot
 
+    def _pre_chunk_slot(self, slot: int, req: Request) -> None:
+        """Per-slot pre-chunk host work (paged: lazy block allocation).
+        An injected ``engine.slot`` fault fires here; any exception this
+        raises is attributable to exactly one request and quarantines it."""
+        if self.faults is not None:
+            self.faults.apply("engine.slot", slot=slot, uid=req.uid)
+
     def _pre_chunk(self) -> None:
-        """Hook: per-chunk device bookkeeping (paged: lazy allocation)."""
+        """Per-chunk host bookkeeping, one slot at a time behind a
+        quarantine boundary: a failure attributable to one slot evicts
+        and fails that request while the rest of the batch keeps going."""
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            try:
+                self._pre_chunk_slot(slot, req)
+            except Exception as exc:  # noqa: BLE001 — quarantine boundary
+                self._quarantine(slot, req, exc)
 
     def _run_chunk(self):
         tokens, self._state = self._chunk(self.params, self._state)
@@ -430,26 +514,37 @@ class ServingEngine:
     def _release_slot(self, slot: int) -> None:
         """Hook: reclaim a finished slot's resources (paged: blocks)."""
 
+    def _collect_slot(self, slot: int, req: Request, tokens: np.ndarray,
+                      rem_after: np.ndarray, t_now: float) -> None:
+        had = len(req._tokens)
+        n_emit = _collect_chunk_row(req, tokens[slot], t_now)
+        if had == 0 and n_emit > 0:          # chunked fill completed
+            req.ttft_s = t_now - req._t_admit
+            req._t_first = t_now
+            if self._filling == slot:
+                self._filling = None
+                self._fill_complete(slot, req)
+        self._after_collect(slot, req)
+        if rem_after[slot] <= 0:
+            self._finish_request(req, t_now)
+            self._slots[slot] = None
+            self._release_slot(slot)
+            if self._filling == slot:        # safety: eos on first token
+                self._filling = None
+
     def _collect(self, tokens: np.ndarray, rem_after: np.ndarray) -> None:
         t_now = time.perf_counter()
         for slot, req in enumerate(self._slots):
             if req is None:
                 continue
-            had = len(req._tokens)
-            n_emit = _collect_chunk_row(req, tokens[slot], t_now)
-            if had == 0 and n_emit > 0:      # chunked fill completed
-                req.ttft_s = t_now - req._t_admit
-                req._t_first = t_now
-                if self._filling == slot:
-                    self._filling = None
-                    self._fill_complete(slot, req)
-            self._after_collect(slot, req)
-            if rem_after[slot] <= 0:
-                self._finish_request(req, t_now)
-                self._slots[slot] = None
-                self._release_slot(slot)
-                if self._filling == slot:    # safety: eos on first token
-                    self._filling = None
+            try:
+                self._collect_slot(slot, req, tokens, rem_after, t_now)
+            except Exception as exc:  # noqa: BLE001 — quarantine boundary
+                if self._slots[slot] is None:
+                    # the slot was already released (failure mid-cleanup):
+                    # reclamation is no longer attributable — propagate
+                    raise
+                self._quarantine(slot, req, exc)
 
     def _after_collect(self, slot: int, req: Request) -> None:
         """Hook: host-side position tracking (paged allocator)."""
@@ -478,6 +573,18 @@ class ServingEngine:
         while self.pending():
             self.step_serve()
         return self._done
+
+    # ------------------------------------------------------------ teardown --
+    def close(self) -> None:
+        """Release engine-owned host resources deterministically
+        (offloaded engine: fetch-pipeline executor + host pool guard
+        threads). Idempotent; the resident engines hold none."""
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 class PagedServingEngine(ServingEngine):
@@ -547,7 +654,8 @@ class PagedServingEngine(ServingEngine):
                  use_pariskv: bool = True, chunk_size: int = 8,
                  eos_id: Optional[int] = None, fused: bool = True,
                  prefill_budget: int = 0, offload: bool = False,
-                 share_prefixes: bool = False, mesh_shards: int = 1):
+                 share_prefixes: bool = False, mesh_shards: int = 1,
+                 faults: Optional[FaultPlan] = None):
         assert use_pariskv, "the paged engine serves the ParisKV path only"
         if n_max % block_size != 0:
             raise ValueError(f"n_max={n_max} must be a multiple of "
@@ -581,7 +689,7 @@ class PagedServingEngine(ServingEngine):
         super().__init__(cfg, params, n_max=n_max, max_batch=max_batch,
                          greedy=greedy, use_pariskv=True,
                          chunk_size=chunk_size, eos_id=eos_id,
-                         prefill_budget=prefill_budget)
+                         prefill_budget=prefill_budget, faults=faults)
         self.block_size = block_size
         self.nblk = n_max // block_size
         self.num_blocks = (max_batch * self.nblk if num_blocks is None
@@ -914,10 +1022,9 @@ class PagedServingEngine(ServingEngine):
             state1.caches, state1.regions, jnp.int32(tok0),
             jnp.int32(req.max_new_tokens - 1))
 
-    def _pre_chunk(self) -> None:
-        for slot, req in enumerate(self._slots):
-            if req is not None:
-                self._ensure_blocks(slot)
+    def _pre_chunk_slot(self, slot: int, req: Request) -> None:
+        super()._pre_chunk_slot(slot, req)     # engine.slot fault hook
+        self._ensure_blocks(slot)
 
     def _run_chunk(self):
         tokens, self._state = self._chunk(self.params, self._state,
@@ -953,6 +1060,103 @@ class PagedServingEngine(ServingEngine):
         self._state = self._evict_fn(self._state, self._dead_row(dead),
                                      jnp.int32(slot))
         self._release_host(slot, dead=dead)
+
+    # ------------------------------------------ invariant auditor (ISSUE 10)
+    @staticmethod
+    def _check(cond: bool, msg: str) -> None:
+        if not cond:
+            raise InvariantViolation(msg)
+
+    def verify_invariants(self, check_hist: bool = True) -> None:
+        """Cross-check the engine's redundant state against itself; raise
+        :class:`InvariantViolation` on the first inconsistency.
+
+        Audited at any chunk boundary (between ``step_serve`` calls):
+
+        * free-list accounting — no duplicate free blocks, free ∩
+          allocated = ∅, and every pool block is exactly one of
+          free / allocated-to-some-slot;
+        * block-table / refcount consistency — ``_bt`` rows mirror
+          ``_alloc``, each block's refcount equals its live holders, and
+          the prefix index ↔ block-hash maps stay a bijection over
+          allocated blocks;
+        * (``check_hist``) the incremental bucket histogram of every
+          active, non-filling slot equals a from-scratch recompute from
+          the pool metadata through its block table — the retrieval
+          correctness anchor (a drifted histogram silently re-ranks
+          Stage I)."""
+        alloc_sets = {s: list(b) for s, b in self._alloc.items()}
+        allocated: Dict[int, int] = {}
+        for s, blks in alloc_sets.items():
+            self._check(len(set(blks)) == len(blks),
+                        f"slot {s} holds a duplicate block: {blks}")
+            for b in blks:
+                allocated[b] = allocated.get(b, 0) + 1
+        free = list(self._free)
+        self._check(len(set(free)) == len(free),
+                    "free list holds duplicate blocks")
+        self._check(not (set(free) & set(allocated)),
+                    "free list intersects allocated blocks: "
+                    f"{sorted(set(free) & set(allocated))}")
+        self._check(len(free) + len(allocated) == self.num_blocks,
+                    f"block accounting leak: {len(free)} free + "
+                    f"{len(allocated)} allocated != {self.num_blocks}")
+        self._check(set(self._refcnt) == set(allocated),
+                    "refcount keys drifted from allocated blocks")
+        for b, n in allocated.items():
+            self._check(self._refcnt.get(b) == n,
+                        f"block {b}: refcount {self._refcnt.get(b)} != "
+                        f"{n} live holders")
+        for s, n in self._resv.items():
+            self._check(n >= 0, f"slot {s}: negative reservation {n}")
+        for slot in range(self.max_batch):
+            row = self._bt[slot]
+            want = alloc_sets.get(slot, [])
+            got = row[row >= 0].tolist()
+            self._check(got == want,
+                        f"slot {slot}: block-table row {got} != "
+                        f"allocator view {want}")
+        self._check(set(self._prefix_index.values())
+                    == set(self._block_hash), "prefix index / block-hash "
+                    "maps are not a bijection")
+        for hh, b in self._prefix_index.items():
+            self._check(self._block_hash.get(b) == hh,
+                        f"block {b}: hash map disagrees with prefix index")
+            self._check(b in self._refcnt,
+                        f"prefix index retains unallocated block {b}")
+        if check_hist and self._state is not None:
+            self._verify_hist()
+
+    def _verify_hist(self) -> None:
+        """hist == recompute, per pariskv entry and repeat, for every
+        active non-filling slot (a mid-fill hist is exact against the
+        *fill frontier*, which the recompute below cannot see; inactive
+        slots may sit on stale regions, so only live rows are audited)."""
+        audit = [s for s, rq in enumerate(self._slots)
+                 if rq is not None and s != self._filling]
+        if not audit:
+            return
+        pcfg = self.cfg.pariskv
+        n_log = self.nblk * self.block_size
+        btj = jnp.asarray(np.clip(self._bt, 0, None))
+        valid = CC.retrieval_valid_mask(n_log, self._state.regions, pcfg)
+        for si, stage in enumerate(self._state.caches):
+            for ln, lc in stage.items():
+                if "hist" not in lc or not isinstance(
+                        lc["kv"], CC.PagedLayerKVCache):
+                    continue
+                hist = np.asarray(lc["hist"])
+                for r in range(hist.shape[0]):
+                    pool_r = jax.tree.map(lambda a: a[r], lc["kv"])
+                    ids, _, _ = CC.paged_meta_view(pool_r, btj)
+                    want = np.asarray(R.bucket_histogram(
+                        ids, valid[:, None, :], pcfg.num_centroids()))
+                    for slot in audit:
+                        if not np.array_equal(hist[r, slot], want[slot]):
+                            raise InvariantViolation(
+                                f"stage {si} layer {ln} repeat {r} slot "
+                                f"{slot}: incremental histogram drifted "
+                                f"from pool-metadata recompute")
 
     def run(self) -> List[Request]:
         done = super().run()
@@ -1024,7 +1228,11 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                  num_device_blocks: Optional[int] = None,
                  prefetch: bool = True, prefetch_hook=None,
                  overlap: bool = True,
-                 share_prefixes: bool = False, mesh_shards: int = 1):
+                 share_prefixes: bool = False, mesh_shards: int = 1,
+                 fetch_timeout_s: Optional[float] = None,
+                 fetch_max_retries: int = 2,
+                 fetch_backoff_s: float = 0.005,
+                 faults: Optional[FaultPlan] = None):
         if mesh_shards > 1:
             raise SV.UnsupportedShardedConfig(
                 cfg, f"offload=True with mesh_shards={mesh_shards}",
@@ -1040,7 +1248,7 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                          greedy=greedy, use_pariskv=use_pariskv,
                          chunk_size=chunk_size, eos_id=eos_id, fused=fused,
                          prefill_budget=prefill_budget,
-                         share_prefixes=share_prefixes)
+                         share_prefixes=share_prefixes, faults=faults)
         self.num_device_blocks = (max(1, self.num_blocks // 4)
                                   if num_device_blocks is None
                                   else num_device_blocks)
@@ -1061,6 +1269,12 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         # start() zeroes it in place rather than replacing it
         self.host = offload_lib.HostKVPool(shapes, self.num_blocks,
                                        self.block_size, SV._dtype(cfg))
+        # fetch fault policy (ISSUE 10): deadline + bounded retries with
+        # exponential backoff, shared by the sync and pipelined paths
+        self.host.fetch_timeout_s = fetch_timeout_s
+        self.host.fetch_max_retries = fetch_max_retries
+        self.host.fetch_backoff_s = fetch_backoff_s
+        self.host.faults = faults
         self.staging = offload_lib.StagingMap(self.num_blocks,
                                           self.num_device_blocks)
         self.overlap = bool(overlap)
@@ -1103,6 +1317,11 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         self.fetch_stall_chunks: List[tuple] = []
         self.fetch_stall_s = 0.0
         self.fetch_callbacks = 0
+        # fault-tolerance totals (ISSUE 10)
+        self.fetch_retries = 0
+        self.fetch_timeouts = 0
+        self.degraded_steps = 0      # degraded (layer, step) fetches
+        self.storm_evictions = 0     # staging blocks flushed by storms
         # host unique-row counter snapshots for per-chunk deltas
         self._uniq_head = 0
         self._uniq_fill = 0
@@ -1235,6 +1454,24 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         writebacks: List[tuple] = []      # (evicted host block, staging slot)
         installs: List[tuple] = []        # (host block, staging slot)
 
+        if self.faults is not None and self.faults.should("staging.storm"):
+            # injected eviction storm: flush every resident staging block
+            # (worst-case cold start). Evicted data rides the normal
+            # write-back list — processed before any install reads the
+            # host pool — so parity holds; only stall/bytes move. The
+            # required set below re-stages what the chunk needs.
+            for s in range(self.num_device_blocks):
+                hb = int(sm.owner[s])
+                if hb < 0:
+                    continue
+                writebacks.append((hb, s))
+                sm.dev_map[hb] = -1
+                sm.owner[s] = -1
+                sm.pinned[s] = False
+                sm.ref[s] = False
+                sm.free.append(s)
+                self.storm_evictions += 1
+
         def acquire_for(hb):
             got = sm.acquire()
             if got is None:
@@ -1324,8 +1561,9 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         touched = np.zeros((self.num_blocks,), np.int64)
         rows = np.zeros((self.max_batch, 4), np.int64)
         miss_b = np.zeros((self.max_batch,), np.int64)
+        degraded = np.zeros((self.max_batch,), np.int64)
         stall = 0.0
-        calls = 0
+        calls = retries = timeouts = 0
         for si, ln, name in self._entries:
             f = self._state.caches[si][ln]["fetch"]
             touched += np.asarray(f["touched"]).sum(axis=0)
@@ -1335,9 +1573,15 @@ class OffloadedPagedServingEngine(PagedServingEngine):
                        + r[:, 3] * self.host.bytes_per_row(name))
             stall += float(np.asarray(f["stall"]).sum())
             calls += int(np.asarray(f["calls"]).sum())
+            retries += int(np.asarray(f["retries"]).sum())
+            timeouts += int(np.asarray(f["timeouts"]).sum())
+            degraded += np.asarray(f["degraded"]).sum(axis=0)
         self.fetch_stall_chunks.append((stall, calls))
         self.fetch_stall_s += stall
         self.fetch_callbacks += calls
+        self.fetch_retries += retries
+        self.fetch_timeouts += timeouts
+        self.degraded_steps += int(degraded.sum())
         # unique (post-dedup) traffic comes off the host counters — all
         # pariskv entries share (G, hd, dtype), so the first entry's
         # per-row byte sizes price the global unique-row deltas
@@ -1364,6 +1608,9 @@ class OffloadedPagedServingEngine(PagedServingEngine):
             req.fetched_unique_bytes += int(round(uniq_b * share))
             req.fetch_stall_s += stall * share
             req.fetch_callbacks += int(round(calls * share))
+            req.fetch_retries += int(round(retries * share))
+            req.fetch_timeouts += int(round(timeouts * share))
+            req.degraded_steps += int(degraded[slot])
         owner = {b: sl for sl, blks in self._alloc.items() for b in blks}
         for hb in self._last_prefetch:
             if touched[hb] > 0:
@@ -1396,6 +1643,10 @@ class OffloadedPagedServingEngine(PagedServingEngine):
         self.fetch_stall_chunks = []
         self.fetch_stall_s = 0.0
         self.fetch_callbacks = 0
+        self.fetch_retries = 0
+        self.fetch_timeouts = 0
+        self.degraded_steps = 0
+        self.storm_evictions = 0
         self._uniq_head = 0
         self._uniq_fill = 0
 
@@ -1439,6 +1690,62 @@ class OffloadedPagedServingEngine(PagedServingEngine):
 
     def _release_slot(self, slot: int) -> None:
         self._reclaim_slot(slot)
+
+    def _abort_admit(self, slot: int) -> None:
+        # quarantine can interrupt _install_solo after write_prefill: the
+        # dead blocks' host copies (and any staging residency) must not
+        # leak into the next tenant of those blocks
+        dead = self._decref_blocks(slot)
+        hbs = np.asarray(dead, np.int64)
+        if hbs.size:
+            self.staging.release_host_blocks(hbs)
+            self.host.zero_blocks(hbs)
+        self._release_host(slot, dead=dead)
+
+    def verify_invariants(self, check_hist: bool = True) -> None:
+        """The paged audit plus the offload tiers: staging-map residency
+        must mirror ownership (``dev_map[hb] == s ⟺ owner[s] == hb``),
+        free staging slots must be unique and unowned, every resident
+        host block must still be allocated to some request, and — at a
+        chunk boundary — the fetch pipeline must hold no open tickets."""
+        super().verify_invariants(check_hist=check_hist)
+        sm = self.staging
+        for hb in np.flatnonzero(sm.dev_map >= 0):
+            s = int(sm.dev_map[hb])
+            self._check(int(sm.owner[s]) == int(hb),
+                        f"staging slot {s}: owner {int(sm.owner[s])} != "
+                        f"dev_map inverse {int(hb)}")
+            self._check(int(hb) in self._refcnt,
+                        f"host block {int(hb)} resident in staging but "
+                        f"not allocated to any slot")
+        for s in np.flatnonzero(sm.owner >= 0):
+            hb = int(sm.owner[s])
+            self._check(int(sm.dev_map[hb]) == int(s),
+                        f"host block {hb}: dev_map {int(sm.dev_map[hb])} "
+                        f"!= owning staging slot {int(s)}")
+        free = list(sm.free)
+        self._check(len(set(free)) == len(free),
+                    "staging free list holds duplicate slots")
+        for s in free:
+            self._check(int(sm.owner[s]) < 0,
+                        f"staging slot {s} free but owned by block "
+                        f"{int(sm.owner[s])}")
+        self._check(len(free) + sm.resident_count()
+                    == self.num_device_blocks,
+                    "staging accounting leak: free + resident != "
+                    f"{self.num_device_blocks}")
+        if self.pipeline is not None:
+            self._check(not self.pipeline._tickets,
+                        "fetch pipeline holds open tickets at a chunk "
+                        "boundary")
+
+    def close(self) -> None:
+        """Deterministic teardown: drain + join the fetch pipeline's
+        worker executor and the host pool's guard executor so no
+        non-daemon thread outlives the engine. Idempotent."""
+        if self.pipeline is not None:
+            self.pipeline.shutdown()
+        self.host.close()
 
     def run(self) -> List[Request]:
         done = super().run()              # asserts the block allocator

@@ -49,15 +49,43 @@ valid no matter which holder triggers the recycle.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import CancelledError, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .faults import InjectedFault
+
+
+class HostIndexError(IndexError):
+    """A host-pool mutation was handed an out-of-range block index.
+    Raised instead of letting numpy's negative indexing silently wrap
+    into some other request's blocks."""
+
+    def __init__(self, entry: str, method: str, index: int,
+                 num_blocks: int):
+        self.entry = entry
+        self.method = method
+        self.index = int(index)
+        self.num_blocks = num_blocks
+        super().__init__(
+            f"HostKVPool.{method}: block index {int(index)} out of range "
+            f"[0, {num_blocks}) for entry {entry!r}")
+
+
+def _check_host_blocks(entry: str, method: str, blocks: np.ndarray,
+                       num_blocks: int) -> None:
+    blocks = np.asarray(blocks)
+    bad = blocks[(blocks < 0) | (blocks >= num_blocks)]
+    if bad.size:
+        raise HostIndexError(entry, method, int(bad.flat[0]), num_blocks)
 
 
 def _dedup_heads_gather(kf, vf, rows, out_k, out_v):
@@ -112,9 +140,13 @@ class EntryFetch:
 
     This is the **synchronous** path (``overlap=False``): one blocking
     callback per fetch, whose whole gather time is device stall. Both
-    helpers return ``(k, v, stall_seconds)`` so the stall is observable
+    helpers return ``(k, v, stall_seconds, retries, timeouts, ok)`` so
+    the stall and the fault-recovery telemetry (ISSUE 10) are observable
     on either path; :class:`PipelinedEntryFetch` is the overlapped twin.
-    """
+    ``ok`` is 1 when the buffers hold real host data and 0 when the
+    fetch exhausted its retry budget and the step must degrade (the
+    buffers are zeroed; the layer masks the failed rows out of
+    attention)."""
 
     pipelined = False
 
@@ -125,52 +157,61 @@ class EntryFetch:
     # -- numpy side (runs on host at execution time) --------------------
     def _heads_np(self, rows, rep):
         """rows (b, G, Q, k) flat host-pool rows (< 0 = skip), rep scalar
-        stage-repeat index → (k, v, stall) with k/v (b, G, Q, k, hd)."""
+        stage-repeat index → (k, v, stall, retries, timeouts, ok) with
+        k/v (b, G, Q, k, hd)."""
         pool = self._pool
         t0 = time.perf_counter()
         kf, vf = pool.flat(self._name, int(rep))       # (N, G, hd) each
         rows = np.asarray(rows)
         ko = np.zeros(rows.shape + (kf.shape[-1],), kf.dtype)
         vo = np.zeros(rows.shape + (vf.shape[-1],), vf.dtype)
-        req, uniq = _dedup_heads_gather(kf, vf, rows, ko, vo)
-        if pool.link_latency_s:
-            time.sleep(pool.link_latency_s)
+        req, uniq, retries, timeouts, ok = pool.gather_guarded(
+            self._name, "heads", rows, int(rep), ko, vo)
         pool.fetched_head_rows += req
         pool.fetched_unique_head_rows += uniq
         pool.fetch_callbacks += 1
-        return ko, vo, np.float32(time.perf_counter() - t0)
+        return (ko, vo, np.float32(time.perf_counter() - t0),
+                np.int32(retries), np.int32(timeouts), np.int32(ok))
 
     def _rows_np(self, rows, rep):
-        """rows (b, L) flat host-pool rows (< 0 = skip) → (k, v, stall)
-        with k/v (b, L, G, hd)."""
+        """rows (b, L) flat host-pool rows (< 0 = skip) →
+        (k, v, stall, retries, timeouts, ok) with k/v (b, L, G, hd)."""
         pool = self._pool
         t0 = time.perf_counter()
         kf, vf = pool.flat(self._name, int(rep))
         rows = np.asarray(rows)
         ko = np.zeros(rows.shape + kf.shape[1:], kf.dtype)
         vo = np.zeros(rows.shape + vf.shape[1:], vf.dtype)
-        req, uniq = _dedup_rows_gather(kf, vf, rows, ko, vo)
-        if pool.link_latency_s:
-            time.sleep(pool.link_latency_s)
+        req, uniq, retries, timeouts, ok = pool.gather_guarded(
+            self._name, "rows", rows, int(rep), ko, vo)
         pool.fetched_fill_rows += req
         pool.fetched_unique_fill_rows += uniq
         pool.fetch_callbacks += 1
-        return ko, vo, np.float32(time.perf_counter() - t0)
+        return (ko, vo, np.float32(time.perf_counter() - t0),
+                np.int32(retries), np.int32(timeouts), np.int32(ok))
 
     # -- traced side (called inside the jitted decode step) -------------
     def heads(self, rows: jax.Array, rep: jax.Array
-              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+              ) -> Tuple[jax.Array, ...]:
         G, hd, dt = self._pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(rows.shape + (hd,), dt)
-        st = jax.ShapeDtypeStruct((), jnp.float32)
-        return jax.pure_callback(self._heads_np, (sds, sds, st), rows, rep)
+        return jax.pure_callback(self._heads_np, _fetch_result_spec(sds),
+                                 rows, rep)
 
     def rows(self, rows: jax.Array, rep: jax.Array
-             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+             ) -> Tuple[jax.Array, ...]:
         G, hd, dt = self._pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(rows.shape + (G, hd), dt)
-        st = jax.ShapeDtypeStruct((), jnp.float32)
-        return jax.pure_callback(self._rows_np, (sds, sds, st), rows, rep)
+        return jax.pure_callback(self._rows_np, _fetch_result_spec(sds),
+                                 rows, rep)
+
+
+def _fetch_result_spec(sds: jax.ShapeDtypeStruct) -> tuple:
+    """(k, v, stall_s, retries, timeouts, ok) result shapes shared by
+    every fetch callback, sync and pipelined."""
+    st = jax.ShapeDtypeStruct((), jnp.float32)
+    ct = jax.ShapeDtypeStruct((), jnp.int32)
+    return (sds, sds, st, ct, ct, ct)
 
 
 class PipelinedEntryFetch:
@@ -229,31 +270,27 @@ class PipelinedEntryFetch:
         return jax.pure_callback(self._begin_h, tk, rows, rep)
 
     def collect_heads(self, ticket: jax.Array, rows_shape: tuple,
-                      *after: jax.Array
-                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                      *after: jax.Array) -> Tuple[jax.Array, ...]:
         """``after`` arrays are passed (as single-element slices) into
         the collect callback purely as scheduling operands: collect
         cannot run until the dense work producing them has."""
         G, hd, dt = self._pl.pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(tuple(rows_shape) + (hd,), dt)
-        st = jax.ShapeDtypeStruct((), jnp.float32)
         deps = [a.reshape(-1)[:1] for a in after]
-        return jax.pure_callback(self._pl._collect_np, (sds, sds, st),
-                                 ticket, *deps)
+        return jax.pure_callback(self._pl._collect_np,
+                                 _fetch_result_spec(sds), ticket, *deps)
 
     def begin_rows(self, rows: jax.Array, rep: jax.Array) -> jax.Array:
         tk = jax.ShapeDtypeStruct((), jnp.int32)
         return jax.pure_callback(self._begin_r, tk, rows, rep)
 
     def collect_rows(self, ticket: jax.Array, rows_shape: tuple,
-                     *after: jax.Array
-                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                     *after: jax.Array) -> Tuple[jax.Array, ...]:
         G, hd, dt = self._pl.pool.head_shape(self._name)
         sds = jax.ShapeDtypeStruct(tuple(rows_shape) + (G, hd), dt)
-        st = jax.ShapeDtypeStruct((), jnp.float32)
         deps = [a.reshape(-1)[:1] for a in after]
-        return jax.pure_callback(self._pl._collect_np, (sds, sds, st),
-                                 ticket, *deps)
+        return jax.pure_callback(self._pl._collect_np,
+                                 _fetch_result_spec(sds), ticket, *deps)
 
 
 class FetchPipeline:
@@ -277,6 +314,7 @@ class FetchPipeline:
 
     def __init__(self, pool: "HostKVPool"):
         self.pool = pool
+        self._abort = threading.Event()
         self._exec = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="kv-fetch")
         self._tickets: Dict[int, tuple] = {}
@@ -285,6 +323,7 @@ class FetchPipeline:
         # allocated lazily at the first begin of that shape
         self._bufs: Dict[tuple, List[tuple]] = {}
         self._flip: Dict[tuple, int] = {}
+        self.respawns = 0               # workers abandoned after a deadline
 
     def entry(self, name: str) -> PipelinedEntryFetch:
         return PipelinedEntryFetch(self, name)
@@ -292,21 +331,40 @@ class FetchPipeline:
     def reset(self) -> None:
         """Drop queued work between runs (the jitted chunk closes over
         this exact object — reset in place, like the pool's zeroing)."""
-        for fut, _ in self._tickets.values():
+        for fut, _, _ in self._tickets.values():
             fut.cancel()
         self._tickets.clear()
         self._next = 0
 
+    def _respawn(self) -> None:
+        """Abandon a hung fetch worker (deadline fired): wake any
+        interruptible injected sleep, cancel its queue, and start a
+        fresh one-worker executor. The double buffers are dropped too —
+        the dead worker may still scribble on them; they reallocate
+        lazily at the next begin, and retries use fresh buffers."""
+        old_exec, old_abort = self._exec, self._abort
+        self._abort = threading.Event()
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="kv-fetch")
+        old_abort.set()
+        old_exec.shutdown(wait=False, cancel_futures=True)
+        self._bufs.clear()
+        self._flip.clear()
+        self.respawns += 1
+
+    def shutdown(self) -> None:
+        """Deterministic teardown (``engine.close()``): cancel queued
+        gathers, wake injected hangs, and join the worker."""
+        self.reset()
+        self._abort.set()
+        self._exec.shutdown(wait=True, cancel_futures=True)
+        self._bufs.clear()
+        self._flip.clear()
+
     # -- host side ------------------------------------------------------
     def _gather(self, name, kind, rows, rep, out_k, out_v):
-        kf, vf = self.pool.flat(name, rep)
-        if kind == "heads":
-            out = _dedup_heads_gather(kf, vf, rows, out_k, out_v)
-        else:
-            out = _dedup_rows_gather(kf, vf, rows, out_k, out_v)
-        if self.pool.link_latency_s:     # modeled link cost runs on the
-            time.sleep(self.pool.link_latency_s)  # worker → overlappable
-        return out
+        return _gather_into(self.pool, name, kind, rows, rep, out_k, out_v,
+                            abort=self._abort)
 
     def _begin_np(self, rows, rep, *, name, kind):
         pool = self.pool
@@ -330,15 +388,51 @@ class FetchPipeline:
         self._next += 1
         fut = self._exec.submit(self._gather, name, kind, rows, rep,
                                 out_k, out_v)
-        self._tickets[t] = (fut, (kind, out_k, out_v))
+        # the job args ride the ticket so collect can re-issue the
+        # gather after a deadline or a transient failure (ISSUE 10)
+        self._tickets[t] = (fut, (kind, out_k, out_v), (name, rows, rep))
         pool.fetch_callbacks += 1
         return np.int32(t)
 
     def _collect_np(self, ticket, *_after):
+        """Block on the ticket under the pool's fetch policy: each
+        attempt waits at most ``fetch_timeout_s`` (None = forever, the
+        pre-ISSUE-10 behavior); a deadline abandons the worker
+        (:meth:`_respawn`) and a transient :class:`InjectedFault` backs
+        off, then the gather is re-issued — up to ``fetch_max_retries``
+        re-issues. Exhaustion returns zeroed buffers with ``ok=0`` so
+        the step degrades instead of hanging. Total per-collect stall is
+        bounded by ``(retries+1)·timeout + backoffs``."""
         pool = self.pool
         t0 = time.perf_counter()
-        fut, (kind, out_k, out_v) = self._tickets.pop(int(ticket))
-        req, uniq = fut.result()
+        fut, (kind, out_k, out_v), (name, rows, rep) = \
+            self._tickets.pop(int(ticket))
+        retries = timeouts = attempt = 0
+        ok = 1
+        while True:
+            try:
+                req, uniq = fut.result(pool.fetch_timeout_s)
+                break
+            except FutureTimeout:
+                timeouts += 1
+                self._respawn()
+            except (InjectedFault, CancelledError):
+                pass                     # transient — retry below
+            if attempt >= pool.fetch_max_retries:
+                out_k = np.zeros_like(out_k)     # never return buffers a
+                out_v = np.zeros_like(out_v)     # dead worker may touch
+                req = uniq = 0
+                ok = 0
+                pool.degraded_fetches += 1
+                break
+            attempt += 1
+            retries += 1
+            if pool.fetch_backoff_s:
+                time.sleep(pool.fetch_backoff_s * (2 ** (attempt - 1)))
+            out_k = np.zeros_like(out_k)
+            out_v = np.zeros_like(out_v)
+            fut = self._exec.submit(self._gather, name, kind, rows, rep,
+                                    out_k, out_v)
         stall = time.perf_counter() - t0
         if kind == "heads":
             pool.fetched_head_rows += req
@@ -347,7 +441,29 @@ class FetchPipeline:
             pool.fetched_fill_rows += req
             pool.fetched_unique_fill_rows += uniq
         pool.fetch_callbacks += 1
-        return out_k, out_v, np.float32(stall)
+        pool.fetch_retries += retries
+        pool.fetch_timeouts += timeouts
+        return (out_k, out_v, np.float32(stall), np.int32(retries),
+                np.int32(timeouts), np.int32(ok))
+
+
+def _gather_into(pool: "HostKVPool", name, kind, rows, rep, out_k, out_v,
+                 abort: Optional[threading.Event] = None):
+    """The actual host copy for one fetch attempt: fault hook → deduped
+    gather → modeled link latency. Runs inline (sync path), on the
+    pool's guard worker (sync path with a deadline), or on the
+    pipeline's worker (overlap). ``abort`` makes injected delays/hangs
+    interruptible so an abandoned worker exits promptly."""
+    if pool.faults is not None:
+        pool.faults.apply("fetch.gather", abort=abort, name=name, kind=kind)
+    kf, vf = pool.flat(name, rep)
+    if kind == "heads":
+        out = _dedup_heads_gather(kf, vf, rows, out_k, out_v)
+    else:
+        out = _dedup_rows_gather(kf, vf, rows, out_k, out_v)
+    if pool.link_latency_s:              # modeled link cost runs on the
+        time.sleep(pool.link_latency_s)  # worker → overlappable
+    return out
 
 
 class HostKVPool:
@@ -355,7 +471,16 @@ class HostKVPool:
 
     ``shapes``: {entry_name: (R, G, hd)} for every pariskv cache entry;
     all entries share ``num_blocks``/``block_size``/``dtype``.
-    """
+
+    The pool also owns the **fetch policy** (ISSUE 10) shared by both
+    fetch disciplines: ``fetch_timeout_s`` (per-attempt deadline; None
+    disables it and restores the wait-forever behavior),
+    ``fetch_max_retries`` / ``fetch_backoff_s`` (bounded exponential
+    backoff for transient failures and abandoned workers), and
+    ``faults`` (a :class:`~repro.serving.faults.FaultPlan` consulted
+    inside every gather). When a fetch exhausts its budget it returns
+    zeroed buffers with ``ok=0`` and the step degrades — sink + local
+    window + resident staged blocks only — instead of hanging."""
 
     def __init__(self, shapes: Dict[str, tuple], num_blocks: int,
                  block_size: int, dtype):
@@ -383,6 +508,9 @@ class HostKVPool:
         self.fetched_unique_head_rows = 0
         self.fetched_unique_fill_rows = 0
         self.fetch_callbacks = 0
+        self.fetch_retries = 0
+        self.fetch_timeouts = 0
+        self.degraded_fetches = 0
         # modeled host-link latency per gather (benchmarks only): on a
         # CPU-only host the numpy gather is nearly free, which hides the
         # schedule difference the pipeline exists for. Setting this adds
@@ -390,6 +518,16 @@ class HostKVPool:
         # pays it as stall, the pipelined path hides it behind the dense
         # work between begin and collect. Never set in serving.
         self.link_latency_s = 0.0
+        # fetch policy (ISSUE 10) — defaults preserve pre-fault behavior
+        self.fetch_timeout_s: Optional[float] = None
+        self.fetch_max_retries = 2
+        self.fetch_backoff_s = 0.005
+        self.faults = None
+        # lazy one-worker guard for the *sync* path when a deadline is
+        # configured (the pipelined path uses FetchPipeline's worker)
+        self._guard_exec: Optional[ThreadPoolExecutor] = None
+        self._guard_abort: Optional[threading.Event] = None
+        self.guard_respawns = 0        # sync-path workers abandoned
 
     def reset_counters(self) -> None:
         self.fetched_head_rows = 0
@@ -397,6 +535,85 @@ class HostKVPool:
         self.fetched_unique_head_rows = 0
         self.fetched_unique_fill_rows = 0
         self.fetch_callbacks = 0
+        self.fetch_retries = 0
+        self.fetch_timeouts = 0
+        self.degraded_fetches = 0
+
+    # -- guarded gather (fetch policy) ----------------------------------
+    def _guard(self) -> ThreadPoolExecutor:
+        if self._guard_exec is None:
+            self._guard_exec = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="kv-fetch-guard")
+            self._guard_abort = threading.Event()
+        return self._guard_exec
+
+    def _respawn_guard(self) -> None:
+        self.guard_respawns += 1
+        old_exec, old_abort = self._guard_exec, self._guard_abort
+        self._guard_exec = None
+        self._guard_abort = None
+        if old_abort is not None:
+            old_abort.set()
+        if old_exec is not None:
+            old_exec.shutdown(wait=False, cancel_futures=True)
+
+    def close(self) -> None:
+        """Join the guard worker (if one was ever spawned)."""
+        if self._guard_abort is not None:
+            self._guard_abort.set()
+        if self._guard_exec is not None:
+            self._guard_exec.shutdown(wait=True, cancel_futures=True)
+        self._guard_exec = None
+        self._guard_abort = None
+
+    def gather_guarded(self, name: str, kind: str, rows: np.ndarray,
+                       rep: int, out_k: np.ndarray, out_v: np.ndarray):
+        """One synchronous gather under the fetch policy. With no
+        deadline configured the gather runs inline (identical to the
+        pre-fault path up to the fault hook); with ``fetch_timeout_s``
+        set each attempt runs on the guard worker into *fresh* buffers
+        (an abandoned hung attempt must not scribble on returned data)
+        and is abandoned at the deadline. Transient
+        :class:`~repro.serving.faults.InjectedFault` failures back off
+        and retry; exhaustion zeroes the buffers and returns ``ok=0``.
+        Returns ``(requested, unique, retries, timeouts, ok)``."""
+        retries = timeouts = attempt = 0
+        while True:
+            try:
+                if self.fetch_timeout_s:
+                    buf_k = np.zeros_like(out_k)
+                    buf_v = np.zeros_like(out_v)
+                    exec_ = self._guard()
+                    fut = exec_.submit(_gather_into, self, name, kind,
+                                       rows, rep, buf_k, buf_v,
+                                       self._guard_abort)
+                    req, uniq = fut.result(self.fetch_timeout_s)
+                    out_k[:] = buf_k
+                    out_v[:] = buf_v
+                else:
+                    req, uniq = _gather_into(self, name, kind, rows, rep,
+                                             out_k, out_v)
+                break
+            except FutureTimeout:
+                timeouts += 1
+                self._respawn_guard()
+            except (InjectedFault, CancelledError):
+                pass                     # transient — retry below
+            if attempt >= self.fetch_max_retries:
+                out_k[:] = 0
+                out_v[:] = 0
+                req = uniq = 0
+                self.fetch_retries += retries
+                self.fetch_timeouts += timeouts
+                self.degraded_fetches += 1
+                return req, uniq, retries, timeouts, 0
+            attempt += 1
+            retries += 1
+            if self.fetch_backoff_s:
+                time.sleep(self.fetch_backoff_s * (2 ** (attempt - 1)))
+        self.fetch_retries += retries
+        self.fetch_timeouts += timeouts
+        return req, uniq, retries, timeouts, 1
 
     def entry(self, name: str) -> EntryFetch:
         return self._entries[name]
@@ -433,6 +650,13 @@ class HostKVPool:
         nblk = n // bs
         kview = k_rows.reshape((R, nblk, bs) + k_rows.shape[2:])
         vview = v_rows.reshape((R, nblk, bs) + v_rows.shape[2:])
+        # ≥ num_blocks is the documented pad sentinel (skipped below); a
+        # *negative* index is never legal — it would wrap into the pool
+        # tail and corrupt another request's blocks
+        pb = np.asarray(phys_blocks)
+        if np.any(pb < 0):
+            raise HostIndexError(name, "write_prefill",
+                                 int(pb[pb < 0].flat[0]), self.num_blocks)
         sel = (phys_blocks >= 0) & (phys_blocks < self.num_blocks)
         self.k[name][:, phys_blocks[sel]] = kview[:, sel].astype(self.dtype)
         self.v[name][:, phys_blocks[sel]] = vview[:, sel].astype(self.dtype)
@@ -441,12 +665,15 @@ class HostKVPool:
                   k_blocks: np.ndarray, v_blocks: np.ndarray) -> None:
         """Staging → host write-back before a slot is recycled:
         k/v_blocks (R, n, bs, G, hd) for host blocks (n,)."""
+        _check_host_blocks(name, "writeback", host_blocks, self.num_blocks)
         self.k[name][:, host_blocks] = k_blocks.astype(self.dtype)
         self.v[name][:, host_blocks] = v_blocks.astype(self.dtype)
 
     def read_blocks(self, name: str, host_blocks: np.ndarray
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Host → staging payloads (R, n, bs, G, hd) for installation."""
+        _check_host_blocks(name, "read_blocks", host_blocks,
+                           self.num_blocks)
         return self.k[name][:, host_blocks], self.v[name][:, host_blocks]
 
     def zero_blocks(self, host_blocks: np.ndarray) -> None:

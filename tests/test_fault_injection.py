@@ -1,0 +1,335 @@
+"""Fault-injected serving (ISSUE 10): the offloaded engine under injected
+fetch delays, transient failures, worker death (hang + deadline),
+staging-eviction storms, and per-request engine faults.
+
+The contract under test: every request a fault does NOT touch completes
+with exact token parity vs the clean run; a recoverable fault (retry
+succeeds within the budget) changes no tokens at all; an unrecoverable
+fetch fault degrades attention (sink + window + resident-staged blocks
+only) instead of crashing the batch; a fault attributable to one slot
+quarantines exactly that request; and ``verify_invariants()`` passes at
+every chunk boundary through recovery."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serving import (FaultPlan, FaultSpec, HostIndexError,
+                           InjectedFault, InvariantViolation,
+                           PagedServingEngine, Request)
+from repro.serving.offload import HostKVPool
+
+jax.config.update("jax_platform_name", "cpu")
+
+NUM_BLOCKS = 64
+NUM_DEVICE = 16
+GEOM = dict(n_max=512, max_batch=2, block_size=16, num_blocks=NUM_BLOCKS,
+            chunk_size=4)
+SPECS = [(300, 16), (140, 8)]        # (prompt len, max_new) per request
+OFF = dict(offload=True, num_device_blocks=NUM_DEVICE)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.smoke("qwen2-1.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(11)
+    prompts = {n: rng.randint(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (300, 140)}
+    return cfg, params, prompts
+
+
+def _engine(cfg, params, prompts, specs=SPECS, **kw):
+    eng = PagedServingEngine(cfg, params, **GEOM, **kw)
+    for i, (plen, gen) in enumerate(specs):
+        eng.submit(Request(uid=i, prompt=prompts[plen], max_new_tokens=gen))
+    return eng
+
+
+def _run(cfg, params, prompts, specs=SPECS, **kw):
+    eng = _engine(cfg, params, prompts, specs, **kw)
+    return {r.uid: r for r in eng.run()}, eng
+
+
+def _run_stepwise_audited(eng):
+    """Drive the serve loop a chunk at a time, auditing invariants at
+    every boundary — the recovery-path claim, not just end-state."""
+    eng.start()
+    while eng.queue or any(s is not None for s in eng._slots):
+        eng.step_serve()
+        eng.verify_invariants()
+    return {r.uid: r for r in eng._done}
+
+
+@pytest.fixture(scope="module")
+def clean(setup):
+    """The no-fault offloaded run every parity test compares against."""
+    cfg, params, prompts = setup
+    done, eng = _run(cfg, params, prompts, **OFF)
+    eng.close()
+    return done
+
+
+def _assert_parity(clean, done, uids, label):
+    for uid in uids:
+        np.testing.assert_array_equal(
+            clean[uid].output, done[uid].output,
+            err_msg=f"{label}: request {uid} lost token parity")
+
+
+# ---------------------------------------------------------- fault matrix ----
+def test_fetch_delay_parity(setup, clean):
+    """Injected fetch delays move only time: tokens identical, no
+    retries/timeouts/degraded steps, and the plan logs each firing."""
+    cfg, params, prompts = setup
+    plan = FaultPlan([FaultSpec("fetch.gather", "delay", delay_s=0.01,
+                                count=4)])
+    done, eng = _run(cfg, params, prompts, faults=plan, **OFF)
+    _assert_parity(clean, done, [0, 1], "delay")
+    assert len(plan.fired("fetch.gather", "delay")) == 4
+    assert eng.fetch_retries == 0 and eng.fetch_timeouts == 0
+    assert eng.degraded_steps == 0
+    eng.close()
+
+
+def test_transient_failure_retries_to_parity(setup, clean):
+    """Transient gather failures are retried with backoff and recover
+    within the budget: exact parity, retries > 0, zero degraded steps,
+    clean invariants at every chunk boundary through the recovery."""
+    cfg, params, prompts = setup
+    plan = FaultPlan([FaultSpec("fetch.gather", "fail", after=2, count=2)])
+    eng = _engine(cfg, params, prompts, faults=plan, fetch_max_retries=2,
+                  fetch_backoff_s=0.001, **OFF)
+    done = _run_stepwise_audited(eng)
+    _assert_parity(clean, done, [0, 1], "transient")
+    assert len(plan.fired("fetch.gather", "fail")) == 2
+    assert eng.fetch_retries >= 2           # each firing costs one retry
+    assert eng.host.fetch_retries == eng.fetch_retries
+    assert eng.degraded_steps == 0 and eng.host.degraded_fetches == 0
+    assert eng.fetch_timeouts == 0
+    eng.close()
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_worker_death_deadline_respawn(setup, clean, overlap):
+    """A hung fetch worker (injected hang) trips the deadline: the worker
+    is abandoned + respawned, the retry succeeds, tokens stay identical,
+    and the per-step stall stays bounded by the (timeout + backoff)
+    budget — not the 60 s the dead worker would have blocked."""
+    cfg, params, prompts = setup
+    before = set(threading.enumerate())
+    plan = FaultPlan([FaultSpec("fetch.gather", "hang", after=4, count=1)])
+    done, eng = _run(cfg, params, prompts, faults=plan, overlap=overlap,
+                     fetch_timeout_s=0.25, fetch_max_retries=2,
+                     fetch_backoff_s=0.001, **OFF)
+    _assert_parity(clean, done, [0, 1], f"worker-death overlap={overlap}")
+    assert len(plan.fired("fetch.gather", "hang")) == 1
+    assert eng.fetch_timeouts == 1 and eng.fetch_retries >= 1
+    assert eng.degraded_steps == 0
+    # bounded stall: one 0.25 s deadline + backoff, not a 60 s hang
+    assert eng.fetch_stall_s < 10.0
+    if overlap:
+        assert eng.pipeline.respawns >= 1
+        assert eng.pipeline._tickets == {}
+    else:
+        assert eng.host.guard_respawns >= 1
+    eng.close()
+    time.sleep(0.1)
+    # this engine's fetch threads — including the abandoned worker, woken
+    # through its abort event — must not outlive the teardown
+    leaked = [t for t in set(threading.enumerate()) - before
+              if t.name.startswith("kv-fetch") and t.is_alive()]
+    assert not leaked, leaked
+
+
+def test_degraded_mode_completes(setup):
+    """When every retry is exhausted, the step runs degraded — attention
+    over sink + window + resident-staged blocks only — instead of
+    crashing: the run completes full-length outputs, degraded steps are
+    counted, and invariants hold at every boundary."""
+    cfg, params, prompts = setup
+    plan = FaultPlan([FaultSpec("fetch.gather", "fail", after=10,
+                                count=None)])
+    eng = _engine(cfg, params, prompts, faults=plan, fetch_max_retries=1,
+                  fetch_backoff_s=0.0, **OFF)
+    done = _run_stepwise_audited(eng)
+    for uid, (_, gen) in enumerate(SPECS):
+        assert not done[uid].failed
+        assert len(done[uid].output) == gen, \
+            f"request {uid} did not complete under degraded fetches"
+    assert eng.degraded_steps > 0 and eng.host.degraded_fetches > 0
+    per_req = sum(r.degraded_steps for r in done.values())
+    assert 0 < per_req <= eng.degraded_steps
+    eng.close()
+
+
+def test_quarantine_isolates_one_request(setup, clean):
+    """A fault attributable to one slot evicts and fails exactly that
+    request — blocks, staging residency, and histogram rows reclaimed —
+    while the other request finishes with exact token parity."""
+    cfg, params, prompts = setup
+    plan = FaultPlan([FaultSpec("engine.slot", "fail", match={"uid": 0})])
+    eng = _engine(cfg, params, prompts, faults=plan, **OFF)
+    done = _run_stepwise_audited(eng)
+    bad, ok = done[0], done[1]
+    assert bad.failed and "InjectedFault" in bad.error
+    assert not ok.failed and ok.error is None
+    _assert_parity(clean, done, [1], "quarantine survivor")
+    assert [r.uid for r in eng.quarantined] == [0]
+    # full reclamation now that the batch drained
+    eng.verify_invariants()
+    assert len(eng._free) == eng.num_blocks
+    assert eng.staging.resident_count() == 0
+    eng.close()
+
+
+def test_staging_storm_parity(setup, clean):
+    """A staging-eviction storm (every resident block flushed at a chunk
+    boundary) moves bytes and stall only — tokens stay identical."""
+    cfg, params, prompts = setup
+    plan = FaultPlan([FaultSpec("staging.storm", "storm", after=1,
+                                count=2)])
+    eng = _engine(cfg, params, prompts, faults=plan, **OFF)
+    done = _run_stepwise_audited(eng)
+    _assert_parity(clean, done, [0, 1], "storm")
+    assert eng.storm_evictions > 0
+    assert len(plan.fired("staging.storm")) == 2
+    eng.close()
+
+
+# ------------------------------------------------------- fault harness ------
+def test_fault_plan_determinism():
+    """Same seed → same firing schedule, including p-thinned specs."""
+    def fire_pattern(plan, n=200):
+        out = []
+        for _ in range(n):
+            try:
+                plan.apply("fetch.gather", name="e", kind="heads")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    spec = FaultSpec("fetch.gather", "fail", after=3, count=None, p=0.25)
+    a = fire_pattern(FaultPlan([spec], seed=7))
+    b = fire_pattern(FaultPlan([spec], seed=7))
+    c = fire_pattern(FaultPlan([spec], seed=8))
+    assert a == b
+    assert a != c
+    assert sum(a[:3]) == 0 and 0 < sum(a) < 197
+
+
+def test_fault_spec_match_and_kinds():
+    plan = FaultPlan([FaultSpec("fetch.gather", "fail",
+                                match={"kind": "rows"})])
+    plan.apply("fetch.gather", name="e", kind="heads")   # no match: clean
+    with pytest.raises(InjectedFault):
+        plan.apply("fetch.gather", name="e", kind="rows")
+    with pytest.raises(ValueError):
+        FaultSpec("fetch.gather", "explode")
+
+
+# -------------------------------------------------- host bounds checking ----
+def test_host_pool_bounds_checks():
+    """Out-of-range host block/row indices raise a structured error
+    naming the entry, the method, and the offending index — instead of
+    numpy wrap-around silently corrupting another request's blocks."""
+    pool = HostKVPool({"s0.l0": (1, 2, 8)}, num_blocks=4, block_size=4,
+                      dtype=np.float32)
+    k = np.zeros((1, 8, 2, 8), np.float32)
+    with pytest.raises(HostIndexError) as ei:
+        pool.write_prefill("s0.l0", np.asarray([0, -3]), k, k)
+    err = ei.value
+    assert err.entry == "s0.l0" and err.method == "write_prefill"
+    assert err.index == -3 and "s0.l0" in str(err) and "-3" in str(err)
+
+    kb = np.zeros((1, 1, 4, 2, 8), np.float32)
+    with pytest.raises(HostIndexError) as ei:
+        pool.writeback("s0.l0", np.asarray([9]), kb, kb)
+    assert ei.value.method == "writeback" and ei.value.index == 9
+
+    with pytest.raises(HostIndexError) as ei:
+        pool.read_blocks("s0.l0", np.asarray([-1]))
+    assert ei.value.method == "read_blocks" and ei.value.index == -1
+    pool.close()
+
+
+def test_host_index_error_quarantines_admission(setup, clean):
+    """A real (non-injected) per-request failure — a corrupted block
+    table driving write_prefill out of range — quarantines only that
+    admission; the other request still matches the clean run."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, prompts, **OFF)
+    orig = eng._phys_row
+
+    def corrupted(slot):
+        row = np.asarray(orig(slot)).copy()
+        if slot == 0:                      # uid 0 admits into slot 0
+            row[0] = -7
+        return row
+
+    eng._phys_row = corrupted
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].failed and "HostIndexError" in done[0].error
+    _assert_parity(clean, done, [1], "host-index quarantine")
+    assert [r.uid for r in eng.quarantined] == [0]
+    eng.close()
+
+
+# ------------------------------------------------------ invariant auditor ---
+def test_verify_invariants_detects_corruption(setup):
+    """The auditor passes on live healthy state and raises on seeded
+    corruption of each cross-checked structure."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params, prompts, **OFF)
+    eng.start()
+    eng.step_serve()                       # both requests live
+    eng.verify_invariants()                # healthy mid-run state
+
+    blk = next(iter(eng._refcnt))
+    eng._refcnt[blk] += 1                  # refcount drift
+    with pytest.raises(InvariantViolation):
+        eng.verify_invariants(check_hist=False)
+    eng._refcnt[blk] -= 1
+
+    eng._free.append(eng._alloc[0][0])     # free list ∩ allocated
+    with pytest.raises(InvariantViolation):
+        eng.verify_invariants(check_hist=False)
+    eng._free.pop()
+
+    hb0 = eng._alloc[0][0]                 # broken residency inverse
+    old = int(eng.staging.dev_map[hb0])
+    eng.staging.dev_map[hb0] = (old + 1) % NUM_DEVICE if old >= 0 else 3
+    with pytest.raises(InvariantViolation):
+        eng.verify_invariants(check_hist=False)
+    eng.staging.dev_map[hb0] = old
+
+    eng.verify_invariants()                # restored: healthy again
+    while eng.queue or any(s is not None for s in eng._slots):
+        eng.step_serve()
+    eng.verify_invariants()
+    eng.close()
+
+
+# ----------------------------------------------------------- teardown -------
+def test_close_and_context_manager(setup):
+    """close() joins the fetch worker and the host pool's guard executor
+    deterministically, is idempotent, and rides the context-manager
+    protocol (sync path: the guard executor actually spins up)."""
+    cfg, params, prompts = setup
+    before = set(threading.enumerate())
+    with _engine(cfg, params, prompts, specs=[(140, 4)], overlap=False,
+                 fetch_timeout_s=0.5, **OFF) as eng:
+        done = {r.uid: r for r in eng.run()}
+        assert len(done[0].output) == 4
+        assert eng.host._guard_exec is not None   # deadline path engaged
+    assert eng.host._guard_exec is None
+    eng.close()                            # second close: no-op
+    time.sleep(0.1)
+    leaked = [t for t in set(threading.enumerate()) - before
+              if t.name.startswith("kv-fetch") and t.is_alive()]
+    assert not leaked, leaked
